@@ -1,0 +1,53 @@
+"""Fig. 4 validation: cost-equivalent hardware affinity ratios, measured the
+way the paper does — END-TO-END batched rollout time over varying batch
+sizes (throughput-bound, not single-stream latency).
+
+Prefill-heavy FrozenLake re-encodes a growing history over many turns
+(compute-bound -> 2x H800 wins); decode-heavy GEM-math emits long CoT over
+few turns (bandwidth-bound -> 6x H20, the cost-equivalent config, wins).
+Paper: H800 0.53x on prefill-heavy; H20 0.49x-0.79x on decode-heavy.
+"""
+from benchmarks.common import Bench, fmt
+from repro.configs import get_config
+from repro.core.hardware import H20, H800, PERF
+
+
+def batch_rollout_time(cfg, hw, n_dev, batch, turns, obs, resp,
+                       prefix_cache=0.5):
+    """Aggregate two-phase model: total prefill FLOPs on the pool's compute
+    + total decode bytes (weights amortized over the batch + per-stream KV)
+    on the pool's bandwidth."""
+    flops = bw_bytes = 0.0
+    ctx = 256.0
+    kv_tok = PERF.kv_bytes_per_token(cfg)
+    weights = 2.0 * cfg.active_param_count()
+    for _ in range(turns):
+        flops += batch * 2.0 * cfg.active_param_count() * ctx \
+            * (1 - prefix_cache)
+        bw_bytes += resp * (weights + batch * ctx * kv_tok)
+        ctx += resp + obs
+    t_prefill = flops / (n_dev * hw.tflops_bf16 * 1e12 * PERF.prefill_mfu)
+    t_decode = bw_bytes / (n_dev * hw.hbm_bw_gbs * 1e9 * PERF.decode_bw_eff)
+    return t_prefill + t_decode
+
+
+def run():
+    b = Bench("calibration_fig4")
+    cfg = get_config("qwen3-8b")
+    batch = 64
+    fl = dict(batch=batch, turns=40, obs=600, resp=30)
+    fl_h800 = batch_rollout_time(cfg, H800, 2, **fl)
+    fl_h20 = batch_rollout_time(cfg, H20, 6, **fl)
+    b.row("frozenlake_h800_over_h20", fmt(fl_h800 / fl_h20),
+          "0.53 (paper Fig 4a)")
+    m = dict(batch=batch, turns=3, obs=120, resp=8000)
+    m_h800 = batch_rollout_time(cfg, H800, 2, **m)
+    m_h20 = batch_rollout_time(cfg, H20, 6, **m)
+    b.row("math_h20_over_h800", fmt(m_h20 / m_h800),
+          "0.49-0.79 (paper Fig 4b)")
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Shared helpers for the benchmark suite: CSV emission + result storage."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+class Bench:
+    """Collects (name, value, derived/paper-target) rows, prints CSV."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+        self.t0 = time.time()
+
+    def row(self, metric: str, value, target: str = ""):
+        self.rows.append({"bench": self.name, "metric": metric,
+                          "value": value, "target": target})
+        print(f"{self.name},{metric},{value},{target}", flush=True)
+
+    def save(self):
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, f"{self.name}.json")
+        with open(path, "w") as f:
+            json.dump({"rows": self.rows,
+                       "wall_s": time.time() - self.t0}, f, indent=1,
+                      default=str)
+        return path
+
+
+def header():
+    print("bench,metric,value,paper_target", flush=True)
+
+
+def fmt(x, nd=2):
+    return round(float(x), nd)

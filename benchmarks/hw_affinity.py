@@ -1,0 +1,31 @@
+"""Fig. 11a (R1 ablation): equal-cost rollout configs — 72 H800 vs 208 H20
+vs mixed 64 H800 + 24 H20 with task-affinity routing, training fixed on
+32 H800. Paper: mixed is 1.30-1.68x faster than H20-only and 1.12-1.37x
+faster than H800-only."""
+from benchmarks.common import Bench, fmt
+from repro.core.simrl import run_sim
+
+
+def run(model="qwen3-14b", steps=4):
+    b = Bench("hw_affinity_fig11a")
+    common = dict(mode="rollart", model=model, batch_size=256,
+                  num_steps=steps, reward_serverless=True,
+                  async_weight_sync=True, prefix_cache=0.4)
+    m_h800 = run_sim(gen_pools=(("H800", 72),), **common)
+    m_h20 = run_sim(gen_pools=(("H20", 208),), **common)
+    m_mix = run_sim(gen_pools=(("H800", 64), ("H20", 24)),
+                    hw_affinity={"math": "H20", "game": "H20",
+                                 "default": "H800"}, **common)
+    b.row("h800_only_step_s", fmt(m_h800.avg_step_s, 1))
+    b.row("h20_only_step_s", fmt(m_h20.avg_step_s, 1))
+    b.row("mixed_step_s", fmt(m_mix.avg_step_s, 1))
+    b.row("mixed_vs_h20_only", fmt(m_h20.avg_step_s / m_mix.avg_step_s),
+          "1.30-1.68 (Fig 11a)")
+    b.row("mixed_vs_h800_only", fmt(m_h800.avg_step_s / m_mix.avg_step_s),
+          "1.12-1.37 (Fig 11a)")
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

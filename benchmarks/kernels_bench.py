@@ -1,0 +1,65 @@
+"""Per-kernel microbenchmark: us_per_call of the Pallas kernels (interpret
+mode on CPU — correctness-path timing, NOT TPU perf) vs the jnp oracle."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Bench, fmt
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+
+def timeit(fn, *args, n=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    b = Bench("kernels")
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 128, 64))
+    k = jax.random.normal(key, (1, 2, 128, 64))
+    v = jax.random.normal(key, (1, 2, 128, 64))
+    b.row("flash_attention_us", fmt(timeit(
+        lambda *a: flash_attention(*a, block_q=64, block_k=64), q, k, v), 0))
+    b.row("flash_ref_us", fmt(timeit(R.flash_ref, q, k, v), 0))
+
+    qd = jax.random.normal(key, (2, 4, 64))
+    kc = jax.random.normal(key, (2, 2, 256, 64))
+    lens = jnp.asarray([128, 256])
+    b.row("decode_attention_us", fmt(timeit(
+        lambda *a: decode_attention(*a, block_k=128), qd, kc, kc, lens), 0))
+    b.row("decode_ref_us", fmt(timeit(R.decode_ref, qd, kc, kc, lens), 0))
+
+    r = jax.random.normal(key, (1, 64, 2, 32))
+    lw = jnp.clip(-jnp.exp(jax.random.normal(key, (1, 64, 2, 32))),
+                  -2.5, -1e-4)
+    u = jnp.zeros((2, 32))
+    b.row("rwkv6_scan_us", fmt(timeit(
+        lambda *a: rwkv6_scan(*a, chunk=32)[0], r, r, r, lw, u), 0))
+    b.row("rwkv6_ref_us", fmt(timeit(
+        lambda *a: R.rwkv6_ref(*a)[0], r, r, r, lw, u), 0))
+
+    x = jax.random.normal(key, (1, 64, 128))
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 64, 128)) - 2)
+    Bm = jax.random.normal(key, (1, 64, 16))
+    A_log = jnp.zeros((128, 16))
+    D = jnp.ones((128,))
+    b.row("mamba_scan_us", fmt(timeit(
+        lambda *a: mamba_scan(*a, chunk=32, block_d=128)[0],
+        x, dt, Bm, Bm, A_log, D), 0))
+    b.row("mamba_ref_us", fmt(timeit(
+        lambda *a: R.mamba_ref(*a)[0], x, dt, Bm, Bm, A_log, D), 0))
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Table 5: prefill/decode disaggregation vs colocation, dense (32B) vs MoE
+(30B-A3B). Paper rollout-time speedups: dense 1.03x (1P3D) / 1.05x (2P2D);
+MoE 1.11x / 1.21x."""
+from benchmarks.common import Bench, fmt
+from repro.core.simrl import run_sim
+
+PAPER = {"qwen3-32b": ("1.03", "1.05"),
+         "qwen3-moe-30b-a3b": ("1.11", "1.21")}
+
+
+def run(steps=3):
+    b = Bench("pd_disagg_tab5")
+    for model, (p1, p2) in PAPER.items():
+        common = dict(mode="sync_plus", model=model, batch_size=128,
+                      num_steps=steps, tasks=("swe",),
+                      reward_serverless=True, async_weight_sync=False)
+        m_col = run_sim(gen_pools=(("H800", 16), ("H20", 16)), **common)
+        r_col = sum(m_col.rollout_s) / max(len(m_col.rollout_s), 1)
+        for name, (h800, h20), target in (
+                ("1P3D", (8, 24), p1), ("2P2D", (16, 16), p2)):
+            m = run_sim(gen_pools=(("H800", h800), ("H20", h20)),
+                        pd_disagg=True, **common)
+            r = sum(m.rollout_s) / max(len(m.rollout_s), 1)
+            b.row(f"{model}_{name}_speedup_vs_colocate",
+                  fmt(r_col / r), f"{target} (Tab 5)")
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

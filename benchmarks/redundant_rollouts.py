@@ -1,0 +1,28 @@
+"""Fig. 14b: redundant environment rollouts — launch more groups than
+needed, cancel stragglers once the target count completes. Paper: speedup
+grows with group count and redundancy, up to 1.62x."""
+from benchmarks.common import Bench, fmt
+from repro.core.simrl import run_sim
+
+
+def run(steps=4):
+    b = Bench("redundant_fig14b")
+    for group_size in (4, 8):
+        base = None
+        for red in (1.0, 1.25, 1.5, 2.0):
+            m = run_sim(mode="sync_plus", model="qwen3-8b", batch_size=128,
+                        group_size=group_size, num_steps=steps,
+                        redundancy=red, gen_pools=(("H800", 32),),
+                        tasks=("math", "swe"), reward_serverless=True,
+                        async_weight_sync=False)
+            r = sum(m.rollout_s) / max(len(m.rollout_s), 1)
+            if red == 1.0:
+                base = r
+            b.row(f"g{group_size}_red{red}_rollout_speedup",
+                  fmt(base / r), "up to 1.62 (Fig 14b)")
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,141 @@
+"""§Roofline: per (arch x input-shape) roofline terms on the single-pod
+production mesh, derived from the dry-run artifacts.
+
+Methodology (EXPERIMENTS.md §Roofline): XLA cost analysis counts a
+while/scan body once, so FLOPs / bytes-accessed / collective-bytes are
+extracted from the UNROLLED depth-1 and depth-2 builds and linearly
+extrapolated to full depth:  term(N) = t1 + (N-1) * (t2 - t1).
+The full-depth scanned compile provides the lowering + HBM-fit proof.
+
+Terms (per assignment):
+  t_compute    = HLO_FLOPs   / peak            (197 TFLOP/s bf16, v5e)
+  t_memory     = HLO_bytes   / HBM bw          (819 GB/s)
+  t_collective = coll_bytes  / link bw         (50 GB/s/link)
+All are per-device quantities of the SPMD program (equivalent to the
+global/chips form).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from benchmarks.common import Bench, fmt
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.hlo_costs import HBM_CAP, roofline_terms
+from repro.launch.specs import TRAIN_MICROBATCHES
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def _load(arch: str, shape: str, mesh: str, tag: str) -> Optional[Dict]:
+    p = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}__{tag}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        d = json.load(f)
+    return d if d.get("ok") else None
+
+
+def extrapolated_costs(arch: str, shape: str) -> Optional[Dict]:
+    d1 = _load(arch, shape, "single", "d1u")
+    d2 = _load(arch, shape, "single", "d2u")
+    full = _load(arch, shape, "single", "full")
+    if not (d1 and d2 and full):
+        return None
+    n = get_config(arch).num_periods
+    # gradient-accumulation scan bodies are counted once by cost analysis;
+    # scale by the microbatch trip count (§Perf iter 5)
+    mb = TRAIN_MICROBATCHES.get(arch, 1) if full["kind"] == "train" else 1
+
+    def extra(key):
+        return (d1[key] + (n - 1) * (d2[key] - d1[key])) * mb
+
+    costs = {
+        "flops_per_device": extra("flops_per_device"),
+        "bytes_per_device": extra("bytes_per_device"),
+        "collective_bytes_per_device": extra("collective_bytes_per_device"),
+        "memory": full.get("memory", {}),
+        "kind": full["kind"],
+    }
+    if "collective_bytes_adjusted" in d1 and "collective_bytes_adjusted" in d2:
+        costs["collective_bytes_adjusted"] = extra("collective_bytes_adjusted")
+    return costs
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+_SUGGEST = {
+    "t_compute": ("compute-bound: raise MXU utilization (larger matmul "
+                  "tiles, fuse small einsums, reduce remat recompute)"),
+    "t_memory": ("memory-bound: cut HBM traffic (bf16 end-to-end, flash/"
+                 "chunked attention instead of materialized scores, fuse "
+                 "elementwise chains, larger per-step arithmetic intensity)"),
+    "t_collective": ("collective-bound: reshard to shrink all-gathers "
+                     "(2D weight-stationary, overlap collectives with "
+                     "compute, move batch off the bottleneck axis)"),
+}
+
+
+def run(emit_rows: bool = True):
+    b = Bench("roofline")
+    table = []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            costs = extrapolated_costs(arch, shape)
+            if costs is None:
+                b.row(f"{arch}_{shape}", "MISSING dryrun artifacts")
+                continue
+            terms = roofline_terms(costs)
+            # adjusted collective term: discounts XLA:CPU AR/AG-then-slice
+            # patterns that TPU folds to reduce-scatter / local copies
+            adj = costs.get("collective_bytes_adjusted")
+            t_coll_adj = (adj / 50e9) if adj is not None \
+                else terms["t_collective"]
+            terms_adj = dict(terms, t_collective=t_coll_adj)
+            dom = max(terms_adj, key=terms_adj.get)
+            mf = model_flops(arch, shape)
+            hlo_global = costs["flops_per_device"] * 256
+            ratio = mf / max(hlo_global, 1.0)
+            peak = costs.get("memory", {}).get("peak_bytes_est", 0)
+            row = {
+                "arch": arch, "shape": shape,
+                "t_compute_s": terms["t_compute"],
+                "t_memory_s": terms["t_memory"],
+                "t_collective_s": terms["t_collective"],
+                "t_collective_adj_s": t_coll_adj,
+                "dominant": dom,
+                "model_flops": mf,
+                "hlo_flops_global": hlo_global,
+                "useful_ratio": ratio,
+                "hbm_peak_frac_cpu_raw": peak / HBM_CAP,
+                "suggestion": _SUGGEST[dom],
+            }
+            table.append(row)
+            if emit_rows:
+                b.row(f"{arch}|{shape}",
+                      f"tc={terms['t_compute']:.3g}s tm={terms['t_memory']:.3g}s "
+                      f"tcoll={terms['t_collective']:.3g}s "
+                      f"tcoll_adj={t_coll_adj:.3g}s dom={dom} "
+                      f"useful={ratio:.2f}")
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "roofline.json")
+    with open(out, "w") as f:
+        json.dump(table, f, indent=1)
+    b.row("table_rows", len(table), "40 (10 archs x 4 shapes)")
+    b.save()
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Benchmark harness: one entry per paper table/figure (DESIGN.md §6) plus
+the kernel microbenchmarks and the §Roofline table.
+
+Prints ``bench,metric,value,paper_target`` CSV and saves per-bench JSON
+under results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import header
+
+ALL = [
+    "calibration",      # Fig 4
+    "step_breakdown",   # Fig 3
+    "e2e_steptime",     # Fig 10a/b
+    "scaling",          # Fig 10c
+    "hw_affinity",      # Fig 11a (R1)
+    "traj_vs_batch",    # Fig 11b (R2)
+    "serverless_reward",  # Fig 6/12 (R3)
+    "staleness_sweep",  # Fig 13 (R4)
+    "weight_sync",      # Table 4 / Fig 14a
+    "redundant_rollouts",  # Fig 14b
+    "pd_disagg",        # Table 5
+    "kernels_bench",
+    "roofline",         # §Roofline from the dry-run artifacts
+]
+
+FAST_SKIP = {"scaling", "staleness_sweep"}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slowest sweeps")
+    args = ap.parse_args(argv)
+    names = args.only or [n for n in ALL
+                          if not (args.fast and n in FAST_SKIP)]
+    header()
+    failures = 0
+    for name in names:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,,", flush=True)
+            traceback.print_exc()
+    print(f"run,complete,{len(names) - failures}/{len(names)},")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Fig. 10c: scaling efficiency — Qwen3-14B, 64 -> 128 H800, throughput
+normalized to Sync+ on 64 GPUs. Paper: RollArt 1.33-2.08x higher than the
+baselines at scale (no hardware-affinity in this evaluation)."""
+from benchmarks.common import Bench, fmt
+from repro.core.simrl import run_sim
+
+
+def run(steps=4):
+    b = Bench("scaling_fig10c")
+    base = None
+    for total in (64, 96, 128):
+        rollout = total - 32
+        for mode, aws in (("sync_plus", False), ("one_off", False),
+                          ("rollart", True)):
+            m = run_sim(mode=mode, model="qwen3-14b", batch_size=256,
+                        num_steps=steps, gen_pools=(("H800", rollout),),
+                        reward_serverless=True, async_weight_sync=aws)
+            if base is None:
+                base = m.throughput_tok_s
+            b.row(f"{mode}_{total}gpu_tput_norm",
+                  fmt(m.throughput_tok_s / base),
+                  "rollart 1.33-2.08x over baselines at 96-128")
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

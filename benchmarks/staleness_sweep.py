@@ -1,0 +1,29 @@
+"""Fig. 13 (R4 ablation): step time vs asynchronous bound alpha in 1..6.
+Paper: larger bounds cut staleness aborts and improve step time by at most
+1.22x over alpha=1, plateauing quickly (alpha=1 is the quality default)."""
+from benchmarks.common import Bench, fmt
+from repro.core.simrl import run_sim
+
+
+def run(steps=5):
+    b = Bench("staleness_fig13")
+    for model, batch in (("qwen3-8b", 256), ("qwen3-32b", 512)):
+        base = None
+        for alpha in (1, 2, 4, 6):
+            m = run_sim(mode="rollart", model=model, batch_size=batch,
+                        num_steps=steps, alpha=alpha,
+                        gen_pools=(("H800", 64), ("H20", 32)),
+                        hw_affinity={"math": "H20", "game": "H20",
+                                     "default": "H800"},
+                        reward_serverless=True, async_weight_sync=True)
+            if alpha == 1:
+                base = m.avg_step_s
+            b.row(f"{model}_alpha{alpha}_step_s", fmt(m.avg_step_s, 1))
+            b.row(f"{model}_alpha{alpha}_speedup_vs_a1",
+                  fmt(base / m.avg_step_s), "<= 1.22 (Fig 13)")
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Fig. 11b (R2 ablation): trajectory-level vs batch-level environment
+interaction under injected Gaussian env latency (mu=10s, sigma in 1..10).
+Paper: trajectory-level improves 1.23x -> 2.27x as sigma grows."""
+from benchmarks.common import Bench, fmt
+from repro.core.simrl import run_sim
+
+
+def run(steps=3):
+    b = Bench("traj_vs_batch_fig11b")
+    for sigma in (1, 4, 7, 10):
+        common = dict(model="qwen3-8b", batch_size=128, num_steps=steps,
+                      gen_pools=(("H800", 32),),
+                      env_gauss_override=(10.0, float(sigma)),
+                      reward_serverless=True, async_weight_sync=False,
+                      tasks=("webshop", "frozenlake"))
+        m_batch = run_sim(mode="sync", **common)
+        m_traj = run_sim(mode="sync_plus", **common)
+        ratio = (sum(m_batch.rollout_s) / max(len(m_batch.rollout_s), 1)) / \
+            (sum(m_traj.rollout_s) / max(len(m_traj.rollout_s), 1))
+        b.row(f"traj_speedup_sigma{sigma}", fmt(ratio),
+              "1.23 (sigma=1) -> 2.27 (sigma=10)")
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Table 4 + Fig. 14a: asynchronous cross-cluster weight transfer.
+
+Analytic decomposition from the fitted Mooncake constants (push 0.46 GB/s
+over Ethernet, pull 2.5 GB/s intra-cluster, 72-78% of the pull hidden by
+rollout overlap) + an e2e async-vs-blocking comparison (paper: 1.10-1.16x
+end-to-end step-time reduction)."""
+from benchmarks.common import Bench, fmt
+from repro.configs import get_config
+from repro.core.hardware import PERF
+from repro.core.simrl import MOONCAKE_PULL_GBS, MOONCAKE_PUSH_GBS, run_sim
+
+PAPER = {  # Table 4 (seconds)
+    "qwen3-8b": (38.6, 32.4, 6.2, 1.4),
+    "qwen3-14b": (84.1, 67.8, 16.3, 5.1),
+    "qwen3-32b": (157.0, 127.3, 29.7, 9.6),
+}
+
+
+def run(steps=4):
+    b = Bench("weight_sync_tab4")
+    for model, (naive_p, push_p, pull_p, exposed_p) in PAPER.items():
+        gb = PERF.weight_bytes(get_config(model)) / 1e9
+        push = gb / MOONCAKE_PUSH_GBS
+        pull = gb / MOONCAKE_PULL_GBS
+        exposed = pull * 0.28
+        b.row(f"{model}_naive_s", fmt(push + pull, 1), f"{naive_p} (Tab 4)")
+        b.row(f"{model}_push_s", fmt(push, 1), f"{push_p} (Tab 4)")
+        b.row(f"{model}_pull_s", fmt(pull, 1), f"{pull_p} (Tab 4)")
+        b.row(f"{model}_exposed_s", fmt(exposed, 1),
+              f"{exposed_p} (Tab 4)")
+    # Fig 14a e2e: async vs blocking weight sync in the full pipeline
+    common = dict(mode="rollart", model="qwen3-14b", batch_size=256,
+                  num_steps=steps, gen_pools=(("H800", 64), ("H20", 32)),
+                  hw_affinity={"math": "H20", "game": "H20",
+                               "default": "H800"}, reward_serverless=True)
+    m_async = run_sim(async_weight_sync=True, **common)
+    m_block = run_sim(async_weight_sync=False, **common)
+    b.row("e2e_async_speedup",
+          fmt(m_block.avg_step_s / m_async.avg_step_s),
+          "1.10-1.16 (Fig 14a)")
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

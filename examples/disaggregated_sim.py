@@ -1,0 +1,48 @@
+"""Cluster-scale what-if tool: run the calibrated discrete-event simulation
+of the disaggregated pipeline at the paper's scale and compare coordination
+modes or resource splits.
+
+    PYTHONPATH=src python examples/disaggregated_sim.py \\
+        --model qwen3-32b --modes sync_plus rollart --steps 5
+"""
+import argparse
+
+from repro.core.simrl import run_sim
+
+POOLS = {
+    "baseline": (("H800", 96),),
+    "mixed": (("H800", 64), ("H20", 32)),
+}
+AFFINITY = {"math": "H20", "game": "H20", "default": "H800"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="qwen3-32b")
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--alpha", type=int, default=1)
+    ap.add_argument("--modes", nargs="+",
+                    default=["sync", "sync_plus", "one_off", "areal",
+                             "rollart"])
+    args = ap.parse_args()
+
+    print(f"{'mode':12s} {'pools':10s} {'step_s':>9s} {'tok/s':>9s} "
+          f"{'groups_ok':>9s} {'dead':>5s} {'aborted':>7s}")
+    for mode in args.modes:
+        mixed = mode == "rollart"
+        m = run_sim(
+            mode=mode, model=args.model, batch_size=args.batch,
+            num_steps=args.steps, alpha=args.alpha,
+            gen_pools=POOLS["mixed" if mixed else "baseline"],
+            hw_affinity=AFFINITY if mixed else None,
+            reward_serverless=(mode != "sync"),
+            async_weight_sync=(mode in ("areal", "rollart")))
+        print(f"{mode:12s} {'mixed' if mixed else 'H800x96':10s} "
+              f"{m.avg_step_s:9.1f} {m.throughput_tok_s:9.0f} "
+              f"{m.groups_completed:9d} {m.groups_dead:5d} "
+              f"{m.aborted:7d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: pretrain a tiny model on the synthetic corpus, then sample
+from it through the continuous-batching engine.
+
+    PYTHONPATH=src python examples/quickstart.py --steps 30
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import lm_batches
+from repro.data.tokenizer import TOKENIZER
+from repro.models import Model
+from repro.rl.engine import GenRequest, InferenceEngine
+from repro.rl.trainer import (default_optimizer, init_train_state,
+                              make_lm_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = Model(cfg, remat=False)
+    opt = default_optimizer(args.lr)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_lm_train_step(model, opt))
+    print(f"{cfg.name}: {sum(x.size for x in jax.tree.leaves(state.params)):,}"
+          " params")
+
+    for i, batch in enumerate(lm_batches(TOKENIZER, args.seq, args.batch,
+                                         args.steps)):
+        state, metrics = step(state, {k: jnp.asarray(v)
+                                      for k, v in batch.items()})
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(metrics['loss']):.3f}")
+
+    # sample from the trained model
+    eng = InferenceEngine(model, state.params, max_slots=2, max_len=256)
+    prompt = TOKENIZER.encode("the agent ", bos=True)
+    eng.add_request(GenRequest(request_id="s", prompt=prompt,
+                               max_new_tokens=40, temperature=0.8))
+    eng.run_until_idle()
+    res = eng.pop_result("s")
+    print("sample:", repr(TOKENIZER.decode(prompt + res.tokens)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving example: the command-driven continuous-batching engine (paper
+Fig. 8) under batched requests — ADD/ABORT between engine steps, affinity
+routing across two pools, and a mid-flight weight update with KV-cache
+recomputation.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.core import EngineHandle, LLMProxy
+from repro.data.tokenizer import TOKENIZER
+from repro.models import Model
+from repro.rl.engine import GenRequest, InferenceEngine
+
+
+def main():
+    cfg = get_config("tiny")
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    e1 = InferenceEngine(model, params, max_slots=4, max_len=256, seed=1)
+    e2 = InferenceEngine(model, params, max_slots=4, max_len=256, seed=2)
+    proxy = LLMProxy([EngineHandle(e1, "H800"), EngineHandle(e2, "H20")],
+                     hw_affinity={"code": "H800", "chat": "H20",
+                                  "default": "H20"})
+
+    done = []
+    prompts = [("code", "def add(a, b):"), ("chat", "hello there, "),
+               ("code", "for i in range("), ("chat", "the weather is "),
+               ("chat", "i think that ")]
+    for i, (tag, text) in enumerate(prompts):
+        proxy.submit(GenRequest(request_id=f"req{i}",
+                                prompt=TOKENIZER.encode(text, bos=True),
+                                max_new_tokens=24, temperature=0.9, tag=tag),
+                     callback=done.append)
+
+    # interleave: a few engine steps, then abort one request (trajectory-
+    # level control), then a weight update mid-flight (protocol steps 2-5)
+    for _ in range(4):
+        proxy.pump()
+    proxy.abort("req2")
+    proxy.suspend()
+    new_params = model.init(jax.random.PRNGKey(7))
+    proxy.update_all(new_params, version=1, recompute_caches=True)
+    proxy.resume()
+    while proxy.busy:
+        proxy.pump()
+
+    for r in done:
+        print(f"{r.request_id}: finish={r.finish_reason:7s} "
+              f"v{r.weight_version} new_tokens={len(r.tokens)}")
+    print("routing:", proxy.stats()["routed_by_pool"])
+
+
+if __name__ == "__main__":
+    main()

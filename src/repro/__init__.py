@@ -1,0 +1,9 @@
+"""repro: RollArt — disaggregated multi-task agentic RL training — in JAX.
+
+Layers: repro.core (the paper's resource/data/control planes + the
+calibrated cluster simulation), repro.models (10 assigned architectures),
+repro.rl (GRPO trainer + continuous-batching engine), repro.kernels
+(Pallas TPU kernels + oracles), repro.envs / repro.rewards,
+repro.launch (mesh, multi-pod dry-run, train/serve CLIs).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,67 @@
+"""Versioned pytree checkpointing (npz + JSON treedef), used by the training
+worker for fault recovery ("training-worker failures restart from the latest
+checkpoint", paper §8)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree, step: int = 0) -> str:
+    """Atomically save a pytree. Returns the checkpoint directory."""
+    ckpt_dir = os.path.join(path, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=path if os.path.isdir(path) else None,
+                           prefix=".tmp_ckpt_")
+    try:
+        leaves, treedef = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"treedef": str(treedef), "num_leaves": len(leaves),
+                       "step": step}, f)
+        if os.path.exists(ckpt_dir):
+            shutil.rmtree(ckpt_dir)
+        os.replace(tmp, ckpt_dir)
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+    return ckpt_dir
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(path)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, like, step: Optional[int] = None):
+    """Restore into the structure of ``like`` (a pytree template)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    ckpt_dir = os.path.join(path, f"step_{step:08d}")
+    data = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+    leaves, treedef = _flatten(like)
+    if len(leaves) != len(data.files):
+        raise ValueError(f"leaf count mismatch: template {len(leaves)} vs "
+                         f"checkpoint {len(data.files)}")
+    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for tpl, got in zip(leaves, new_leaves):
+        if tuple(np.shape(tpl)) != tuple(got.shape):
+            raise ValueError(f"shape mismatch {np.shape(tpl)} vs {got.shape}")
+    return jax.tree.unflatten(treedef, new_leaves), step

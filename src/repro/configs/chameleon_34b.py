@@ -1,0 +1,12 @@
+"""chameleon-34b — early-fusion VLM over VQ image tokens (image tokens share
+the text vocab, so the VQ tokenizer is the stubbed frontend and the backbone
+is a standard token decoder). [arXiv:2405.09818]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="vlm",
+    source="arXiv:2405.09818 (48L d=8192 64H kv=8 ff=22016 v=65536)",
+    num_layers=48, d_model=8192, num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=22016, vocab_size=65536, qk_norm=True, rope_theta=10000.0,
+    block_pattern=(("attn", "mlp"),),
+)

@@ -1,0 +1,10 @@
+"""granite-8b — llama-arch dense code model. [arXiv:2405.04324]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b", family="dense",
+    source="arXiv:2405.04324 (36L d=4096 32H kv=8 ff=14336 v=49152)",
+    num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=49152, rope_theta=10000.0,
+    block_pattern=(("attn", "mlp"),),
+)

@@ -1,0 +1,19 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention 1:7 interleave with 16-expert
+top-2 MoE on every other layer. [arXiv:2403.19887]"""
+from repro.configs.base import ModelConfig
+
+# 8-layer Jamba period: attention at index 3, MoE every other layer.
+_PERIOD = (
+    ("mamba", "mlp"), ("mamba", "moe"), ("mamba", "mlp"), ("attn", "moe"),
+    ("mamba", "mlp"), ("mamba", "moe"), ("mamba", "mlp"), ("mamba", "moe"),
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    source="arXiv:2403.19887 (32L d=4096 32H kv=8 ff=14336 v=65536, 16e top-2, 1:7 attn:mamba)",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, moe_d_ff=14336, vocab_size=65536,
+    num_experts=16, top_k=2,
+    mamba_d_state=16, mamba_d_conv=4, mamba_expand=2,
+    block_pattern=_PERIOD,
+)

@@ -1,0 +1,10 @@
+"""llama3.2-3b — dense Llama-3 family. [hf:meta-llama/Llama-3.2-1B scaled per assignment]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b", family="dense",
+    source="hf:meta-llama/Llama-3.2-1B (assignment: 28L d=3072 24H kv=8 ff=8192 v=128256)",
+    num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=128256, rope_theta=500000.0,
+    block_pattern=(("attn", "mlp"),),
+)

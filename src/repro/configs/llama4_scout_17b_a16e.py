@@ -1,0 +1,13 @@
+"""llama4-scout-17b-a16e — 16-expert top-1 MoE with shared expert and
+early-fusion vision patches (stubbed frontend). [hf:meta-llama/Llama-4-Scout-17B-16E]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E (48L d=5120 40H kv=8 ff=8192 v=202048, 16e top-1)",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=8192, moe_d_ff=8192, vocab_size=202048, rope_theta=500000.0,
+    num_experts=16, top_k=1, num_shared_experts=1,
+    vision_patches=144,   # stubbed ViT patch embeddings, early fusion
+    block_pattern=(("attn", "moe"),),
+)

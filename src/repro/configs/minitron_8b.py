@@ -1,0 +1,10 @@
+"""minitron-8b — width-pruned Nemotron dense model. [arXiv:2407.14679]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense",
+    source="arXiv:2407.14679 (32L d=4096 32H kv=8 ff=16384 v=256000)",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab_size=256000, rope_theta=10000.0,
+    block_pattern=(("attn", "mlp"),),
+)

@@ -1,0 +1,13 @@
+"""musicgen-large — decoder-only over EnCodec tokens; text-conditioning
+frontend is a stub that supplies precomputed conditioning embeddings
+(cond_len prefix). [arXiv:2306.05284]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    source="arXiv:2306.05284 (48L d=2048 32H kv=32(MHA) ff=8192 v=2048)",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab_size=2048, rope_theta=10000.0,
+    cond_len=64,   # stubbed T5 text-conditioning prefix embeddings
+    block_pattern=(("attn", "mlp"),),
+)

@@ -1,0 +1,10 @@
+"""qwen2.5-7b — the paper's reward LLM (LLM-as-judge)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-7b", family="dense",
+    source="hf:Qwen/Qwen2.5-7B (28L d=3584 28H kv=4 ff=18944 v=152064)",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size=152064, rope_theta=1000000.0,
+    block_pattern=(("attn", "mlp"),),
+)

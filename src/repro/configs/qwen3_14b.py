@@ -1,0 +1,10 @@
+"""qwen3-14b — dense with qk_norm + GQA. [hf:Qwen/Qwen3-8B family]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b", family="dense",
+    source="hf:Qwen/Qwen3-8B family (assignment: 40L d=5120 40H kv=8 ff=17408 v=151936)",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=17408, vocab_size=151936, qk_norm=True, rope_theta=1000000.0,
+    block_pattern=(("attn", "mlp"),),
+)

@@ -1,0 +1,10 @@
+"""qwen3-32b — the paper's largest dense evaluation model."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b", family="dense",
+    source="hf:Qwen/Qwen3-32B (64L d=5120 64H kv=8 ff=25600 v=151936)",
+    num_layers=64, d_model=5120, num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=25600, vocab_size=151936, qk_norm=True, rope_theta=1000000.0,
+    block_pattern=(("attn", "mlp"),),
+)

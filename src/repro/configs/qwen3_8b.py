@@ -1,0 +1,10 @@
+"""qwen3-8b — the paper's main evaluation model (RollArt Sec. 7)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", family="dense",
+    source="hf:Qwen/Qwen3-8B (36L d=4096 32H kv=8 ff=12288 v=151936)",
+    num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=12288, vocab_size=151936, qk_norm=True, rope_theta=1000000.0,
+    block_pattern=(("attn", "mlp"),),
+)

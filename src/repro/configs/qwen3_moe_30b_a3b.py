@@ -1,0 +1,11 @@
+"""qwen3-moe-30b-a3b — 128-expert top-8 MoE. [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B (48L d=2048 32H kv=4 moe_ff=768 v=151936, 128e top-8)",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4, head_dim=128,
+    d_ff=768, moe_d_ff=768, vocab_size=151936, qk_norm=True, rope_theta=1000000.0,
+    num_experts=128, top_k=8,
+    block_pattern=(("attn", "moe"),),
+)

@@ -1,0 +1,11 @@
+"""rwkv6-7b (Finch) — attention-free, data-dependent decay linear
+recurrence. [arXiv:2404.05892]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="ssm",
+    source="arXiv:2404.05892 (32L d=4096 attn-free ff=14336 v=65536)",
+    num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64, head_dim=64,
+    d_ff=14336, vocab_size=65536, rwkv_head_dim=64,
+    block_pattern=(("rwkv", "mlp"),),
+)

@@ -1,0 +1,11 @@
+"""tiny — live-mode model for CPU RL training (examples/tests)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tiny", family="dense",
+    source="this repo (live-mode CPU model)",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=384, vocab_size=512, rope_theta=10000.0,
+    dtype="float32", param_dtype="float32",
+    block_pattern=(("attn", "mlp"),),
+)

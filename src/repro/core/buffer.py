@@ -1,0 +1,110 @@
+"""SampleBuffer (paper §6.2): buffers scored trajectories for training with
+the per-trajectory asynchronous staleness bound alpha.
+
+Invariants (property-tested in tests/test_staleness.py):
+- a trajectory with start_version < current_version - alpha is NEVER
+  returned by get_batch (it is evicted eagerly);
+- with E concurrent environments the buffer holds O(alpha * E) pending
+  trajectories across versions (eager eviction bounds growth);
+- get_batch blocks until ``batch_size`` valid trajectories exist.
+
+Unlike AReaL, which bounds staleness only at trajectory *start*, RollArt
+re-checks the bound every iteration, so long-tail trajectories spanning
+multiple versions are aborted (the control plane also aborts their
+in-flight generation via LLMProxy).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, List, Optional
+
+from repro.data.pipeline import Trajectory
+
+
+class SampleBuffer:
+    def __init__(self, alpha: int = 1,
+                 on_evict: Optional[Callable[[Trajectory], None]] = None):
+        self.alpha = alpha
+        self._items: List[Trajectory] = []
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self.on_evict = on_evict
+        self.current_version = 0
+        # stats
+        self.total_put = 0
+        self.total_evicted = 0
+        self.total_consumed = 0
+
+    # ------------------------------------------------------------------
+    def put(self, traj: Trajectory):
+        with self._cv:
+            if self._is_stale(traj, self.current_version):
+                self._evict(traj)
+                return
+            self._items.append(traj)
+            self.total_put += 1
+            self._cv.notify_all()
+
+    def _is_stale(self, traj: Trajectory, version: int) -> bool:
+        return traj.start_version < version - self.alpha
+
+    def _evict(self, traj: Trajectory):
+        self.total_evicted += 1
+        if self.on_evict:
+            self.on_evict(traj)
+
+    def set_version(self, version: int):
+        """Advance the trainer's weight version; eagerly evict stale."""
+        with self._cv:
+            self.current_version = version
+            keep = []
+            for t in self._items:
+                if self._is_stale(t, version):
+                    self._evict(t)
+                else:
+                    keep.append(t)
+            self._items = keep
+            self._cv.notify_all()
+
+    # ------------------------------------------------------------------
+    def size(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def try_get_batch(self, batch_size: int) -> Optional[List[Trajectory]]:
+        """Non-blocking: a batch of the OLDEST valid trajectories, or None."""
+        with self._cv:
+            self._items = self._evict_stale_locked()
+            if len(self._items) < batch_size:
+                return None
+            self._items.sort(key=lambda t: (t.start_version, t.traj_id))
+            batch, self._items = (self._items[:batch_size],
+                                  self._items[batch_size:])
+            self.total_consumed += len(batch)
+            return batch
+
+    def _evict_stale_locked(self) -> List[Trajectory]:
+        keep = []
+        for t in self._items:
+            if self._is_stale(t, self.current_version):
+                self._evict(t)
+            else:
+                keep.append(t)
+        return keep
+
+    def get_batch(self, batch_size: int,
+                  timeout: Optional[float] = None) -> List[Trajectory]:
+        """Blocking get_batch (protocol step (1))."""
+        with self._cv:
+            def ready():
+                self._items = self._evict_stale_locked()
+                return len(self._items) >= batch_size
+            if not self._cv.wait_for(ready, timeout=timeout):
+                raise TimeoutError(
+                    f"get_batch({batch_size}) timed out with "
+                    f"{len(self._items)} buffered")
+            self._items.sort(key=lambda t: (t.start_version, t.traj_id))
+            batch, self._items = (self._items[:batch_size],
+                                  self._items[batch_size:])
+            self.total_consumed += len(batch)
+            return batch

@@ -1,0 +1,124 @@
+"""Cluster abstraction (paper §5.1/§5.3, Listing 2): a proxy + controller
+for a role-specific Worker group. It spawns workers through the resource
+manager, binds worker methods onto itself, and realizes the three decorator
+semantics: execute_all aggregation, hardware-affinity routing, and
+serverless redirection — with fallback to compatible resources when the
+preferred target is unavailable.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Type
+
+from repro.core.resource import ResourceManager
+from repro.core.serverless import ServerlessPlatform
+from repro.core.worker import (HW_ATTR, REG_ATTR, SLS_ATTR, Worker,
+                               WorkerInfo, method_declarations)
+
+_counter = itertools.count()
+
+
+class Cluster:
+    def __init__(self, res_manager: ResourceManager, worker_cls: Type[Worker],
+                 num_workers: int,
+                 hw_preference: Optional[str] = None,
+                 devices_per_worker: Optional[int] = None,
+                 serverless: Optional[ServerlessPlatform] = None,
+                 worker_kwargs: Optional[Dict[str, Any]] = None):
+        self.rm = res_manager
+        self.worker_cls = worker_cls
+        self.role = worker_cls.ROLE
+        self.serverless = serverless
+        self.workers: List[Worker] = []
+        self._decls = method_declarations(worker_cls)
+        self._create_workers(num_workers,
+                             hw_preference or worker_cls.DEFAULT_HW,
+                             devices_per_worker
+                             or worker_cls.DEVICES_PER_WORKER,
+                             worker_kwargs or {})
+        self._bind_worker_methods()
+
+    # ------------------------------------------------------------------
+    def _create_workers(self, n: int, hw: str, devs: int, kwargs: Dict):
+        for _ in range(n):
+            wid = f"{self.role}-{next(_counter)}"
+            binding = self.rm.bind(wid, self.role, hw, n_devices=devs)
+            if binding is None:
+                raise RuntimeError(
+                    f"resource manager cannot bind {wid} to {hw} "
+                    f"(snapshot: {self.rm.snapshot()['free']})")
+            info = WorkerInfo(worker_id=wid, role=self.role,
+                              resource_type=binding.group.pool,
+                              device_ids=tuple(binding.group.device_ids))
+            w = self.worker_cls(info, **kwargs)
+            self._apply_serverless_decls(w)
+            w.setup()
+            self.workers.append(w)
+
+    def _apply_serverless_decls(self, worker: Worker):
+        for mname, meta in self._decls.items():
+            sls = meta.get("serverless")
+            if not sls:
+                continue
+            if self.serverless is None:
+                raise RuntimeError(
+                    f"{mname} declares serverless offload but the Cluster "
+                    "was built without a ServerlessPlatform")
+            url = sls["serverless_url"]
+            call_fc = functools.partial(self.serverless.invoke, url)
+            setattr(worker, sls["attribute"], call_fc)
+
+    def _bind_worker_methods(self):
+        """Expose each declared worker method on the Cluster as a proxy."""
+        for mname, meta in self._decls.items():
+            if hasattr(self, mname):
+                continue
+            if "hw_mapping" in meta:
+                proxy = functools.partial(self._call_hw_mapped, mname,
+                                          meta["hw_mapping"]["hw_affinity"])
+            elif "register" in meta:
+                proxy = functools.partial(self._call_execute_all, mname,
+                                          meta["register"]["mode"])
+            else:
+                proxy = functools.partial(self._call_execute_all, mname,
+                                          "execute_all")
+            setattr(self, mname, proxy)
+
+    # ------------------------------------------------------------------
+    # decorator realizations
+    # ------------------------------------------------------------------
+    def _call_execute_all(self, mname: str, mode: str, *args, **kwargs):
+        """Single-controller: broadcast inputs, invoke on all Workers,
+        aggregate results (a list, like ray.get of all refs)."""
+        targets = self.workers if mode == "execute_all" else self.workers[:1]
+        return [getattr(w, mname)(*args, **kwargs) for w in targets]
+
+    def _call_hw_mapped(self, mname: str, hw_affinity: Dict[str, str],
+                        *args, tag_name: str = "default", **kwargs):
+        """Hardware-affinity routing (R1): filter workers whose resource
+        type matches the preferred hardware for this tag; fall back to any
+        worker when the preferred pool has none (forward progress under
+        transient contention)."""
+        hw_type = hw_affinity.get(tag_name, hw_affinity["default"])
+        matched = [w for w in self.workers if w.resource_type == hw_type]
+        if not matched:
+            matched = self.workers         # compatible fallback
+        w = self._pick_least_loaded(matched)
+        return getattr(w, mname)(*args, **kwargs)
+
+    @staticmethod
+    def _pick_least_loaded(workers: List[Worker]) -> Worker:
+        def load(w):
+            return getattr(w, "load", lambda: 0)()
+        return min(workers, key=load)
+
+    # ------------------------------------------------------------------
+    def workers_on(self, pool: str) -> List[Worker]:
+        return [w for w in self.workers if w.resource_type == pool]
+
+    def shutdown(self):
+        for w in self.workers:
+            w.teardown()
+            self.rm.release(w.info.worker_id)
+        self.workers.clear()

@@ -1,0 +1,150 @@
+"""EnvManager (paper §6.1): a lightweight controller that drives ONE
+environment's lifecycle — reset, then an independent loop alternating
+LLMProxy generation with env.step — assembling a token-aligned multi-turn
+trajectory. Each EnvManager runs on its own timeline, so a slow or failed
+environment never blocks the others (R2).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, List, Optional
+
+from repro.core.proxy import LLMProxy
+from repro.data.pipeline import Trajectory
+from repro.data.tokenizer import ByteTokenizer
+from repro.envs.base import EnvError, TextEnv
+from repro.rl.engine import GenRequest, GenResult
+
+_ids = itertools.count()
+
+
+class EMState(Enum):
+    IDLE = 0
+    GENERATING = 1
+    DONE = 2
+    FAILED = 3
+    ABORTED = 4
+
+
+@dataclass
+class RolloutPolicy:
+    max_new_tokens: int = 48
+    temperature: float = 1.0
+    max_prompt_tokens: int = 384
+    stop_tokens: tuple = (2,)       # EOS
+
+
+class EnvManager:
+    def __init__(self, env: TextEnv, proxy: LLMProxy,
+                 tokenizer: Optional[ByteTokenizer] = None,
+                 policy: Optional[RolloutPolicy] = None,
+                 tag: Optional[str] = None,
+                 on_complete: Optional[Callable[["EnvManager"], None]] = None,
+                 group_id: str = ""):
+        self.em_id = f"em-{next(_ids)}"
+        self.env = env
+        self.proxy = proxy
+        self.tok = tokenizer or ByteTokenizer()
+        self.policy = policy or RolloutPolicy()
+        self.tag = tag or env.TASK
+        self.on_complete = on_complete
+        self.group_id = group_id
+        self.state = EMState.IDLE
+        self.tokens: List[int] = []
+        self.loss_mask: List[int] = []
+        self.logprobs: List[float] = []
+        self.turns = 0
+        self.start_version = 0
+        self.end_version = 0
+        self.env_return = 0.0
+        self._req_counter = itertools.count()
+        self._active_req: Optional[str] = None
+
+    # ------------------------------------------------------------------
+    def start(self, version: int, seed: Optional[int] = None):
+        """reset + first generation request."""
+        self.start_version = version
+        try:
+            obs = self.env.reset(seed=seed)
+        except EnvError:
+            self.state = EMState.FAILED
+            if self.on_complete:
+                self.on_complete(self)
+            return
+        self._append_obs(obs)
+        self._request_action()
+
+    def _append_obs(self, obs: str):
+        ids = self.tok.encode(obs + "\n", bos=not self.tokens)
+        self.tokens.extend(ids)
+        self.loss_mask.extend([0] * len(ids))
+        self.logprobs.extend([0.0] * len(ids))
+
+    def _prompt(self) -> List[int]:
+        return self.tokens[-self.policy.max_prompt_tokens:]
+
+    def _request_action(self):
+        self.state = EMState.GENERATING
+        rid = f"{self.em_id}.r{next(self._req_counter)}"
+        self._active_req = rid
+        self.proxy.submit(
+            GenRequest(request_id=rid, prompt=self._prompt(),
+                       max_new_tokens=self.policy.max_new_tokens,
+                       temperature=self.policy.temperature,
+                       stop_tokens=self.policy.stop_tokens, tag=self.tag),
+            callback=self.on_generation)
+
+    # ------------------------------------------------------------------
+    def on_generation(self, result: GenResult):
+        """Proxy callback: apply the action to the environment."""
+        self._active_req = None
+        if self.state in (EMState.ABORTED, EMState.DONE, EMState.FAILED):
+            return
+        if result.finish_reason == "aborted":
+            self.state = EMState.ABORTED
+            if self.on_complete:
+                self.on_complete(self)
+            return
+        action_ids = [t for t in result.tokens
+                      if t not in self.policy.stop_tokens]
+        self.tokens.extend(action_ids)
+        self.loss_mask.extend([1] * len(action_ids))
+        self.logprobs.extend(result.logprobs[: len(action_ids)])
+        self.end_version = result.weight_version
+        action = self.tok.decode(action_ids)
+        self.turns += 1
+        try:
+            obs, reward, done, _ = self.env.step(action)
+        except EnvError:
+            self.state = EMState.FAILED
+            if self.on_complete:
+                self.on_complete(self)
+            return
+        self.env_return += reward
+        if done:
+            self.state = EMState.DONE
+            if self.on_complete:
+                self.on_complete(self)
+            return
+        self._append_obs(obs)
+        self._request_action()
+
+    # ------------------------------------------------------------------
+    def abort(self):
+        """Cancel this trajectory (staleness bound / redundant rollouts)."""
+        if self.state == EMState.GENERATING and self._active_req:
+            self.proxy.abort(self._active_req)
+        else:
+            self.state = EMState.ABORTED
+
+    def trajectory(self) -> Trajectory:
+        return Trajectory(
+            traj_id=self.em_id, task=self.env.TASK,
+            tokens=list(self.tokens), loss_mask=list(self.loss_mask),
+            logprobs=list(self.logprobs),
+            reward=self.env_return, group_id=self.group_id,
+            start_version=self.start_version, version=self.end_version,
+            turns=self.turns,
+            meta={"state": self.state.name})

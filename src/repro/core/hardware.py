@@ -1,0 +1,101 @@
+"""Hardware taxonomy + analytic performance model.
+
+GPU entries use the paper's Table 2 (H800/H20) so the benchmarks can
+validate against the paper's measured ratios; TPU entries are the
+deployment target per DESIGN.md §2. The performance model is a two-phase
+(prefill=compute-bound, decode=bandwidth-bound) latency estimate with
+efficiency factors calibrated once in ``benchmarks/calibration.py`` to
+reproduce the paper's Fig. 4 ratios (H800 0.53x prefill-heavy; H20
+0.49-0.79x decode-heavy).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    kind: str                 # "gpu" | "tpu" | "cpu" | "serverless"
+    klass: str                # "compute" | "bandwidth" | "host" | "elastic"
+    tflops_bf16: float        # peak TFLOP/s per device
+    hbm_gb: float
+    hbm_bw_gbs: float         # GB/s
+    link_bw_gbs: float        # interconnect per device
+    norm_cost: float          # normalized $ cost (paper Table 2)
+
+
+# --- paper Table 2 ---------------------------------------------------------
+H800 = HardwareSpec("H800", "gpu", "compute", 989.5, 80, 3350, 400, 2.85)
+H20 = HardwareSpec("H20", "gpu", "bandwidth", 148.0, 96, 4000, 900, 1.00)
+# --- TPU deployment target (assignment roofline constants for v5e) ---------
+TPU_V5E = HardwareSpec("TPUv5e", "tpu", "bandwidth", 197.0, 16, 819, 50, 0.7)
+TPU_V5P = HardwareSpec("TPUv5p", "tpu", "compute", 459.0, 95, 2765, 100, 2.2)
+CPU_HOST = HardwareSpec("CPU", "cpu", "host", 0.0, 0, 0, 10, 0.05)
+SERVERLESS = HardwareSpec("Serverless", "serverless", "elastic",
+                          148.0, 96, 4000, 10, 0.0)
+
+REGISTRY: Dict[str, HardwareSpec] = {
+    h.name: h for h in [H800, H20, TPU_V5E, TPU_V5P, CPU_HOST, SERVERLESS]
+}
+
+
+# --- efficiency factors (calibrated against paper Fig. 4; see
+#     benchmarks/calibration.py for the fit) --------------------------------
+@dataclass
+class PerfModel:
+    prefill_mfu: float = 0.50         # fraction of peak FLOPs in prefill
+    decode_bw_eff: float = 0.55       # fraction of peak HBM bw in decode
+    decode_overhead_s: float = 0.001  # per-token scheduling overhead
+    step_overhead_s: float = 0.3      # per generation request overhead
+
+    def prefill_time(self, cfg: ModelConfig, prompt_tokens: int,
+                     hw: HardwareSpec, tp_degree: int,
+                     prefix_cached_frac: float = 0.0) -> float:
+        """Compute-bound, per TP serving group: 2*N_active*T/(tp*peak*mfu)."""
+        flops = 2.0 * cfg.active_param_count() * prompt_tokens \
+            * (1.0 - prefix_cached_frac)
+        return flops / max(tp_degree * hw.tflops_bf16 * 1e12
+                           * self.prefill_mfu, 1.0)
+
+    def kv_bytes_per_token(self, cfg: ModelConfig) -> float:
+        if cfg.attention_free:
+            return 0.0
+        n_attn = sum(m == "attn" for m, _ in cfg.block_pattern) \
+            * cfg.num_periods
+        return 2.0 * cfg.num_kv_heads * cfg.head_dim * n_attn * 2.0
+
+    def decode_time(self, cfg: ModelConfig, new_tokens: int,
+                    hw: HardwareSpec, tp_degree: int,
+                    context: int = 8192, concurrency: int = 32) -> float:
+        """Bandwidth-bound, per TP serving group. Per engine step the group
+        reads the weights ONCE for all ``concurrency`` streams plus each
+        stream's KV cache (context * kv_bytes); at long contexts the KV
+        traffic dominates — which is exactly why decode-heavy tasks prefer
+        bandwidth-optimized chips (R1)."""
+        weights = 2.0 * cfg.active_param_count()
+        kv = context * self.kv_bytes_per_token(cfg)
+        bw = tp_degree * hw.hbm_bw_gbs * 1e9 * self.decode_bw_eff
+        # one engine step serves all streams: weights once + every stream's
+        # KV cache; each stream advances one token per step
+        t_step = (weights + max(concurrency, 1) * kv) / max(bw, 1.0)
+        return new_tokens * (t_step + self.decode_overhead_s)
+
+    def train_step_time(self, cfg: ModelConfig, batch_tokens: int,
+                        hw: HardwareSpec, n_devices: int,
+                        mfu: float = 0.35) -> float:
+        flops = 6.0 * cfg.active_param_count() * batch_tokens
+        return flops / max(n_devices * hw.tflops_bf16 * 1e12 * mfu, 1.0)
+
+    def weight_bytes(self, cfg: ModelConfig) -> float:
+        return 2.0 * cfg.param_count()
+
+    def transfer_time(self, nbytes: float, bw_gbs: float,
+                      latency_s: float = 0.005) -> float:
+        return latency_s + nbytes / (bw_gbs * 1e9)
+
+
+PERF = PerfModel()

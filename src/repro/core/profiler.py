@@ -1,0 +1,105 @@
+"""Online hardware-affinity profiler — the paper's §9 extension, built.
+
+RollArt ships with static, per-task-domain ``hw_mapping`` declarations and
+discusses (but does not implement) "an online profiler integrated with the
+resource manager: per-domain prefill/decode latency would let ROLLART
+re-route requests when within-domain shifts occur".
+
+``AffinityProfiler`` implements exactly that: it ingests per-trajectory
+generation statistics (prefill vs decode tokens, turns), maintains
+exponentially-weighted per-domain profiles, classifies each domain as
+prefill- or decode-heavy with hysteresis (profiles must be stable over a
+window before a re-route, per §9: "profiling decisions stabilize over a
+few iterations"), and emits an ``hw_affinity`` mapping that LLMProxy /
+the sim's router consume live.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.rl.engine import GenResult
+
+
+@dataclass
+class DomainProfile:
+    prefill_tokens: float = 0.0      # EWMA per trajectory
+    decode_tokens: float = 0.0
+    turns: float = 0.0
+    samples: int = 0
+    klass: str = "unknown"           # "prefill_heavy" | "decode_heavy"
+    stable_for: int = 0              # consecutive windows with same class
+
+    @property
+    def decode_ratio(self) -> float:
+        total = self.prefill_tokens + self.decode_tokens
+        return self.decode_tokens / total if total else 0.5
+
+
+@dataclass
+class AffinityProfiler:
+    """Derives task-domain -> hardware-pool routing from live stats."""
+    compute_pool: str = "H800"
+    bandwidth_pool: str = "H20"
+    decode_heavy_threshold: float = 0.75   # decode fraction of gen tokens
+    turns_threshold: float = 8.0           # many turns => prefill-heavy
+    ewma: float = 0.2
+    min_samples: int = 8
+    stability_windows: int = 2             # hysteresis before re-routing
+    profiles: Dict[str, DomainProfile] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def observe(self, tag: str, prefill_tokens: int, decode_tokens: int,
+                turns: int = 1):
+        p = self.profiles.setdefault(tag, DomainProfile())
+        a = self.ewma if p.samples else 1.0
+        p.prefill_tokens = (1 - a) * p.prefill_tokens + a * prefill_tokens
+        p.decode_tokens = (1 - a) * p.decode_tokens + a * decode_tokens
+        p.turns = (1 - a) * p.turns + a * turns
+        p.samples += 1
+        self._reclassify(p)
+
+    def observe_result(self, tag: str, result: GenResult, turns: int = 1):
+        self.observe(tag, result.prefill_tokens, result.decode_tokens, turns)
+
+    def _reclassify(self, p: DomainProfile):
+        if p.samples < self.min_samples:
+            return
+        decode_heavy = (p.decode_ratio >= self.decode_heavy_threshold
+                        and p.turns < self.turns_threshold)
+        new = "decode_heavy" if decode_heavy else "prefill_heavy"
+        if new == p.klass:
+            p.stable_for += 1
+        else:
+            p.klass = new
+            p.stable_for = 0
+
+    # ------------------------------------------------------------------
+    def pool_for(self, tag: str) -> Optional[str]:
+        p = self.profiles.get(tag)
+        if not p or p.samples < self.min_samples \
+                or p.stable_for < self.stability_windows:
+            return None                          # not confident yet
+        return (self.bandwidth_pool if p.klass == "decode_heavy"
+                else self.compute_pool)
+
+    def hw_affinity(self, default: Optional[str] = None) -> Dict[str, str]:
+        """The mapping LLMProxy consumes (only confident domains appear)."""
+        out = {"default": default or self.compute_pool}
+        for tag in self.profiles:
+            pool = self.pool_for(tag)
+            if pool is not None:
+                out[tag] = pool
+        return out
+
+    def apply_to(self, proxy) -> Dict[str, str]:
+        """Refresh an LLMProxy's routing in place; returns the mapping."""
+        mapping = self.hw_affinity(default=proxy.hw_affinity.get("default"))
+        proxy.hw_affinity.update(mapping)
+        return mapping
+
+    def summary(self) -> Dict[str, Dict]:
+        return {tag: {"decode_ratio": round(p.decode_ratio, 3),
+                      "turns": round(p.turns, 1), "class": p.klass,
+                      "samples": p.samples, "stable_for": p.stable_for}
+                for tag, p in self.profiles.items()}

@@ -1,0 +1,125 @@
+"""LLMProxy (paper §6.1): the gateway between EnvManagers and inference
+workers. Dispatches generation requests at per-trajectory granularity,
+routing each request to the hardware class preferred for its task-domain
+tag (R1), and forwards ADD/ABORT commands so trajectory admission or
+cancellation never stalls ongoing generation. Also implements the
+suspend/resume half of the weight-sync protocol (R4).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.rl.engine import GenRequest, GenResult, InferenceEngine
+
+
+@dataclass
+class EngineHandle:
+    engine: InferenceEngine
+    pool: str                   # hardware pool name ("H800"/"H20"/...)
+    name: str = ""
+
+    def load(self) -> int:
+        return self.engine.num_active + len(self.engine._commands)
+
+
+class LLMProxy:
+    def __init__(self, handles: List[EngineHandle],
+                 hw_affinity: Optional[Dict[str, str]] = None):
+        """hw_affinity: task tag -> pool name, must include "default"."""
+        if not handles:
+            raise ValueError("LLMProxy needs at least one engine")
+        self.handles = handles
+        self.hw_affinity = dict(hw_affinity or {"default": handles[0].pool})
+        self.hw_affinity.setdefault("default", handles[0].pool)
+        self._route: Dict[str, EngineHandle] = {}
+        self._callbacks: Dict[str, Callable[[GenResult], None]] = {}
+        self._lock = threading.Lock()
+        self.suspended = False
+        for h in handles:
+            h.engine.on_finish = self._make_finish_hook(h)
+        # stats
+        self.requests = 0
+        self.aborted = 0
+        self.routed_by_pool: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def _make_finish_hook(self, handle: EngineHandle):
+        def hook(result: GenResult):
+            with self._lock:
+                cb = self._callbacks.pop(result.request_id, None)
+                self._route.pop(result.request_id, None)
+            if cb:
+                cb(result)
+        return hook
+
+    def _select(self, tag: str) -> EngineHandle:
+        pool = self.hw_affinity.get(tag, self.hw_affinity["default"])
+        matched = [h for h in self.handles if h.pool == pool]
+        if not matched:
+            matched = self.handles           # fallback: forward progress
+        return min(matched, key=lambda h: h.load())
+
+    # ------------------------------------------------------------------
+    def submit(self, req: GenRequest,
+               callback: Callable[[GenResult], None]):
+        """Trajectory-level dispatch (ADD command)."""
+        h = self._select(req.tag)
+        with self._lock:
+            self._callbacks[req.request_id] = callback
+            self._route[req.request_id] = h
+            self.requests += 1
+            self.routed_by_pool[h.pool] = \
+                self.routed_by_pool.get(h.pool, 0) + 1
+        h.engine.add_request(req)
+
+    def abort(self, request_id: str):
+        """ABORT command: cancel one trajectory's generation."""
+        with self._lock:
+            h = self._route.get(request_id)
+            self.aborted += 1
+        if h is not None:
+            h.engine.abort(request_id)
+
+    # ------------------------------------------------------------------
+    # weight-sync protocol hooks (steps (2)-(4))
+    # ------------------------------------------------------------------
+    def suspend(self):
+        self.suspended = True
+        for h in self.handles:
+            h.engine.suspend()
+
+    def resume(self):
+        self.suspended = False
+        for h in self.handles:
+            h.engine.resume()
+
+    def update_all(self, params, version: int, recompute_caches: bool = True):
+        """Protocol steps (3) update + (5) KV-cache recomputation."""
+        for h in self.handles:
+            h.engine.update_params(params, version,
+                                   recompute_caches=recompute_caches)
+
+    # ------------------------------------------------------------------
+    def pump(self) -> int:
+        """Advance every engine by one step; returns active slot count."""
+        return sum(h.engine.step() for h in self.handles)
+
+    @property
+    def busy(self) -> bool:
+        return any(h.engine.has_pending for h in self.handles)
+
+    def stats(self) -> Dict:
+        return {
+            "requests": self.requests,
+            "aborted": self.aborted,
+            "routed_by_pool": dict(self.routed_by_pool),
+            "engines": [
+                {"pool": h.pool, "steps": h.engine.steps,
+                 "busy_steps": h.engine.busy_steps,
+                 "prefill_tokens": h.engine.prefill_tokens,
+                 "decode_tokens": h.engine.decode_tokens}
+                for h in self.handles],
+        }

@@ -1,0 +1,113 @@
+"""Resource plane: the resource manager (paper §5.2 "Resource Binding").
+
+Tracks heterogeneous hardware pools in a shared metadata store (a dict
+standing in for Redis), interprets worker-level hardware-affinity
+declarations, binds Workers to concrete device groups, and falls back to
+compatible defaults when the preferred pool is exhausted rather than
+stalling deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.hardware import REGISTRY, HardwareSpec
+
+
+@dataclasses.dataclass
+class DeviceGroup:
+    pool: str                  # hardware name, e.g. "H800"
+    device_ids: List[int]
+    owner: Optional[str] = None
+
+    @property
+    def size(self) -> int:
+        return len(self.device_ids)
+
+
+@dataclasses.dataclass
+class Binding:
+    worker_id: str
+    role: str
+    group: DeviceGroup
+    fallback: bool = False     # True if not on the preferred pool
+
+
+# fallback order per hardware class (paper: "opportunistically falls back
+# to compatible default resources")
+FALLBACKS = {
+    "H800": ["H20"],
+    "H20": ["H800"],
+    "TPUv5p": ["TPUv5e"],
+    "TPUv5e": ["TPUv5p"],
+    "CPU": [],
+    "Serverless": [],
+}
+
+
+class ResourceManager:
+    """Global real-time view of disaggregated resource pools."""
+
+    def __init__(self, pools: Dict[str, int]):
+        """pools: hardware name -> device count, e.g. {"H800": 96, "H20": 32,
+        "CPU": 512, "Serverless": 10**6}."""
+        for name in pools:
+            if name not in REGISTRY:
+                raise KeyError(f"unknown hardware {name!r}")
+        self._lock = threading.Lock()
+        self._free: Dict[str, List[int]] = {
+            name: list(range(n)) for name, n in pools.items()}
+        self._meta: Dict[str, Binding] = {}   # the "Redis" metadata store
+        self.pools = dict(pools)
+
+    def spec(self, pool: str) -> HardwareSpec:
+        return REGISTRY[pool]
+
+    def available(self, pool: str) -> int:
+        with self._lock:
+            return len(self._free.get(pool, []))
+
+    # ------------------------------------------------------------------
+    def bind(self, worker_id: str, role: str, preferred: str,
+             n_devices: int = 1,
+             allow_fallback: bool = True) -> Optional[Binding]:
+        """Bind a worker to ``n_devices`` of the preferred pool, falling back
+        to a compatible pool if exhausted. Returns None if impossible."""
+        with self._lock:
+            for pool, is_fb in [(preferred, False)] + [
+                    (fb, True) for fb in
+                    (FALLBACKS.get(preferred, []) if allow_fallback else [])]:
+                free = self._free.get(pool, [])
+                if len(free) >= n_devices:
+                    ids = [free.pop() for _ in range(n_devices)]
+                    grp = DeviceGroup(pool=pool, device_ids=sorted(ids),
+                                      owner=worker_id)
+                    b = Binding(worker_id=worker_id, role=role, group=grp,
+                                fallback=is_fb)
+                    self._meta[worker_id] = b
+                    return b
+        return None
+
+    def release(self, worker_id: str):
+        with self._lock:
+            b = self._meta.pop(worker_id, None)
+            if b is not None:
+                self._free.setdefault(b.group.pool, []).extend(
+                    b.group.device_ids)
+
+    def binding(self, worker_id: str) -> Optional[Binding]:
+        with self._lock:
+            return self._meta.get(worker_id)
+
+    def bindings_by_pool(self, pool: str) -> List[Binding]:
+        with self._lock:
+            return [b for b in self._meta.values() if b.group.pool == pool]
+
+    def snapshot(self) -> Dict[str, Dict]:
+        with self._lock:
+            return {
+                "free": {k: len(v) for k, v in self._free.items()},
+                "bound": {k: dataclasses.asdict(v)
+                          for k, v in self._meta.items()},
+            }

@@ -1,0 +1,253 @@
+"""Rollout scheduler + asynchronous training orchestration (paper §6).
+
+``LiveRLRunner`` drives the REAL pipeline (tiny models, real environments,
+real GRPO updates) through the paper's six-step weight-sync protocol:
+
+  (1) get_batch   — blocking retrieval from SampleBuffer
+  (2) suspend     — LLMProxy stops admitting requests (in-flight preserved)
+  (3) update      — engines pull the latest weights from the Mooncake store
+  (4) resume      — pending generation continues
+  (5) recomp      — in-flight trajectories' KV caches rebuilt under the new
+                    weights (so they continue instead of restarting)
+  (6) train_step  — the GRPO update, overlapped with resumed rollout
+
+plus trajectory-level staleness enforcement (abort EnvManagers whose
+start_version < n - alpha, every iteration — stricter than AReaL) and
+redundant environment rollouts (launch extra groups, cancel the slowest
+once the target count is met; exploits GRPO's group structure).
+
+Modes ("rollart", "sync", "sync_plus", "one_off", "areal") reproduce the
+paper's baselines with the same code path, differing only in coordination:
+  sync      — rollout and training strictly alternate; batched env waits
+  sync_plus — sync + async reward + serverless offload
+  one_off   — training consumes the previous iteration's trajectories
+  areal     — staleness bound applied at trajectory start only
+  rollart   — bounded staleness alpha enforced per iteration + affinity
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.buffer import SampleBuffer
+from repro.core.envmanager import EMState, EnvManager, RolloutPolicy
+from repro.core.profiler import AffinityProfiler
+from repro.core.proxy import LLMProxy
+from repro.core.serverless import ServerlessPlatform
+from repro.core.weightstore import MooncakeStore, pull_params, push_params
+from repro.data.pipeline import Trajectory, TaskSampler, pack_batch
+from repro.data.tokenizer import ByteTokenizer
+from repro.envs import make_env
+from repro.rl.trainer import TrainState
+
+MODES = ("rollart", "sync", "sync_plus", "one_off", "areal")
+
+
+@dataclass
+class RunnerConfig:
+    batch_size: int = 8
+    group_size: int = 4
+    alpha: int = 1
+    mode: str = "rollart"
+    tasks: tuple = ("math", "game")
+    redundancy: float = 1.0           # env groups launched / needed
+    online_affinity: bool = False     # paper §9: auto-derive hw_mapping
+    max_new_tokens: int = 32
+    temperature: float = 1.0
+    reward_url: str = "fc://rollart/reward"
+    max_pump_steps: int = 200000
+    seed: int = 0
+
+
+@dataclass
+class StepMetrics:
+    step: int
+    wall_s: float
+    loss: float
+    reward_mean: float
+    evicted: int
+    aborted: int
+    trajs: int
+
+
+class LiveRLRunner:
+    """Cooperative single-process runner of the full RollArt pipeline."""
+
+    def __init__(self, cfg: RunnerConfig, proxy: LLMProxy,
+                 train_state: TrainState,
+                 train_step_fn: Callable,
+                 serverless: ServerlessPlatform,
+                 reward_fn: Callable[[Dict], float],
+                 store: Optional[MooncakeStore] = None,
+                 seq_len: int = 512):
+        self.cfg = cfg
+        assert cfg.mode in MODES
+        self.proxy = proxy
+        self.state = train_state
+        self.train_step_fn = train_step_fn
+        self.serverless = serverless
+        self.serverless.deploy(cfg.reward_url, reward_fn)
+        self.store = store or MooncakeStore(bucket_mb=1)
+        self.buffer = SampleBuffer(alpha=cfg.alpha)
+        self.tok = ByteTokenizer()
+        self.sampler = TaskSampler(list(cfg.tasks), seed=cfg.seed)
+        self.seq_len = seq_len
+        self.version = 0
+        self.profiler = AffinityProfiler() if cfg.online_affinity else None
+        self.active: List[EnvManager] = []
+        self._seed_counter = itertools.count(cfg.seed * 1000)
+        self.history: List[StepMetrics] = []
+        # publish v0 weights
+        push_params(self.store, self.state.params, version=0)
+        self._completed_this_round: List[EnvManager] = []
+
+    # ------------------------------------------------------------------
+    # rollout side
+    # ------------------------------------------------------------------
+    def _spawn_group(self, task: str, group_id: str, n: int):
+        for _ in range(n):
+            env = make_env(task, seed=next(self._seed_counter))
+            em = EnvManager(
+                env, self.proxy, tokenizer=self.tok,
+                policy=RolloutPolicy(max_new_tokens=self.cfg.max_new_tokens,
+                                     temperature=self.cfg.temperature),
+                tag=task, group_id=group_id,
+                on_complete=self._on_em_complete)
+            self.active.append(em)
+            em.start(version=self.version, seed=next(self._seed_counter))
+
+    def _on_em_complete(self, em: EnvManager):
+        self._completed_this_round.append(em)
+
+    def _score_and_buffer(self, em: EnvManager):
+        """Reward stage: serverless scoring as soon as a trajectory lands."""
+        traj = em.trajectory()
+        if self.profiler is not None and em.turns:
+            prefill = sum(1 for m in em.loss_mask if m == 0)
+            decode = len(em.tokens) - prefill
+            self.profiler.observe(em.tag, prefill, decode, em.turns)
+        if em.state in (EMState.FAILED, EMState.ABORTED):
+            return   # redundant rollouts / staleness absorb these
+        payload = {
+            "env_return": em.env_return,
+            "tokens": traj.tokens,
+            "loss_mask": traj.loss_mask,
+            "num_tokens": len(traj.tokens),
+            "text": self.tok.decode(traj.tokens),
+        }
+        traj.reward = float(self.serverless.invoke(self.cfg.reward_url,
+                                                   payload))
+        self.buffer.put(traj)
+
+    def _enforce_staleness(self):
+        """RollArt: per-iteration trajectory-level staleness control."""
+        if self.cfg.mode == "areal":
+            return   # AReaL bounds staleness at trajectory start only
+        bound = self.version - self.cfg.alpha
+        for em in self.active:
+            if em.state == EMState.GENERATING and em.start_version < bound:
+                em.abort()
+
+    def _ensure_inflight(self):
+        """Keep enough environment groups running to feed the buffer."""
+        need_groups = int(np.ceil(
+            self.cfg.batch_size / self.cfg.group_size * self.cfg.redundancy))
+        alive = len({em.group_id for em in self.active
+                     if em.state in (EMState.IDLE, EMState.GENERATING)})
+        for g in range(need_groups - alive):
+            task = self.sampler.sample()
+            gid = f"v{self.version}.g{g}.{task}.{next(self._seed_counter)}"
+            self._spawn_group(task, gid, self.cfg.group_size)
+
+    def _pump(self):
+        """One cooperative tick: engines decode; completions cascade."""
+        self.proxy.pump()
+        done, self._completed_this_round = self._completed_this_round, []
+        for em in done:
+            self._score_and_buffer(em)
+            if em in self.active:
+                self.active.remove(em)
+        # redundant rollouts: once the buffer has a full batch, cancel the
+        # slowest in-flight groups beyond what the next batch needs
+        if (self.cfg.redundancy > 1.0
+                and self.buffer.size() >= self.cfg.batch_size):
+            for em in list(self.active):
+                if em.state == EMState.GENERATING:
+                    em.abort()
+
+    # ------------------------------------------------------------------
+    # the six-step protocol
+    # ------------------------------------------------------------------
+    def run_steps(self, num_steps: int) -> List[StepMetrics]:
+        sync_like = self.cfg.mode in ("sync", "sync_plus")
+        for step in range(num_steps):
+            t0 = time.monotonic()
+            self._ensure_inflight()
+            # (1) get_batch: pump the pipeline until a batch is ready
+            pumps = 0
+            while True:
+                batch_trajs = self.buffer.try_get_batch(self.cfg.batch_size)
+                if batch_trajs is not None:
+                    break
+                self._ensure_inflight()
+                self._pump()
+                pumps += 1
+                if pumps > self.cfg.max_pump_steps:
+                    raise RuntimeError("rollout starved: no batch collected")
+            # (2) suspend
+            self.proxy.suspend()
+            # (3) update: engines pull the newest weights from the store
+            pulled = pull_params(self.store, self.state.params)
+            if pulled is not None:
+                params, v = pulled
+                # (5) recomp happens inside update_all (cache rebuild)
+                self.proxy.update_all(params, v, recompute_caches=True)
+            # (4) resume
+            self.proxy.resume()
+            # (6) train_step (+ publish weights for the next pull)
+            batch = self._pack(batch_trajs)
+            self.state, metrics = self.train_step_fn(self.state, batch)
+            self.version = int(self.state.version)
+            self.buffer.set_version(self.version)
+            self._enforce_staleness()
+            if self.profiler is not None:
+                self.profiler.apply_to(self.proxy)   # §9 online re-routing
+            push_params(self.store, self.state.params, version=self.version)
+            if sync_like:
+                # synchronous baselines: drain all rollout before continuing
+                while self.proxy.busy:
+                    self._pump()
+            rewards = [t.reward for t in batch_trajs]
+            sm = StepMetrics(
+                step=step, wall_s=time.monotonic() - t0,
+                loss=float(metrics["loss"]),
+                reward_mean=float(np.mean(rewards)),
+                evicted=self.buffer.total_evicted,
+                aborted=self.proxy.aborted, trajs=len(batch_trajs))
+            self.history.append(sm)
+        return self.history
+
+    def _pack(self, trajs: List[Trajectory]) -> Dict:
+        import jax.numpy as jnp
+        # GRPO: group-normalize rewards within same-group trajectories,
+        # falling back to batch normalization for stragglers
+        by_group: Dict[str, List[Trajectory]] = {}
+        for t in trajs:
+            by_group.setdefault(t.group_id, []).append(t)
+        rewards = np.asarray([t.reward for t in trajs], np.float32)
+        adv = np.zeros_like(rewards)
+        idx = {id(t): i for i, t in enumerate(trajs)}
+        for group in by_group.values():
+            r = np.asarray([t.reward for t in group], np.float32)
+            mu, sd = r.mean(), r.std()
+            base = (r - mu) / (sd + 1e-6) if len(group) > 1 else r - mu
+            for t, a in zip(group, base):
+                adv[idx[id(t)]] = a
+        batch = pack_batch(trajs, self.seq_len)
+        batch["advantages"] = adv
+        return {k: jnp.asarray(v) for k, v in batch.items()}

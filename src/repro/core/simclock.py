@@ -1,0 +1,175 @@
+"""Minimal discrete-event simulation engine (SimPy-like, generator-based).
+
+The cluster-scale benchmarks replay the RollArt control plane against
+modeled hardware latencies in virtual time. Processes are generators that
+yield either ``sim.timeout(dt)`` or an ``Event``; ``Simulator.run`` drives
+them through a time-ordered heap.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, Generator, List, Optional
+
+
+class Event:
+    """One-shot event; processes yield it to wait, anyone may trigger it."""
+
+    __slots__ = ("sim", "triggered", "value", "_waiters")
+
+    def __init__(self, sim: "Simulator"):
+        self.sim = sim
+        self.triggered = False
+        self.value: Any = None
+        self._waiters: List = []
+
+    def trigger(self, value: Any = None):
+        if self.triggered:
+            return
+        self.triggered = True
+        self.value = value
+        for proc in self._waiters:
+            self.sim._schedule(self.sim.now, proc, value)
+        self._waiters.clear()
+
+
+class Timeout:
+    __slots__ = ("delay",)
+
+    def __init__(self, delay: float):
+        self.delay = max(0.0, float(delay))
+
+
+class _Process:
+    __slots__ = ("gen", "done_event", "name")
+
+    def __init__(self, gen: Generator, done_event: Event, name: str):
+        self.gen = gen
+        self.done_event = done_event
+        self.name = name
+
+
+class Simulator:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: List = []
+        self._counter = itertools.count()
+
+    # -- public API ------------------------------------------------------
+    def timeout(self, delay: float) -> Timeout:
+        return Timeout(delay)
+
+    def event(self) -> Event:
+        return Event(self)
+
+    def process(self, gen: Generator, name: str = "proc") -> Event:
+        """Spawn a process; returns an Event triggered with its return."""
+        done = Event(self)
+        proc = _Process(gen, done, name)
+        self._schedule(self.now, proc, None)
+        return done
+
+    def run(self, until: Optional[float] = None):
+        while self._heap:
+            t, _, proc, value = heapq.heappop(self._heap)
+            if until is not None and t > until:
+                heapq.heappush(self._heap, (t, next(self._counter), proc,
+                                            value))
+                self.now = until
+                return
+            self.now = t
+            self._step(proc, value)
+        if until is not None:
+            self.now = max(self.now, until)
+
+    # -- internals --------------------------------------------------------
+    def _schedule(self, t: float, proc: _Process, value: Any):
+        heapq.heappush(self._heap, (t, next(self._counter), proc, value))
+
+    def _step(self, proc: _Process, send_value: Any):
+        try:
+            yielded = proc.gen.send(send_value)
+        except StopIteration as stop:
+            proc.done_event.trigger(stop.value)
+            return
+        if isinstance(yielded, Timeout):
+            self._schedule(self.now + yielded.delay, proc, None)
+        elif isinstance(yielded, Event):
+            if yielded.triggered:
+                self._schedule(self.now, proc, yielded.value)
+            else:
+                yielded._waiters.append(proc)
+        else:
+            raise TypeError(f"process {proc.name} yielded {yielded!r}; "
+                            "expected Timeout or Event")
+
+
+class Resource:
+    """Counting resource (e.g. a GPU pool) with FIFO queuing."""
+
+    def __init__(self, sim: Simulator, capacity: int, name: str = "res"):
+        self.sim = sim
+        self.capacity = capacity
+        self.in_use = 0
+        self.name = name
+        self._queue: List[Event] = []
+        # utilization accounting
+        self._busy_time = 0.0
+        self._last_t = 0.0
+
+    def _account(self):
+        self._busy_time += self.in_use * (self.sim.now - self._last_t)
+        self._last_t = self.sim.now
+
+    def acquire(self):
+        """Process helper: ``yield from res.acquire()``."""
+        while self.in_use >= self.capacity:
+            ev = self.sim.event()
+            self._queue.append(ev)
+            yield ev
+        self._account()
+        self.in_use += 1
+
+    def release(self):
+        self._account()
+        self.in_use -= 1
+        if self._queue:
+            self._queue.pop(0).trigger()
+
+    def utilization(self, capacity: Optional[int] = None) -> float:
+        self._account()
+        denom = (capacity or self.capacity) * max(self.sim.now, 1e-9)
+        return self._busy_time / denom
+
+
+def all_of(sim: Simulator, events: List[Event]) -> Event:
+    """Event that fires when all inputs have fired."""
+    out = sim.event()
+    remaining = [len(events)]
+    if not events:
+        out.trigger([])
+        return out
+    results = [None] * len(events)
+
+    def waiter(i, ev):
+        val = yield ev
+        results[i] = val
+        remaining[0] -= 1
+        if remaining[0] == 0:
+            out.trigger(results)
+
+    for i, ev in enumerate(events):
+        sim.process(waiter(i, ev), name="all_of")
+    return out
+
+
+def any_of(sim: Simulator, events: List[Event]) -> Event:
+    out = sim.event()
+
+    def waiter(i, ev):
+        val = yield ev
+        out.trigger((i, val))
+
+    for i, ev in enumerate(events):
+        sim.process(waiter(i, ev), name="any_of")
+    return out

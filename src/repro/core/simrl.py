@@ -1,0 +1,629 @@
+"""Cluster-scale discrete-event simulation of the agentic RL pipeline.
+
+Replays the RollArt control plane (trajectory-level rollout, GRPO group
+structure, serverless reward, bounded-staleness async training, bucketized
+weight sync) against modeled hardware in virtual time, at the paper's scale
+(Qwen3-8B..32B, batch 512, 128 GPUs). Latency constants are calibrated from
+the paper's own measurements (Table 2 specs, Table 3/4 transfer fits, §3
+latency distributions); ``benchmarks/calibration.py`` validates the Fig. 4
+hardware-affinity ratios.
+
+Fidelity notes:
+- decode is modeled per TP serving group (weights are read once per engine
+  step for all concurrent streams), so pool throughput = slots / t_step;
+- training batches require COMPLETE GRPO groups (group_size trajectories of
+  the same prompt), which is what makes environment long tails gate the
+  batch and gives redundant environment rollouts (Fig. 14b) their meaning;
+- the staleness logic is the same SampleBuffer class used by the live
+  runner, so the α-bound semantics have one implementation in both modes.
+
+Modes: sync | sync_plus | one_off | areal | rollart   (§7.1 baselines)
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import get_config
+from repro.core.buffer import SampleBuffer
+from repro.core.hardware import PERF, REGISTRY, HardwareSpec
+from repro.core.serverless import ServerlessConfig, ServerlessPlatform
+from repro.core.simclock import Resource, Simulator
+from repro.data.pipeline import Trajectory
+from repro.envs import ENV_CLASSES
+
+# ---------------------------------------------------------------------------
+# workload profiles (Table 1 + §8 characterization)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TaskProfile:
+    name: str
+    turns: Tuple[int, int]             # uniform range
+    obs_tokens: Tuple[float, float]    # mean, std per turn
+    resp_tokens: Tuple[float, float]   # mean, std per turn
+    kind: str                          # "prefill_heavy" | "decode_heavy"
+
+    def sample_turns(self, rng):
+        return rng.randint(*self.turns)
+
+    def sample_obs(self, rng):
+        return max(16, int(rng.gauss(*self.obs_tokens)))
+
+    def sample_resp(self, rng):
+        return max(16, int(rng.gauss(*self.resp_tokens)))
+
+
+TASK_PROFILES: Dict[str, TaskProfile] = {
+    "swe": TaskProfile("swe", (30, 50), (600, 200), (400, 150),
+                       "prefill_heavy"),
+    "webshop": TaskProfile("webshop", (5, 30), (300, 100), (200, 80),
+                           "prefill_heavy"),
+    "frozenlake": TaskProfile("frozenlake", (20, 60), (150, 50), (100, 40),
+                              "prefill_heavy"),
+    # decode-heavy tasks carry reasoning-model CoT lengths (§8: responses
+    # reach 46k tokens; means in the 8-12k range)
+    "math": TaskProfile("math", (1, 5), (120, 40), (8000, 3000),
+                        "decode_heavy"),
+    "game": TaskProfile("game", (1, 1), (80, 20), (12000, 4000),
+                        "decode_heavy"),
+}
+
+# cross-cluster transfer constants fit from paper Tables 3/4
+TCP_BW_GBS = 2.1          # effective TCP GB/s (Table 3 fit)
+RDMA_BW_GBS = 11.5        # effective RDMA GB/s (Table 3 fit)
+RDMA_LAT_S = 4.1          # RDMA setup (Table 3 fit)
+MOONCAKE_PUSH_GBS = 0.46  # Table 4 fit: bucketized push over Ethernet
+MOONCAKE_PULL_GBS = 2.5   # Table 4 fit: intra-cluster pull
+
+
+def default_tp(model_name: str) -> int:
+    """Rollout tensor-parallel degrees from paper §7.1 (1/2/4 for 8/14/32B)."""
+    if "32b" in model_name or "30b" in model_name:
+        return 4
+    if "14b" in model_name:
+        return 2
+    return 1
+
+
+@dataclass
+class GenPool:
+    hw: HardwareSpec
+    n_devices: int
+    tp_degree: int = 4
+    weight_bytes: float = 0.0
+    kv_bytes_per_stream: float = 2.0e9   # avg-context KV footprint
+    max_slots_per_group: int = 24
+
+    def __post_init__(self):
+        self.resource: Optional[Resource] = None
+
+    @property
+    def n_groups(self) -> int:
+        return max(1, self.n_devices // self.tp_degree)
+
+    @property
+    def slots_per_group(self) -> int:
+        """HBM-derived concurrency: (group HBM - weights) / KV per stream.
+        This is where bandwidth-optimized chips' larger HBM (H20: 96 GB)
+        buys extra batch slots."""
+        free = (self.tp_degree * self.hw.hbm_gb * 1e9 * 0.9
+                - self.weight_bytes)
+        return int(max(1, min(self.max_slots_per_group,
+                              free / self.kv_bytes_per_stream)))
+
+    def capacity(self) -> int:
+        return self.n_groups * self.slots_per_group
+
+
+@dataclass
+class SimRLConfig:
+    model: str = "qwen3-32b"
+    tasks: Tuple[str, ...] = ("swe", "math", "frozenlake", "webshop", "game")
+    batch_size: int = 512
+    group_size: int = 8
+    alpha: int = 1
+    mode: str = "rollart"
+    num_steps: int = 8
+    seed: int = 0
+    # resources
+    train_hw: str = "H800"
+    train_devices: int = 32
+    gen_pools: Tuple[Tuple[str, int], ...] = (("H800", 64), ("H20", 32))
+    tp_degree: int = 0                 # 0 -> default_tp(model)
+    hw_affinity: Optional[Dict[str, str]] = None   # task -> pool (R1)
+    reward_serverless: bool = True
+    reward_gpu_devices: int = 4
+    reward_exec_s: Tuple[float, float] = (0.5, 2.5)
+    # environment latency
+    env_latency_scale: float = 1.0
+    env_gauss_override: Optional[Tuple[float, float]] = None  # (mu, sigma)
+    # redundancy: groups launched / groups needed (Fig. 14b)
+    redundancy: float = 1.0
+    # concurrent environment budget, as a multiple of batch_size
+    # (environments are real CPU pods, not free; buffer growth is O(alpha*E))
+    max_env_factor: float = 2.5
+    # weight sync
+    async_weight_sync: bool = True
+    train_mfu: float = 0.35
+    prefix_cache: float = 0.8
+    # PD disaggregation (§6.3)
+    pd_disagg: bool = False
+    pd_prefill_pool: str = "H800"
+    pd_decode_pool: str = "H20"
+
+
+@dataclass
+class SimMetrics:
+    step_times: List[float] = field(default_factory=list)
+    tokens: List[int] = field(default_factory=list)
+    rollout_s: List[float] = field(default_factory=list)
+    train_s: List[float] = field(default_factory=list)
+    gen_util: Dict[str, float] = field(default_factory=dict)
+    reward_util: float = 0.0
+    evicted: int = 0
+    aborted: int = 0
+    completed: int = 0
+    failed: int = 0
+    groups_completed: int = 0
+    groups_dead: int = 0
+    exposed_sync_s: List[float] = field(default_factory=list)
+    push_s: float = 0.0
+    pull_s: float = 0.0
+
+    @property
+    def avg_step_s(self) -> float:
+        return sum(self.step_times) / max(len(self.step_times), 1)
+
+    @property
+    def throughput_tok_s(self) -> float:
+        return sum(self.tokens) / max(sum(self.step_times), 1e-9)
+
+
+class _SimBuffer(SampleBuffer):
+    """SampleBuffer with a sim Event notification on put/version change."""
+
+    def __init__(self, sim: Simulator, alpha: int):
+        super().__init__(alpha=alpha)
+        self.sim = sim
+        self._notify = sim.event()
+
+    def _wake(self):
+        ev, self._notify = self._notify, self.sim.event()
+        ev.trigger()
+
+    def put(self, traj):
+        super().put(traj)
+        self._wake()
+
+    def set_version(self, v):
+        super().set_version(v)
+        self._wake()
+
+    def wait_event(self):
+        return self._notify
+
+
+class _Group:
+    """GRPO group tracker: a batch entry is a COMPLETE group."""
+
+    __slots__ = ("gid", "task", "need", "done", "dead", "start_version")
+
+    def __init__(self, gid, task, need, start_version):
+        self.gid = gid
+        self.task = task
+        self.need = need
+        self.done: List[Trajectory] = []
+        self.dead = False
+        self.start_version = start_version
+
+
+class SimRL:
+    def __init__(self, cfg: SimRLConfig):
+        self.cfg = cfg
+        self.sim = Simulator()
+        self.rng = random.Random(cfg.seed)
+        self.model = get_config(cfg.model)
+        self.tp = cfg.tp_degree or default_tp(cfg.model)
+        self.buffer = _SimBuffer(self.sim, cfg.alpha)
+        self.metrics = SimMetrics()
+        self.version = 0
+        self.traj_tokens: Dict[str, int] = {}
+        self._traj_counter = 0
+        self._group_counter = 0
+        self._live: Dict[str, dict] = {}        # traj id -> state
+        self._groups: Dict[str, _Group] = {}
+        self.pools: Dict[str, GenPool] = {}
+        kv_per_tok = (2 * self.model.num_kv_heads * self.model.head_dim
+                      * self.model.num_layers * 2)
+        avg_ctx = 8192.0
+        for name, n in cfg.gen_pools:
+            p = GenPool(REGISTRY[name], n, tp_degree=self.tp,
+                        weight_bytes=PERF.weight_bytes(self.model),
+                        kv_bytes_per_stream=kv_per_tok * avg_ctx)
+            p.resource = Resource(self.sim, p.capacity(), name)
+            self.pools[name] = p
+        self.affinity = dict(cfg.hw_affinity or {})
+        self.affinity.setdefault("default", cfg.gen_pools[0][0])
+        self.serverless = ServerlessPlatform(
+            ServerlessConfig(cold_start_s=1.5), seed=cfg.seed)
+        self.reward_gpu = Resource(self.sim, cfg.reward_gpu_devices * 2,
+                                   "reward_gpu")
+        self._train_tokens = 0
+        self._done = False
+
+    # ------------------------------------------------------------------
+    # timing models
+    # ------------------------------------------------------------------
+    def _pool_for(self, task: str) -> GenPool:
+        """Affinity routing with the Cluster's fallback semantics: prefer the
+        task's pool, but redirect to a compatible pool when the preferred one
+        is saturated (forward progress under transient contention, §5.3)."""
+        name = self.affinity.get(task, self.affinity["default"])
+        pool = self.pools.get(name, next(iter(self.pools.values())))
+        if pool.resource is not None and \
+                pool.resource.in_use >= pool.capacity():
+            alts = sorted(self.pools.values(),
+                          key=lambda p: p.resource.in_use / p.capacity())
+            return alts[0]
+        return pool
+
+    def _gen_time(self, pool: GenPool, new_ctx: int, resp: int,
+                  context: int) -> float:
+        if self.cfg.pd_disagg:
+            pp = self.pools[self.cfg.pd_prefill_pool]
+            dp = self.pools[self.cfg.pd_decode_pool]
+            tp_ = PERF.prefill_time(self.model, new_ctx, pp.hw, pp.tp_degree,
+                                    prefix_cached_frac=0.0)
+            conc = max(1, dp.resource.in_use // dp.n_groups)
+            td = PERF.decode_time(self.model, resp, dp.hw, dp.tp_degree,
+                                  context=context, concurrency=conc)
+            tkv = PERF.transfer_time(new_ctx * 2 * self.model.d_model, 25.0)
+            return tp_ + td + tkv
+        tp_ = PERF.prefill_time(self.model, new_ctx, pool.hw, pool.tp_degree,
+                                prefix_cached_frac=0.0)
+        # concurrency = live occupancy per group: during the drain phase of
+        # a phased iteration the batch empties and stragglers decode faster
+        conc = max(1, pool.resource.in_use // pool.n_groups)
+        td = PERF.decode_time(self.model, resp, pool.hw, pool.tp_degree,
+                              context=context, concurrency=conc)
+        return tp_ + td
+
+    def _env_latency(self, profile, which: str) -> Tuple[float, bool]:
+        cfg = self.cfg
+        if cfg.env_gauss_override is not None:
+            mu, sigma = cfg.env_gauss_override
+            return max(0.05, self.rng.gauss(mu, sigma)), False
+        lat = ENV_CLASSES[profile.name].LATENCY
+        t, failed = (lat.sample_reset(self.rng) if which == "reset"
+                     else lat.sample_step(self.rng))
+        return t * cfg.env_latency_scale, failed
+
+    def _train_time(self, batch) -> float:
+        tokens = sum(self.traj_tokens.get(t.traj_id, 0) for t in batch)
+        self._train_tokens = tokens
+        return PERF.train_step_time(self.model, tokens,
+                                    REGISTRY[self.cfg.train_hw],
+                                    self.cfg.train_devices,
+                                    mfu=self.cfg.train_mfu)
+
+    def _weight_sync_times(self) -> Tuple[float, float]:
+        gb = PERF.weight_bytes(self.model) / 1e9
+        return gb / MOONCAKE_PUSH_GBS, gb / MOONCAKE_PULL_GBS
+
+    # ------------------------------------------------------------------
+    # group lifecycle
+    # ------------------------------------------------------------------
+    def spawn_group(self, task: Optional[str] = None,
+                    batched_env: bool = False) -> _Group:
+        task = task or self.rng.choice(self.cfg.tasks)
+        gid = f"g{self._group_counter}"
+        self._group_counter += 1
+        grp = _Group(gid, task, self.cfg.group_size, self.version)
+        self._groups[gid] = grp
+        for _ in range(self.cfg.group_size):
+            self.sim.process(
+                self._trajectory_proc(grp, batched_env=batched_env),
+                name="traj")
+        return grp
+
+    def _group_member_done(self, grp: _Group, traj: Optional[Trajectory]):
+        if grp.dead:
+            return
+        if traj is None:                     # member failed or aborted
+            grp.dead = True
+            self.metrics.groups_dead += 1
+            del self._groups[grp.gid]
+            self.buffer._wake()              # waiters may need to respawn
+            return
+        grp.done.append(traj)
+        if len(grp.done) == grp.need:
+            self.metrics.groups_completed += 1
+            del self._groups[grp.gid]
+            for t in grp.done:
+                self.buffer.put(t)
+
+    def _trajectory_proc(self, grp: _Group, batched_env: bool = False):
+        cfg, sim = self.cfg, self.sim
+        profile = TASK_PROFILES[grp.task]
+        tid = f"t{self._traj_counter}"
+        self._traj_counter += 1
+        state = {"start_version": grp.start_version, "aborted": False,
+                 "grp": grp}
+        self._live[tid] = state
+
+        def finish(traj):
+            self._live.pop(tid, None)
+            self._group_member_done(grp, traj)
+
+        t_reset, failed = self._env_latency(profile, "reset")
+        yield sim.timeout(t_reset)
+        if failed or grp.dead:
+            self.metrics.failed += int(failed)
+            finish(None)
+            return
+
+        turns = profile.sample_turns(self.rng)
+        context = profile.sample_obs(self.rng)
+        total = context
+        pool = self._pool_for(grp.task)
+        for turn in range(turns):
+            if state["aborted"] or grp.dead:
+                self.metrics.aborted += 1
+                finish(None)
+                return
+            resp = profile.sample_resp(self.rng)
+            # with prefix caching only the last observation + cache misses
+            # are prefethed on later turns
+            new_ctx = context if turn == 0 else \
+                max(64, int(context * (1 - cfg.prefix_cache)))
+            yield from pool.resource.acquire()
+            yield sim.timeout(self._gen_time(pool, new_ctx, resp, context))
+            pool.resource.release()
+            context += resp
+            total += resp
+            t_step, failed = self._env_latency(profile, "step")
+            yield sim.timeout(t_step)
+            if failed:
+                self.metrics.failed += 1
+                finish(None)
+                return
+            obs = profile.sample_obs(self.rng)
+            context += obs
+            total += obs
+
+        # reward stage (R3)
+        exec_s = self.rng.uniform(*cfg.reward_exec_s)
+        if cfg.reward_serverless:
+            t_r = self.serverless.sim_latency("fc://sim/reward", exec_s,
+                                              payload_bytes=total * 4,
+                                              now=sim.now)
+            yield sim.timeout(t_r)
+        else:
+            yield from self.reward_gpu.acquire()
+            yield sim.timeout(exec_s)
+            self.reward_gpu.release()
+
+        self.metrics.completed += 1
+        traj = Trajectory(traj_id=tid, task=grp.task, tokens=[],
+                          loss_mask=[], logprobs=[], reward=1.0,
+                          group_id=grp.gid,
+                          start_version=grp.start_version,
+                          version=self.version)
+        self.traj_tokens[tid] = total
+        traj.meta["tokens"] = total
+        finish(traj)
+
+    # ------------------------------------------------------------------
+    # batched-env iteration (the Sync baseline's rollout, Fig. 5b)
+    # ------------------------------------------------------------------
+    def _batched_iteration_proc(self, n_groups: int):
+        sim, cfg = self.sim, self.cfg
+        n = n_groups * cfg.group_size
+        tasks = [self.rng.choice(cfg.tasks) for _ in range(n_groups)
+                 for _ in range(cfg.group_size)]
+        profiles = [TASK_PROFILES[t] for t in tasks]
+        resets = []
+        for p in profiles:
+            t, failed = self._env_latency(p, "reset")
+            if failed:                       # batch-wide retry (Fig. 3)
+                t += self._env_latency(p, "reset")[0]
+                self.metrics.failed += 1
+            resets.append(t)
+        yield sim.timeout(max(resets))
+        turns = [p.sample_turns(self.rng) for p in profiles]
+        ctx = [p.sample_obs(self.rng) for p in profiles]
+        total = list(ctx)
+        for turn in range(max(turns)):
+            alive = [i for i in range(n) if turns[i] > turn]
+            if not alive:
+                break
+            t_gen = 0.0
+            for i in alive:
+                pool = self._pool_for(tasks[i])
+                resp = profiles[i].sample_resp(self.rng)
+                new_ctx = ctx[i] if turn == 0 else \
+                    int(ctx[i] * (1 - cfg.prefix_cache))
+                t_gen = max(t_gen, self._gen_time(pool, new_ctx, resp,
+                                                  ctx[i]))
+                ctx[i] += resp
+                total[i] += resp
+            yield sim.timeout(t_gen)
+            t_env = max(self._env_latency(profiles[i], "step")[0]
+                        for i in alive)       # env barrier
+            yield sim.timeout(t_env)
+            for i in alive:
+                obs = profiles[i].sample_obs(self.rng)
+                ctx[i] += obs
+                total[i] += obs
+        # batched reward on dedicated GPUs, in concurrency-limited waves
+        cap = max(1, self.reward_gpu.capacity)
+        waves = (n + cap - 1) // cap
+        exec_s = sum(max(self.rng.uniform(*cfg.reward_exec_s)
+                         for _ in range(min(cap, n))) for _ in range(waves))
+        yield sim.timeout(exec_s)
+        for i in range(n):
+            tid = f"t{self._traj_counter}"
+            self._traj_counter += 1
+            self.metrics.completed += 1
+            traj = Trajectory(traj_id=tid, task=tasks[i], tokens=[],
+                              loss_mask=[], logprobs=[], reward=1.0,
+                              group_id=f"bg{i // cfg.group_size}",
+                              start_version=self.version,
+                              version=self.version)
+            self.traj_tokens[tid] = total[i]
+            self.buffer.put(traj)
+
+    # ------------------------------------------------------------------
+    # staleness + spawning (async modes)
+    # ------------------------------------------------------------------
+    def _enforce_staleness(self):
+        if self.cfg.mode == "areal":
+            return                           # start-only bound
+        bound = self.version - self.cfg.alpha
+        for st in self._live.values():
+            if st["start_version"] < bound:
+                st["aborted"] = True
+
+    def _spawner_proc(self):
+        """Keep the generation pools saturated: in continuous (areal/rollart)
+        mode the batch arrives at the PRODUCTION RATE, so in-flight groups
+        are sized to generation capacity, not to one batch (the paper's
+        production deployment runs thousands of concurrent environments)."""
+        cfg = self.cfg
+        groups_needed = cfg.batch_size // cfg.group_size
+        cap_groups = sum(p.capacity() for p in self.pools.values()) \
+            // cfg.group_size
+        env_groups = int(cfg.max_env_factor * groups_needed)
+        target = int(max(groups_needed * max(1.0, cfg.redundancy) + 2,
+                         min(cap_groups, env_groups)))
+        while not self._done:
+            pending_groups = len(self._groups) \
+                + self.buffer.size() // cfg.group_size
+            for _ in range(max(0, target - pending_groups)):
+                self.spawn_group()
+            yield self.sim.timeout(2.0)
+
+    # ------------------------------------------------------------------
+    # trainers
+    # ------------------------------------------------------------------
+    def _trainer_async_proc(self):
+        """areal / rollart: continuous rollout + bounded-staleness training."""
+        cfg, sim = self.cfg, self.sim
+        for step in range(cfg.num_steps):
+            t0 = sim.now
+            while True:
+                batch = self.buffer.try_get_batch(cfg.batch_size)
+                if batch is not None:
+                    break
+                yield self.buffer.wait_event()
+            rollout_done = sim.now
+            t_train = self._train_time(batch)
+            yield sim.timeout(t_train)
+            self.version += 1
+            self.buffer.set_version(self.version)
+            self._enforce_staleness()
+            push_s, pull_s = self._weight_sync_times()
+            self.metrics.push_s += push_s
+            self.metrics.pull_s += pull_s
+            if cfg.async_weight_sync:
+                # Mooncake: push overlaps rollout; only the tail of the pull
+                # (buckets published after the final train micro-batches) is
+                # exposed during suspend/resume (Table 4: 67-78% hidden)
+                exposed = pull_s * 0.28
+            else:
+                exposed = push_s + pull_s
+            self.metrics.exposed_sync_s.append(exposed)
+            yield sim.timeout(exposed)
+            self.metrics.step_times.append(sim.now - t0)
+            self.metrics.rollout_s.append(rollout_done - t0)
+            self.metrics.train_s.append(t_train)
+            self.metrics.tokens.append(self._train_tokens)
+        self._done = True
+
+    def _trainer_phased_proc(self):
+        """sync / sync_plus / one_off."""
+        cfg, sim = self.cfg, self.sim
+        one_off = cfg.mode == "one_off"
+        groups_needed = cfg.batch_size // cfg.group_size
+        prev_batch = None
+        steps_recorded = 0
+        while steps_recorded < cfg.num_steps:
+            t0 = sim.now
+            if cfg.mode == "sync":
+                yield self.sim.process(
+                    self._batched_iteration_proc(groups_needed))
+                batch = self.buffer.try_get_batch(cfg.batch_size)
+            else:
+                # trajectory-level rollout for THIS iteration: all groups
+                # must finish under the current weights (no cross-iteration
+                # decoupling — the one-off/sync+ tail penalty)
+                n_spawn = int(groups_needed * max(1.0, cfg.redundancy))
+                for _ in range(n_spawn):
+                    self.spawn_group()
+                while True:
+                    batch = self.buffer.try_get_batch(cfg.batch_size)
+                    if batch is not None:
+                        break
+                    # replace dead groups so the iteration can complete
+                    have = (len(self._groups)
+                            + self.buffer.size() // cfg.group_size)
+                    for _ in range(max(0, groups_needed - have)):
+                        self.spawn_group()
+                    yield self.buffer.wait_event()
+                for st in self._live.values():
+                    st["aborted"] = True      # cancel redundant leftovers
+            rollout_done = sim.now
+
+            train_batch = prev_batch if one_off else batch
+            if one_off:
+                prev_batch = batch
+            exposed_train = 0.0
+            push_s, pull_s = self._weight_sync_times()
+            if train_batch is not None:
+                t_train = self._train_time(train_batch)
+                if one_off:
+                    # training AND the weight push of the previous version
+                    # overlap the rollout we just waited for; only the
+                    # residual + the local pull block the boundary
+                    exposed_train = max(0.0, t_train + push_s
+                                        - (rollout_done - t0))
+                    t_sync = pull_s
+                else:
+                    exposed_train = t_train
+                    t_sync = push_s + pull_s
+                yield sim.timeout(exposed_train)
+                self.version += 1
+                self.buffer.set_version(self.version)
+            else:
+                t_sync = 0.0
+            self.metrics.exposed_sync_s.append(t_sync)
+            yield sim.timeout(t_sync)
+            if train_batch is not None:
+                self.metrics.step_times.append(sim.now - t0)
+                self.metrics.rollout_s.append(rollout_done - t0)
+                self.metrics.train_s.append(exposed_train)
+                self.metrics.tokens.append(self._train_tokens)
+                steps_recorded += 1
+        self._done = True
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimMetrics:
+        self._done = False
+        if self.cfg.mode in ("rollart", "areal"):
+            self.sim.process(self._spawner_proc(), name="spawner")
+            self.sim.process(self._trainer_async_proc(), name="trainer")
+        else:
+            self.sim.process(self._trainer_phased_proc(), name="trainer")
+        self.sim.run()
+        for name, pool in self.pools.items():
+            self.metrics.gen_util[name] = pool.resource.utilization()
+        self.metrics.reward_util = self.reward_gpu.utilization()
+        self.metrics.evicted = self.buffer.total_evicted
+        return self.metrics
+
+
+def run_sim(**kwargs) -> SimMetrics:
+    return SimRL(SimRLConfig(**kwargs)).run()

@@ -1,0 +1,139 @@
+"""Asynchronous weight-update engine (paper §6.3 "Data Movement"), built on
+a Mooncake-style CPU-resident bucket store.
+
+After each train step the trainer *pushes* bucketized weights once over the
+cross-cluster link to the store; inference workers *pull* the newest buckets
+on demand over their own links, decoupling weight transfer from rollout.
+Live mode stores real jax arrays (flattened into ~bucket_mb chunks); sim
+mode tracks only sizes + versions. Transfer-time accounting reproduces the
+paper's Table 4 decomposition (push / accumulated pull / exposed pull).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Bucket:
+    name: str
+    version: int
+    nbytes: int
+    payload: Any = None        # list of (leaf_index, array) in live mode
+
+
+@dataclass
+class TransferLog:
+    push_s: float = 0.0
+    pull_s: float = 0.0            # accumulated pull cost
+    exposed_pull_s: float = 0.0    # pull cost not hidden by rollout
+    pushes: int = 0
+    pulls: int = 0
+
+
+class MooncakeStore:
+    """Versioned, bucketized weight store with simple latest-wins semantics."""
+
+    def __init__(self, bucket_mb: int = 1024):
+        self.bucket_bytes = bucket_mb * 2 ** 20
+        self._lock = threading.Lock()
+        self._buckets: Dict[int, List[Bucket]] = {}
+        self._latest: int = -1
+        self.log = TransferLog()
+
+    # ------------------------------------------------------------------
+    @property
+    def latest_version(self) -> int:
+        with self._lock:
+            return self._latest
+
+    def bucketize(self, leaves: List[np.ndarray],
+                  version: int) -> List[Bucket]:
+        """Split a flat list of arrays into ~bucket_bytes buckets."""
+        buckets: List[Bucket] = []
+        cur: List[Tuple[int, np.ndarray]] = []
+        cur_bytes = 0
+        for i, leaf in enumerate(leaves):
+            nb = int(np.asarray(leaf).nbytes)
+            if cur and cur_bytes + nb > self.bucket_bytes:
+                buckets.append(Bucket(f"v{version}.b{len(buckets)}",
+                                      version, cur_bytes, cur))
+                cur, cur_bytes = [], 0
+            cur.append((i, leaf))
+            cur_bytes += nb
+        if cur:
+            buckets.append(Bucket(f"v{version}.b{len(buckets)}",
+                                  version, cur_bytes, cur))
+        return buckets
+
+    def publish(self, buckets: List[Bucket]):
+        """Training side: write-once publication of a new version."""
+        if not buckets:
+            return
+        version = buckets[0].version
+        with self._lock:
+            self._buckets[version] = list(buckets)
+            self._latest = max(self._latest, version)
+            # retain only the two most recent versions (bounded store)
+            for v in [v for v in self._buckets if v < self._latest - 1]:
+                del self._buckets[v]
+            self.log.pushes += 1
+
+    def publish_sizes(self, version: int, total_bytes: int):
+        """Sim mode: publish version metadata without payloads."""
+        n = max(1, int(np.ceil(total_bytes / self.bucket_bytes)))
+        per = total_bytes // n
+        self.publish([Bucket(f"v{version}.b{i}", version, per, None)
+                      for i in range(n)])
+
+    def pull_latest(self) -> Optional[List[Bucket]]:
+        """Inference side: fetch the newest complete version's buckets."""
+        with self._lock:
+            if self._latest < 0:
+                return None
+            self.log.pulls += 1
+            return list(self._buckets[self._latest])
+
+    def version_bytes(self, version: Optional[int] = None) -> int:
+        with self._lock:
+            v = self._latest if version is None else version
+            return sum(b.nbytes for b in self._buckets.get(v, []))
+
+
+def flatten_params(params) -> List[np.ndarray]:
+    import jax
+    return [np.asarray(x) for x in jax.tree.leaves(params)]
+
+
+def unflatten_like(params, leaves: List[np.ndarray]):
+    import jax
+    treedef = jax.tree.structure(params)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def push_params(store: MooncakeStore, params, version: int) -> int:
+    """Live-mode publication of real weights. Returns bytes pushed."""
+    leaves = flatten_params(params)
+    buckets = store.bucketize(leaves, version)
+    store.publish(buckets)
+    return sum(b.nbytes for b in buckets)
+
+
+def pull_params(store: MooncakeStore, like) -> Optional[Tuple[Any, int]]:
+    """Live-mode pull: reassemble the latest version into ``like``'s
+    structure. Returns (params, version) or None."""
+    buckets = store.pull_latest()
+    if not buckets:
+        return None
+    import jax
+    n_leaves = len(jax.tree.leaves(like))
+    leaves: List[Optional[np.ndarray]] = [None] * n_leaves
+    for b in buckets:
+        for i, arr in b.payload:
+            leaves[i] = arr
+    if any(x is None for x in leaves):
+        raise RuntimeError("incomplete bucket set")
+    return unflatten_like(like, leaves), buckets[0].version

@@ -1,0 +1,117 @@
+"""Worker abstraction + decorator-based declarations (paper §5.2, Listing 1).
+
+Three decorators configure the data/resource planes:
+
+- ``@register(mode="execute_all")``     — single-controller collective call
+- ``@hw_mapping(hw_affinity={...})``    — task-domain -> hardware routing (R1)
+- ``@register_serverless(attribute=, serverless_url=)`` — offload to the
+  serverless platform (R3)
+
+Decorators only attach metadata; ``Cluster`` (cluster.py) interprets it,
+mirroring the paper's Listing 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+REG_ATTR = "_rollart_register"
+HW_ATTR = "_rollart_hw_mapping"
+SLS_ATTR = "_rollart_serverless"
+
+
+def register(mode: str = "execute_all"):
+    """Single-controller collective invocation across the Worker group."""
+    assert mode in ("execute_all", "execute_rank0")
+
+    def deco(fn: Callable) -> Callable:
+        setattr(fn, REG_ATTR, {"mode": mode})
+        return fn
+    return deco
+
+
+def hw_mapping(hw_affinity: Dict[str, str]):
+    """Route calls to workers on the hardware preferred for the request's
+    ``tag_name`` (task domain). Requires a "default" key."""
+    assert "default" in hw_affinity, "hw_affinity needs a 'default' entry"
+
+    def deco(fn: Callable) -> Callable:
+        setattr(fn, HW_ATTR, {"hw_affinity": dict(hw_affinity)})
+        return fn
+    return deco
+
+
+def register_serverless(attribute: str, serverless_url: str):
+    """Replace ``self.<attribute>`` with a callable that invokes the
+    registered serverless endpoint (scale-to-zero, no dedicated GPUs)."""
+    def deco(fn: Callable) -> Callable:
+        setattr(fn, SLS_ATTR, {"attribute": attribute,
+                               "serverless_url": serverless_url})
+        return fn
+    return deco
+
+
+@dataclasses.dataclass
+class WorkerInfo:
+    worker_id: str
+    role: str
+    resource_type: str = ""     # pool name after binding
+    device_ids: tuple = ()
+
+
+class Worker:
+    """Basic execution unit spanning the resource and data planes."""
+
+    ROLE = "generic"
+    DEFAULT_HW = "CPU"
+    DEVICES_PER_WORKER = 1
+
+    def __init__(self, info: WorkerInfo, **kwargs):
+        self.info = info
+
+    @property
+    def resource_type(self) -> str:
+        return self.info.resource_type
+
+    def setup(self):
+        """Called once after resource binding (load model etc.)."""
+
+    def teardown(self):
+        """Called on release/failure."""
+
+
+class ActorTrainCls(Worker):
+    ROLE = "train"
+    DEFAULT_HW = "H800"       # compute-optimized by default (paper §5.2)
+
+
+class ActorGenCls(Worker):
+    ROLE = "generate"
+    DEFAULT_HW = "H20"        # bandwidth-optimized by default
+
+
+class RewardCls(Worker):
+    ROLE = "reward"
+    DEFAULT_HW = "Serverless"
+
+
+class EnvironmentCls(Worker):
+    ROLE = "environment"
+    DEFAULT_HW = "CPU"
+
+
+def method_declarations(cls) -> Dict[str, Dict[str, Any]]:
+    """Collect decorator metadata from a Worker class."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for name in dir(cls):
+        fn = getattr(cls, name, None)
+        if not callable(fn):
+            continue
+        meta = {}
+        for attr, key in [(REG_ATTR, "register"), (HW_ATTR, "hw_mapping"),
+                          (SLS_ATTR, "serverless")]:
+            if hasattr(fn, attr):
+                meta[key] = getattr(fn, attr)
+        if meta:
+            out[name] = meta
+    return out

@@ -1,0 +1,114 @@
+"""Data pipeline: trajectory packing for RL batches + a synthetic LM corpus
+for the quickstart pretraining example + the multi-task sampler the paper's
+evaluation uses (uniform task sampling, §7.1)."""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Trajectory:
+    """One multi-turn rollout, token-aligned for training.
+
+    ``loss_mask[i] == 1`` iff tokens[i] was produced by the policy (action
+    tokens); environment observations are masked out. ``logprobs`` align with
+    action tokens (0 elsewhere).
+    """
+    traj_id: str
+    task: str
+    tokens: List[int]
+    loss_mask: List[int]
+    logprobs: List[float]
+    reward: float = 0.0
+    group_id: str = ""
+    start_version: int = 0        # weight version at trajectory start
+    version: int = 0              # weight version at completion
+    turns: int = 0
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+
+def pack_batch(trajs: Sequence[Trajectory], seq_len: int,
+               pad_id: int = 0) -> Dict[str, np.ndarray]:
+    """Pack trajectories into fixed [B, seq_len] arrays for train_step."""
+    B = len(trajs)
+    tokens = np.full((B, seq_len), pad_id, np.int32)
+    mask = np.zeros((B, seq_len), np.float32)
+    blp = np.zeros((B, seq_len - 1), np.float32)
+    adv = np.zeros((B,), np.float32)
+    for i, t in enumerate(trajs):
+        n = min(len(t.tokens), seq_len)
+        tokens[i, :n] = t.tokens[:n]
+        mask[i, :n] = t.loss_mask[:n]
+        lp = np.zeros(len(t.tokens), np.float32)
+        lp[: len(t.logprobs)] = 0.0
+        # logprobs are recorded per token (0 for observation tokens)
+        m = min(len(t.logprobs), len(t.tokens))
+        lp[:m] = t.logprobs[:m]
+        blp[i, : n - 1] = lp[1:n]
+        adv[i] = t.reward
+    return {"tokens": tokens, "loss_mask": mask,
+            "behavior_logprobs": blp, "advantages": adv}
+
+
+def group_advantages(trajs: Sequence[Trajectory], group_size: int,
+                     eps: float = 1e-6) -> np.ndarray:
+    """GRPO group-normalized advantages over contiguous groups."""
+    r = np.asarray([t.reward for t in trajs], np.float32)
+    g = r.reshape(-1, group_size)
+    a = (g - g.mean(1, keepdims=True)) / (g.std(1, keepdims=True) + eps)
+    return a.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# synthetic LM corpus (quickstart)
+# ---------------------------------------------------------------------------
+
+_WORDS = ("the agent moves toward reward while the environment returns "
+          "observation state action value policy gradient rollout train "
+          "sample buffer weight sync pod mesh shard expert decode prefill"
+          ).split()
+
+
+def synthetic_corpus(n_docs: int, seed: int = 0) -> List[str]:
+    rng = random.Random(seed)
+    docs = []
+    for _ in range(n_docs):
+        n = rng.randint(8, 40)
+        docs.append(" ".join(rng.choice(_WORDS) for _ in range(n)))
+    return docs
+
+
+def lm_batches(tokenizer, seq_len: int, batch: int, n_steps: int,
+               seed: int = 0):
+    """Yield packed {tokens, mask} LM batches from the synthetic corpus."""
+    rng = random.Random(seed)
+    docs = synthetic_corpus(max(64, batch * 4), seed)
+    stream: List[int] = []
+    for step in range(n_steps):
+        tokens = np.zeros((batch, seq_len), np.int32)
+        for b in range(batch):
+            while len(stream) < seq_len:
+                stream.extend(tokenizer.encode(rng.choice(docs), bos=True,
+                                               eos=True))
+            tokens[b] = stream[:seq_len]
+            del stream[:seq_len]
+        yield {"tokens": tokens}
+
+
+class TaskSampler:
+    """Uniform multi-task sampler (paper §7.1: uniform task sampling)."""
+
+    def __init__(self, tasks: Sequence[str], seed: int = 0,
+                 weights: Optional[Sequence[float]] = None):
+        self.tasks = list(tasks)
+        self.weights = list(weights) if weights else None
+        self._rng = random.Random(seed)
+
+    def sample(self) -> str:
+        if self.weights:
+            return self._rng.choices(self.tasks, weights=self.weights)[0]
+        return self._rng.choice(self.tasks)

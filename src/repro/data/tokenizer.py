@@ -1,0 +1,33 @@
+"""Byte-level tokenizer. IDs: 0=PAD, 1=BOS, 2=EOS, 3..258 = bytes.
+
+Model vocabularies are all >= 512, so byte tokens always fit; text round-trips
+exactly. This is the data-plane tokenizer for live-mode RL (environments speak
+text, the engine speaks tokens).
+"""
+from __future__ import annotations
+
+from typing import List
+
+PAD, BOS, EOS = 0, 1, 2
+OFFSET = 3
+VOCAB_MIN = OFFSET + 256
+
+
+class ByteTokenizer:
+    pad_id, bos_id, eos_id = PAD, BOS, EOS
+    vocab_size = VOCAB_MIN
+
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> List[int]:
+        ids = [b + OFFSET for b in text.encode("utf-8")]
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids) -> str:
+        data = bytes(i - OFFSET for i in ids if OFFSET <= i < OFFSET + 256)
+        return data.decode("utf-8", errors="replace")
+
+
+TOKENIZER = ByteTokenizer()

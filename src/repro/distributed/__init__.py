@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES, axis_rules,
+                                        param_sharding, resolve_spec, shd)

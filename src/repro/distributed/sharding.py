@@ -1,0 +1,280 @@
+"""Logical-axis sharding policy.
+
+Model code annotates activations with *logical* axis names via ``shd(x, ...)``
+and parameters are assigned logical axes by path-based rules. A rule set maps
+logical names -> mesh axes; two built-in rule sets implement the two regimes
+from DESIGN.md §5:
+
+- ``TRAIN_RULES``  : FSDP("data") x TP("model"), batch over ("pod","data").
+- ``SERVE_RULES``  : TP("model") for weights, batch->"data", cache seq->"model".
+
+Outside a mesh context (CPU smoke tests) every annotation is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# rule sets: logical axis name -> mesh axis (or tuple of mesh axes) or None
+# ---------------------------------------------------------------------------
+
+TRAIN_RULES: Dict[str, Any] = {
+    # activations ("seq" -> "model" is Megatron-style sequence parallelism on
+    # the residual stream: scan-carry checkpoints stay sharded, which is what
+    # lets 1M-token batches of the large archs fit v5e HBM)
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_experts": "model",
+    "moe_group": ("pod", "data", "model"),
+    "cache_seq": None,
+    # parameters (FSDP over "data", TP over "model")
+    "vocab": "model",
+    "embed": "data",          # FSDP shard of the d_model dim
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv_in": "data",
+    "mlp": "model",
+    "mlp_in": "data",
+    "experts": "model",
+    "expert_mlp": None,
+    "mamba_inner": "model",
+    "mamba_in": "data",
+    "rwkv_out": "model",
+    "rwkv_in": "data",
+    "ssm_state": None,
+}
+
+SERVE_RULES: Dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_experts": "model",
+    "moe_group": ("pod", "data", "model"),
+    "cache_seq": "model",     # KV cache sequence dim sharded over model axis
+    "cache_kv_heads": None,   # cache seq takes the model axis, not kv heads
+    "rwkv_heads": "model",
+    # parameters: TP on "model" + 2-D weight-stationary sharding over "data"
+    # (MaxText-style serving layout; without it 100B-class archs do not fit
+    # 16 GiB/chip at 16-way TP)
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv_in": "data",
+    "mlp": "model",
+    "mlp_in": "data",
+    "experts": "model",
+    "expert_mlp": "data",
+    "mamba_inner": "model",
+    "mamba_in": "data",
+    "rwkv_out": "model",
+    "rwkv_in": "data",
+    "ssm_state": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Any] = {}
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Dict[str, Any]):
+    """Activate a (mesh, logical-rules) context for model tracing."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def _mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def resolve_spec(logical: Sequence[Optional[str]],
+                 rules: Dict[str, Any],
+                 mesh: Optional[Mesh]) -> P:
+    """Map a tuple of logical names (or None) to a PartitionSpec."""
+    axes_avail = set(_mesh_axes(mesh)) if mesh is not None else set()
+    used = set()
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        ax = rules.get(name, None)
+        if ax is None:
+            out.append(None)
+            continue
+        if isinstance(ax, (tuple, list)):
+            ax_t = tuple(a for a in ax if a in axes_avail and a not in used)
+            used.update(ax_t)
+            out.append(ax_t if ax_t else None)
+        else:
+            if ax in axes_avail and ax not in used:
+                used.add(ax)
+                out.append(ax)
+            else:
+                out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def fit_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes do not divide evenly."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= sizes.get(a, 1)
+        if n <= 1 or shape[i] % n != 0:
+            # try a prefix of the axes that still divides
+            kept = []
+            n = 1
+            for a in axes:
+                if shape[i] % (n * sizes.get(a, 1)) == 0 and sizes.get(a, 1) > 1:
+                    kept.append(a)
+                    n *= sizes.get(a, 1)
+            out.append(tuple(kept) if len(kept) > 1 else
+                       (kept[0] if kept else None))
+        else:
+            out.append(entry)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_active() -> bool:
+    return _CTX.mesh is not None and bool(_CTX.rules)
+
+
+def shd(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical names; no-op without a mesh ctx."""
+    if _CTX.mesh is None or not _CTX.rules:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs logical {logical}")
+    spec = resolve_spec(logical, _CTX.rules, _CTX.mesh)
+    spec = fit_spec(x.shape, spec, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter logical axes, by path pattern
+# ---------------------------------------------------------------------------
+# Patterns are matched against "/".join(path). First match wins. Entries map
+# to a tuple of logical names aligned with the array shape, where a leading
+# "*" means "leave leading (stacked-layer) dims unsharded".
+
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed/tokens$",            ("vocab", "embed")),
+    (r"lm_head/w$",               ("embed", "vocab")),
+    (r".*attn/wq$",               ("*", "qkv_in", "heads", None)),
+    (r".*attn/wk$",               ("*", "qkv_in", "kv_heads", None)),
+    (r".*attn/wv$",               ("*", "qkv_in", "kv_heads", None)),
+    (r".*attn/wo$",               ("*", "heads", None, "qkv_in")),
+    (r".*attn/(q_norm|k_norm)$",  ("*", None)),
+    (r".*mlp/w_gate$",            ("*", "mlp_in", "mlp")),
+    (r".*mlp/w_up$",              ("*", "mlp_in", "mlp")),
+    (r".*mlp/w_down$",            ("*", "mlp", "mlp_in")),
+    (r".*moe/router$",            ("*", "mlp_in", None)),
+    (r".*moe/w_gate$",            ("*", "experts", "mlp_in", "expert_mlp")),
+    (r".*moe/w_up$",              ("*", "experts", "mlp_in", "expert_mlp")),
+    (r".*moe/w_down$",            ("*", "experts", "expert_mlp", "mlp_in")),
+    (r".*moe/shared_.*$",         ("*", "mlp_in", "mlp")),
+    (r".*moe/shared_down$",       ("*", "mlp", "mlp_in")),
+    (r".*mamba/in_proj$",         ("*", "mamba_in", "mamba_inner")),
+    (r".*mamba/conv_w$",          ("*", None, "mamba_inner")),
+    (r".*mamba/conv_b$",          ("*", "mamba_inner")),
+    (r".*mamba/x_proj$",          ("*", "mamba_inner", None)),
+    (r".*mamba/dt_proj$",         ("*", None, "mamba_inner")),
+    (r".*mamba/dt_bias$",         ("*", "mamba_inner")),
+    (r".*mamba/A_log$",           ("*", "mamba_inner", "ssm_state")),
+    (r".*mamba/D$",               ("*", "mamba_inner")),
+    (r".*mamba/out_proj$",        ("*", "mamba_inner", "mamba_in")),
+    (r".*rwkv/w[rkvg]$",          ("*", "rwkv_in", "rwkv_out")),
+    (r".*rwkv/wo$",               ("*", "rwkv_out", "rwkv_in")),
+    (r".*rwkv/(decay_w1)$",       ("*", "rwkv_in", None)),
+    (r".*rwkv/(decay_w2)$",       ("*", None, "rwkv_out")),
+    (r".*rwkv/(decay_bias|bonus)$", ("*", "rwkv_out")),
+    (r".*(norm|scale)",           ("*", None)),
+    (r".*",                       ()),  # fallback: replicate
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def logical_axes_for_path(path, ndim: int) -> Tuple[Optional[str], ...]:
+    s = _path_str(path)
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, s):
+            if not axes:
+                return (None,) * ndim
+            if axes[0] == "*":
+                tail = axes[1:]
+                pad = ndim - len(tail)
+                if pad < 0:  # array has fewer dims than rule tail (unstacked)
+                    return tail[-ndim:]
+                return (None,) * pad + tail
+            if len(axes) != ndim:
+                pad = ndim - len(axes)
+                return ((None,) * pad + axes) if pad > 0 else axes[-ndim:]
+            return axes
+    return (None,) * ndim
+
+
+def param_sharding(params, mesh: Mesh, rules: Dict[str, Any]):
+    """NamedSharding pytree for a parameter (or ShapeDtypeStruct) pytree."""
+    def one(path, leaf):
+        axes = logical_axes_for_path(path, np.ndim(leaf))
+        spec = resolve_spec(axes, rules, mesh)
+        spec = fit_spec(np.shape(leaf), spec, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_spec_tree(params_shape, mesh, rules):
+    """Same as param_sharding but over a ShapeDtypeStruct tree."""
+    return param_sharding(params_shape, mesh, rules)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

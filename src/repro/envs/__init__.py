@@ -1,0 +1,18 @@
+from repro.envs.base import EnvError, LatencyProfile, TextEnv
+from repro.envs.frozen_lake import FrozenLakeEnv
+from repro.envs.game_env import GameEnv
+from repro.envs.math_env import MathEnv
+from repro.envs.swe_sim import SWEEnv
+from repro.envs.webshop_sim import WebShopEnv
+
+ENV_CLASSES = {
+    "frozenlake": FrozenLakeEnv,
+    "math": MathEnv,
+    "webshop": WebShopEnv,
+    "swe": SWEEnv,
+    "game": GameEnv,
+}
+
+
+def make_env(task: str, seed: int = 0) -> TextEnv:
+    return ENV_CLASSES[task](seed=seed)

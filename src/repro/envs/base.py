@@ -1,0 +1,89 @@
+"""Agentic environment interface + latency/failure injection.
+
+Environments are real, stateful Python processes (the paper's Table 1
+taxonomy). ``LatencyProfile`` models the §3 characterization — heavy-tailed
+env.reset (Docker pulls, host contention) and env.step, plus outright
+failures (~1/10 iterations in production) — and is used by both the live
+runner (as bookkeeping) and the discrete-event simulator (as virtual time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class LatencyProfile:
+    """Long-tail latency + failure model for env.reset / env.step."""
+    reset_mean_s: float = 8.0
+    reset_tail_prob: float = 0.05
+    reset_tail_s: Tuple[float, float] = (60.0, 300.0)   # uniform range
+    step_mean_s: float = 1.0
+    step_tail_prob: float = 0.03
+    step_tail_s: Tuple[float, float] = (5.0, 60.0)
+    reset_failure_prob: float = 0.01
+    step_failure_prob: float = 0.002
+
+    def sample_reset(self, rng: random.Random) -> Tuple[float, bool]:
+        """Returns (latency_s, failed)."""
+        if rng.random() < self.reset_failure_prob:
+            return rng.uniform(*self.reset_tail_s), True
+        if rng.random() < self.reset_tail_prob:
+            return rng.uniform(*self.reset_tail_s), False
+        return max(0.1, rng.expovariate(1.0 / self.reset_mean_s)), False
+
+    def sample_step(self, rng: random.Random) -> Tuple[float, bool]:
+        if rng.random() < self.step_failure_prob:
+            return rng.uniform(*self.step_tail_s), True
+        if rng.random() < self.step_tail_prob:
+            return rng.uniform(*self.step_tail_s), False
+        return max(0.01, rng.expovariate(1.0 / self.step_mean_s)), False
+
+
+class EnvError(RuntimeError):
+    """Environment failure (timeout, container crash, ...)."""
+
+
+class TextEnv:
+    """Multi-turn text environment: observations and actions are strings."""
+
+    TASK = "generic"
+    MODALITY = "text"
+    MAX_TURNS = 10
+    LATENCY = LatencyProfile()
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+        self.turns = 0
+        self.done = False
+        self.total_reward = 0.0
+
+    # -- API -----------------------------------------------------------
+    def reset(self, seed: Optional[int] = None) -> str:
+        """Initialize; returns the first observation (prompt)."""
+        if seed is not None:
+            self.rng = random.Random(seed)
+        self.turns = 0
+        self.done = False
+        self.total_reward = 0.0
+        return self._reset()
+
+    def step(self, action: str) -> Tuple[str, float, bool, Dict]:
+        """Apply an action; returns (observation, reward, done, info)."""
+        if self.done:
+            raise EnvError("step() on finished environment")
+        self.turns += 1
+        obs, reward, done, info = self._step(action)
+        self.total_reward += reward
+        if self.turns >= self.MAX_TURNS:
+            done = True
+        self.done = done
+        return obs, reward, done, info
+
+    # -- to implement ----------------------------------------------------
+    def _reset(self) -> str:
+        raise NotImplementedError
+
+    def _step(self, action: str) -> Tuple[str, float, bool, Dict]:
+        raise NotImplementedError

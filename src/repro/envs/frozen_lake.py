@@ -1,0 +1,72 @@
+"""FrozenLake (Table 1: game, 20-100 turns, prefill-heavy): a real 4x4/8x8
+gridworld with slippery ice, rendered as text. The agent must reach G
+avoiding holes H. Many short turns with a growing observation history make
+this the paper's canonical prefill-heavy task.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.envs.base import LatencyProfile, TextEnv
+
+MAPS = {
+    4: ["SFFF", "FHFH", "FFFH", "HFFG"],
+    8: ["SFFFFFFF", "FFFFFFFF", "FFFHFFFF", "FFFFFHFF",
+        "FFFHFFFF", "FHHFFFHF", "FHFFHFHF", "FFFHFFFG"],
+}
+ACTIONS = {"left": (0, -1), "down": (1, 0), "right": (0, 1), "up": (-1, 0)}
+
+
+class FrozenLakeEnv(TextEnv):
+    TASK = "frozenlake"
+    MODALITY = "text+visual"
+    MAX_TURNS = 100
+    LATENCY = LatencyProfile(reset_mean_s=3.0, step_mean_s=0.2,
+                             step_tail_prob=0.005, step_tail_s=(2.0, 10.0),
+                             reset_failure_prob=0.002,
+                             step_failure_prob=0.0002)
+
+    def __init__(self, seed: int = 0, size: int = 4, slippery: bool = False):
+        super().__init__(seed)
+        self.size = size
+        self.grid = MAPS[size]
+        self.slippery = slippery
+        self.pos = (0, 0)
+
+    def _render(self) -> str:
+        rows = []
+        for r, row in enumerate(self.grid):
+            line = "".join("A" if (r, c) == self.pos else ch
+                           for c, ch in enumerate(row))
+            rows.append(line)
+        return "\n".join(rows)
+
+    def _reset(self) -> str:
+        self.pos = (0, 0)
+        return (f"FrozenLake {self.size}x{self.size}. Reach G, avoid H. "
+                f"Actions: left/down/right/up.\n{self._render()}\nmove:")
+
+    def _parse(self, action: str):
+        a = action.strip().lower()
+        for name in ACTIONS:
+            if name in a:
+                return name
+        return None
+
+    def _step(self, action: str) -> Tuple[str, float, bool, Dict]:
+        name = self._parse(action)
+        if name is None:
+            return (f"invalid action.\n{self._render()}\nmove:",
+                    -0.05, False, {"invalid": True})
+        dr, dc = ACTIONS[name]
+        if self.slippery and self.rng.random() < 0.2:
+            dr, dc = self.rng.choice(list(ACTIONS.values()))
+        r = min(max(self.pos[0] + dr, 0), self.size - 1)
+        c = min(max(self.pos[1] + dc, 0), self.size - 1)
+        self.pos = (r, c)
+        cell = self.grid[r][c]
+        if cell == "H":
+            return f"fell in a hole at {r},{c}.", -1.0, True, {}
+        if cell == "G":
+            return "reached the goal!", 1.0, True, {}
+        return f"{self._render()}\nmove:", -0.01, False, {}

@@ -1,0 +1,44 @@
+"""GEM-game style environment (Table 1: game, 1 turn): single-turn guessing
+game with chain-of-thought — pure decode-heavy workload.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.envs.base import LatencyProfile, TextEnv
+
+
+class GameEnv(TextEnv):
+    TASK = "game"
+    MODALITY = "text"
+    MAX_TURNS = 1
+    LATENCY = LatencyProfile(reset_mean_s=0.3, step_mean_s=0.05,
+                             reset_tail_prob=0.005, step_tail_prob=0.002)
+
+    def __init__(self, seed: int = 0):
+        super().__init__(seed)
+        self.a = 0
+        self.b = 0
+
+    def _reset(self) -> str:
+        self.a = self.rng.randint(2, 9)
+        self.b = self.rng.randint(2, 9)
+        return (f"Game: I multiply {self.a} by {self.b} then add {self.a}. "
+                "Reply with 'answer: <number>'.")
+
+    def _step(self, action: str) -> Tuple[str, float, bool, Dict]:
+        target = self.a * self.b + self.a
+        a = action.strip().lower()
+        guess = None
+        if "answer:" in a:
+            tail = a.split("answer:", 1)[1].strip().split()
+            try:
+                guess = int(tail[0]) if tail else None
+            except ValueError:
+                guess = None
+        return ("correct!" if guess == target else
+                f"wrong, it was {target}."), \
+            (1.0 if guess == target else 0.0), True, {}
+
+
+ENV_CLASSES = None  # populated in envs/__init__.py

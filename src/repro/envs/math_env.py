@@ -1,0 +1,68 @@
+"""GEM-math style environment (Table 1: math + tool use, <5 turns,
+decode-heavy): the agent solves arithmetic chains, optionally calling a
+calculator tool with ``calc: <expr>``; a final ``answer: <n>`` ends the
+episode. Few turns + long chains of thought per action = decode-heavy.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, Tuple
+
+from repro.envs.base import LatencyProfile, TextEnv
+
+
+def _gen_problem(rng: random.Random, depth: int = 3):
+    val = rng.randint(1, 9)
+    expr = str(val)
+    for _ in range(depth):
+        op = rng.choice(["+", "-", "*"])
+        nxt = rng.randint(1, 9)
+        expr = f"({expr} {op} {nxt})"
+        val = {"+": val + nxt, "-": val - nxt, "*": val * nxt}[op]
+    return expr, val
+
+
+class MathEnv(TextEnv):
+    TASK = "math"
+    MODALITY = "text"
+    MAX_TURNS = 5
+    LATENCY = LatencyProfile(reset_mean_s=0.5, step_mean_s=0.1,
+                             reset_tail_prob=0.01, step_tail_prob=0.005)
+
+    def __init__(self, seed: int = 0, depth: int = 3):
+        super().__init__(seed)
+        self.depth = depth
+        self.expr = ""
+        self.answer = 0
+
+    def _reset(self) -> str:
+        self.expr, self.answer = _gen_problem(self.rng, self.depth)
+        return (f"Compute {self.expr}. Use 'calc: <expr>' for a calculator "
+                f"or finish with 'answer: <number>'.")
+
+    def _safe_eval(self, expr: str):
+        if not all(ch in "0123456789+-*() ." for ch in expr):
+            return None
+        try:
+            return eval(expr, {"__builtins__": {}})  # noqa: S307 - filtered
+        except Exception:
+            return None
+
+    def _step(self, action: str) -> Tuple[str, float, bool, Dict]:
+        a = action.strip().lower()
+        if "calc:" in a:
+            expr = a.split("calc:", 1)[1].strip().splitlines()[0]
+            val = self._safe_eval(expr)
+            if val is None:
+                return "calculator error.", -0.02, False, {"tool": "err"}
+            return f"calculator: {expr} = {val}", 0.0, False, {"tool": "ok"}
+        if "answer:" in a:
+            tail = a.split("answer:", 1)[1].strip().split()
+            try:
+                guess = int(tail[0]) if tail else None
+            except ValueError:
+                guess = None
+            if guess == self.answer:
+                return "correct!", 1.0, True, {}
+            return f"wrong (expected {self.answer}).", 0.0, True, {}
+        return "use 'calc:' or 'answer:'.", -0.02, False, {"invalid": True}

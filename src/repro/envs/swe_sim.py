@@ -1,0 +1,91 @@
+"""SWE-bench-style environment (Table 1: SWE, 30-50 turns): the agent
+explores a tiny repository (ls/cat/grep), then submits a patch fixing an
+injected single-line bug. Containerized-sandbox behavior — the heaviest
+reset latency and the highest failure rates of the taxonomy — is modeled by
+its LatencyProfile (env.reset tails of hundreds of seconds, §3 Fig. 3/5).
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Tuple
+
+from repro.envs.base import LatencyProfile, TextEnv
+
+_FILES = {
+    "calc.py": [
+        "def add(a, b):",
+        "    return a + b",
+        "",
+        "def mul(a, b):",
+        "    return a * b",
+    ],
+    "utils.py": [
+        "def clamp(x, lo, hi):",
+        "    return max(lo, min(x, hi))",
+        "",
+        "def mean(xs):",
+        "    return sum(xs) / len(xs)",
+    ],
+}
+_BUGS = [
+    ("calc.py", 1, "    return a - b", "    return a + b"),
+    ("calc.py", 4, "    return a + b", "    return a * b"),
+    ("utils.py", 1, "    return min(lo, max(x, hi))",
+     "    return max(lo, min(x, hi))"),
+    ("utils.py", 4, "    return sum(xs) * len(xs)",
+     "    return sum(xs) / len(xs)"),
+]
+
+
+class SWEEnv(TextEnv):
+    TASK = "swe"
+    MODALITY = "text"
+    MAX_TURNS = 50
+    LATENCY = LatencyProfile(reset_mean_s=25.0, reset_tail_prob=0.08,
+                             reset_tail_s=(60.0, 200.0),
+                             step_mean_s=2.0, step_tail_prob=0.02,
+                             step_tail_s=(5.0, 30.0),
+                             reset_failure_prob=0.01,
+                             step_failure_prob=0.0005)
+
+    def __init__(self, seed: int = 0):
+        super().__init__(seed)
+        self.files: Dict[str, List[str]] = {}
+        self.bug = _BUGS[0]
+
+    def _reset(self) -> str:
+        self.files = {k: list(v) for k, v in _FILES.items()}
+        self.bug = self.rng.choice(_BUGS)
+        fname, line, broken, _ = self.bug
+        self.files[fname][line] = broken
+        return ("A test is failing in this repo. Find and fix the bug.\n"
+                "Actions: 'ls', 'cat: <file>', "
+                "'patch: <file>:<line>:<new code>', 'submit'.")
+
+    def _step(self, action: str) -> Tuple[str, float, bool, Dict]:
+        a = action.strip()
+        low = a.lower()
+        if low.startswith("ls") or " ls" in low[:6]:
+            return " ".join(sorted(self.files)), 0.0, False, {}
+        if "cat:" in low:
+            fname = a.split(":", 1)[1].strip().split()[0]
+            if fname not in self.files:
+                return f"no such file {fname}.", -0.02, False, {}
+            body = "\n".join(f"{i}: {l}"
+                             for i, l in enumerate(self.files[fname]))
+            return body, 0.0, False, {}
+        if "patch:" in low:
+            try:
+                payload = a.split("patch:", 1)[1]
+                fname, line_s, code = payload.split(":", 2)
+                fname, line = fname.strip(), int(line_s)
+                self.files[fname][line] = code.rstrip("\n")
+                return f"patched {fname}:{line}.", 0.0, False, {}
+            except Exception:
+                return "malformed patch.", -0.05, False, {}
+        if "submit" in low:
+            fname, line, _, fixed = self.bug
+            ok = self.files[fname][line].strip() == fixed.strip()
+            return ("tests pass!" if ok else "tests still fail."), \
+                (1.0 if ok else 0.0), True, {}
+        return "unknown command.", -0.02, False, {"invalid": True}

@@ -1,0 +1,77 @@
+"""WebShop-style environment (Table 1: web, 5-30 turns): navigate a small
+product catalog with search/click/buy actions to satisfy an instruction.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Tuple
+
+from repro.envs.base import LatencyProfile, TextEnv
+
+CATEGORIES = ["shoes", "lamp", "mug", "jacket", "keyboard", "chair"]
+COLORS = ["red", "blue", "black", "white", "green"]
+
+
+class WebShopEnv(TextEnv):
+    TASK = "webshop"
+    MODALITY = "text"
+    MAX_TURNS = 30
+    LATENCY = LatencyProfile(reset_mean_s=5.0, step_mean_s=0.8,
+                             step_tail_prob=0.02, step_tail_s=(2.0, 15.0),
+                             reset_failure_prob=0.003,
+                             step_failure_prob=0.0003)
+
+    def __init__(self, seed: int = 0, catalog_size: int = 30):
+        super().__init__(seed)
+        self.catalog_size = catalog_size
+        self.catalog: List[Dict] = []
+        self.target: Dict = {}
+        self.results: List[int] = []
+        self.viewing = -1
+
+    def _reset(self) -> str:
+        self.catalog = [
+            {"id": i,
+             "cat": self.rng.choice(CATEGORIES),
+             "color": self.rng.choice(COLORS),
+             "price": self.rng.randint(5, 200)}
+            for i in range(self.catalog_size)]
+        self.target = self.rng.choice(self.catalog)
+        self.results, self.viewing = [], -1
+        return (f"Find and buy: a {self.target['color']} "
+                f"{self.target['cat']} under ${self.target['price'] + 10}. "
+                "Actions: 'search: <words>', 'click: <id>', 'buy'.")
+
+    def _step(self, action: str) -> Tuple[str, float, bool, Dict]:
+        a = action.strip().lower()
+        if "search:" in a:
+            q = a.split("search:", 1)[1].strip()
+            self.results = [p["id"] for p in self.catalog
+                            if p["cat"] in q or p["color"] in q][:5]
+            if not self.results:
+                return "no results.", -0.02, False, {}
+            lines = [f"[{i}] {self.catalog[i]['color']} "
+                     f"{self.catalog[i]['cat']} ${self.catalog[i]['price']}"
+                     for i in self.results]
+            return "results:\n" + "\n".join(lines), 0.0, False, {}
+        if "click:" in a:
+            try:
+                pid = int(a.split("click:", 1)[1].strip().split()[0])
+            except (ValueError, IndexError):
+                return "bad id.", -0.02, False, {}
+            if pid not in range(self.catalog_size):
+                return "unknown product.", -0.02, False, {}
+            self.viewing = pid
+            p = self.catalog[pid]
+            return (f"viewing [{pid}]: {p['color']} {p['cat']} "
+                    f"${p['price']}. 'buy' to purchase."), 0.0, False, {}
+        if "buy" in a:
+            if self.viewing < 0:
+                return "nothing selected.", -0.05, False, {}
+            p = self.catalog[self.viewing]
+            hit = (p["cat"] == self.target["cat"]
+                   and p["color"] == self.target["color"])
+            return ("purchased. " + ("correct item!" if hit else
+                                     "wrong item."),
+                    1.0 if hit else 0.1, True, {})
+        return "unknown action.", -0.02, False, {"invalid": True}

@@ -1,0 +1,107 @@
+"""Pallas TPU decode attention: one new token against a long KV cache (the
+decode_32k / long_500k serving hot path).
+
+Grid: (batch*heads, kv_blocks); kv_blocks iterates sequentially so the
+online-softmax scratch persists per (batch, head). Cache positions >=
+``lengths[b]`` are masked. The cache block stream is the bandwidth-bound
+working set this kernel tiles through VMEM — exactly the workload the
+paper routes to bandwidth-optimized hardware (R1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_k: int, heads: int):
+    ik = pl.program_id(1)
+    nk = pl.num_programs(1)
+    bh = pl.program_id(0)
+    b = bh // heads
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(ik * block_k < length)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)             # [1, hd]
+        k = k_ref[0].astype(jnp.float32)             # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        idx = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        s = jnp.where(idx < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     block_k: int = 256, scale: Optional[float] = None,
+                     interpret: bool = True):
+    """q: [B,H,hd]; caches: [B,kvH,S,hd]; lengths: [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    kvH, S = k_cache.shape[1], k_cache.shape[2]
+    assert H % kvH == 0
+    G = H // kvH
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(B * H, 1, hd)
+    kf = k_cache.reshape(B * kvH, S, hd)
+    vf = v_cache.reshape(B * kvH, S, hd)
+
+    def q_map(bh, ik):
+        return (bh, 0, 0)
+
+    def kv_map(bh, ik):
+        b = bh // H
+        h = bh % H
+        return (b * kvH + h // G, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=block_k, heads=H),
+        grid=(B * H, S // block_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # lengths, whole array
+            pl.BlockSpec((1, 1, hd), q_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(B, H, hd)

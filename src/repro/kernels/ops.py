@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+interpreter executes kernel bodies in Python for correctness validation)
+and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 256,
+                     interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _decode(q, k_cache, v_cache, lengths, block_k=block_k,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, lw, u, *, chunk: int = 32,
+               interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _rwkv6(r, k, v, lw, u, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan(x, delta, Bm, Cm, A_log, D, *, chunk: int = 64,
+               block_d: int = 128, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _mamba(x, delta, Bm, Cm, A_log, D, chunk=chunk, block_d=block_d,
+                  interpret=interpret)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+the per-kernel tests assert against)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_ref(q, k, v, causal: bool = True,
+              scale: Optional[float] = None):
+    """q: [B,H,S,hd]; k/v: [B,kvH,S,hd] -> [B,H,S,hd] (fp32 math)."""
+    B, H, S, hd = q.shape
+    kvH = k.shape[1]
+    G = H // kvH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, kvH, G, S, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bkth->bkgsh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def decode_ref(q, k_cache, v_cache, lengths,
+               scale: Optional[float] = None):
+    """q: [B,H,hd]; caches: [B,kvH,S,hd]; lengths: [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    kvH, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // kvH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, kvH, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bkth->bkgt", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < lengths[:, None]      # [B,S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bkth->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, lw, u, S0=None):
+    """Sequential WKV6 recurrence (the definitional oracle).
+
+    r/k/v/lw: [B,S,H,hd] (lw = clamped log decay, fp32); u: [H,hd];
+    S0: [B,H,hd,hd]. Returns (y [B,S,H,hd] fp32, S_out)."""
+    B, S, H, hd = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(lw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(Sst, xs):
+        r_t, k_t, v_t, w_t = xs                       # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]    # [B,H,hd,hd]
+        y = jnp.einsum("bhe,bhef->bhf", r_t,
+                       Sst + uf[None, :, :, None] * kv)
+        S_new = w_t[..., None] * Sst + kv
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, w))
+    S_out, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S_out
+
+
+def mamba_ref(x, delta, Bm, Cm, A_log, D, h0=None):
+    """Sequential selective scan oracle.
+
+    x/delta: [B,S,di]; Bm/Cm: [B,S,ds]; A_log: [di,ds] (A = -exp(A_log));
+    D: [di]. Returns (y [B,S,di] fp32, h_out [B,di,ds])."""
+    B, S, di = x.shape
+    ds = A_log.shape[1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+    xf = x.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+
+    def step(h, xs):
+        x_t, d_t, B_t, C_t = xs
+        a = jnp.exp(d_t[..., None] * A[None])          # [B,di,ds]
+        b = (d_t * x_t)[..., None] * B_t[:, None, :]
+        h = a * h + b
+        y = jnp.sum(h * C_t[:, None, :], axis=-1) + D[None] * x_t
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0)
+               for t in (xf, df, Bm.astype(jnp.float32),
+                         Cm.astype(jnp.float32)))
+    h_out, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_out

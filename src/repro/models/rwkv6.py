@@ -1,0 +1,180 @@
+"""RWKV6 ("Finch") time-mix: linear attention with data-dependent per-channel
+decay, computed in the chunked formulation (intra-chunk matmuls + inter-chunk
+associative scan over boundary states). Loop-free, MXU-friendly, and the same
+algorithm the Pallas kernel (repro.kernels.rwkv6_scan) implements with VMEM
+tiles.
+
+Recurrence (per head, state S in R^{hd x hd}):
+    y_t = r_t @ (S_{t-1} + (u * k_t)^T v_t)
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t
+with w_t = exp(-exp(decay(x_t))) in (0,1), per channel.
+
+Numerical note: log-decay is clamped to [LW_MIN, LW_MAX] so that within a
+chunk of RWKV_CHUNK tokens every intermediate exponent stays < 88 (fp32 exp
+overflow); the clamp is inherited by the Pallas kernel and documented in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shd
+from repro.models.layers import dense_init, dt, pdt
+
+RWKV_CHUNK = 32
+LW_MIN = -2.5        # per-token log-decay floor: 32 * 2.5 = 80 < 88
+LW_MAX = -1e-4
+DECAY_LORA = 64
+
+
+def init_rwkv(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "wr": dense_init(ks[0], (d, d), pdt(cfg)),
+        "wk": dense_init(ks[1], (d, d), pdt(cfg)),
+        "wv": dense_init(ks[2], (d, d), pdt(cfg)),
+        "wg": dense_init(ks[3], (d, d), pdt(cfg)),
+        "wo": dense_init(ks[4], (d, d), pdt(cfg)),
+        "decay_w1": dense_init(ks[5], (d, DECAY_LORA), pdt(cfg)),
+        "decay_w2": dense_init(ks[6], (DECAY_LORA, d), pdt(cfg)),
+        "decay_bias": jnp.full((d,), 0.0, jnp.float32),
+        "bonus": dense_init(ks[7], (d,), jnp.float32, scale=0.5),
+        # token-shift lerp coefficients for r/k/v/g/w
+        "mu": jnp.full((5, d), 0.5, pdt(cfg)),
+    }
+
+
+def _projections(p, cfg: ModelConfig, x, prev_x):
+    """Token-shifted projections. x: [B,S,d]; prev_x: [B,d] (state)."""
+    cdt = dt(cfg)
+    xs = jnp.concatenate([prev_x[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(cdt)
+
+    def mix(i):
+        return x * mu[i] + xs * (1.0 - mu[i])
+
+    r = jnp.einsum("bsd,de->bse", mix(0), p["wr"].astype(cdt))
+    k = jnp.einsum("bsd,de->bse", mix(1), p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,de->bse", mix(2), p["wv"].astype(cdt))
+    g = jnp.einsum("bsd,de->bse", mix(3), p["wg"].astype(cdt))
+    dec = jnp.einsum("bsd,dl->bsl", mix(4), p["decay_w1"].astype(cdt))
+    dec = jnp.einsum("bsl,ld->bsd", jnp.tanh(dec), p["decay_w2"].astype(cdt))
+    lw = -jnp.exp(dec.astype(jnp.float32) + p["decay_bias"])
+    lw = jnp.clip(lw, LW_MIN, LW_MAX)                    # log-decay [B,S,d]
+    return r, k, v, g, lw
+
+
+def _heads(x, H: int):
+    B, S, d = x.shape
+    return x.reshape(B, S, H, d // H)
+
+
+def _chunked_wkv(r, k, v, lw, u, S0):
+    """Chunked WKV6. r/k/v/lw: [B,S,H,hd] (lw fp32); u: [H,hd];
+    S0: [B,H,hd,hd] initial state. Returns (y [B,S,H,hd], S_out)."""
+    B, S, H, hd = r.shape
+    C = min(RWKV_CHUNK, S)
+    while S % C:   # largest chunk size <= RWKV_CHUNK dividing S
+        C -= 1
+    nc = S // C
+    rt = r.reshape(B, nc, C, H, hd).astype(jnp.float32)
+    kt = k.reshape(B, nc, C, H, hd).astype(jnp.float32)
+    vt = v.reshape(B, nc, C, H, hd).astype(jnp.float32)
+    lwt = lw.reshape(B, nc, C, H, hd)
+
+    cs = jnp.cumsum(lwt, axis=2)                         # [B,nc,C,H,hd]
+    total = cs[:, :, -1]                                 # [B,nc,H,hd]
+
+    # intra-chunk: scores[i,j] = sum_hd r_i k_j exp(cs_{i-1} - cs_j), j < i
+    q_in = rt * jnp.exp(cs - lwt)                        # exp(cs_{i-1})
+    k_in = kt * jnp.exp(-cs)
+    scores = jnp.einsum("bnihe,bnjhe->bnhij", q_in, k_in)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    # u-bonus diagonal
+    diag = jnp.einsum("bnihe,he,bnihe->bnih", rt, u.astype(jnp.float32), kt)
+    y_intra = jnp.einsum("bnhij,bnjhe->bnihe", scores, vt) \
+        + diag[..., None] * vt
+
+    # inter-chunk boundary states: S_c = diag(exp(total_c)) S_{c-1} + T_c
+    # T_c = sum_j exp(total_c - cs_j) k_j (x) v_j
+    k_tail = kt * jnp.exp(total[:, :, None] - cs)        # [B,nc,C,H,hd]
+    T = jnp.einsum("bnjhe,bnjhf->bnhef", k_tail, vt)     # [B,nc,H,hd,hd]
+    decay = jnp.exp(total)                               # [B,nc,H,hd]
+
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, a2[..., None] * s1 + s2
+
+    a_cum, S_cum = jax.lax.associative_scan(combine, (decay, T), axis=1)
+    # state entering chunk c is S_{c-1} (with S0 folded in)
+    S_in = jnp.concatenate(
+        [S0[:, None], S_cum[:, :-1]
+         + (a_cum[:, :-1, ..., None] * S0[:, None])], axis=1)
+    y_inter = jnp.einsum("bnihe,bnhef->bnihf", q_in, S_in)
+    S_out = S_cum[:, -1] + a_cum[:, -1, ..., None] * S0
+
+    y = (y_intra + y_inter).reshape(B, S, H, hd)
+    return y, S_out
+
+
+def _groupnorm_heads(y, eps: float):
+    """Per-head layernorm on the wkv output (RWKV's GroupNorm)."""
+    yf = y.astype(jnp.float32)
+    mean = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    return (yf - mean) * jax.lax.rsqrt(var + eps)
+
+
+def rwkv_fwd(p, cfg: ModelConfig, x, prev_x=None, S0=None,
+             return_state: bool = False):
+    """Full-sequence RWKV6 time-mix. x: [B,S,d]."""
+    B, S, d = x.shape
+    H, hd = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    cdt = dt(cfg)
+    if prev_x is None:
+        prev_x = jnp.zeros((B, d), cdt)
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    r, k, v, g, lw = _projections(p, cfg, x, prev_x)
+    u = p["bonus"].reshape(H, hd)
+    y, S_out = _chunked_wkv(_heads(r, H), _heads(k, H), _heads(v, H),
+                            _heads(lw, H), u, S0)
+    y = _groupnorm_heads(y, cfg.norm_eps).reshape(B, S, d)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(cdt)
+    y = shd(y, "batch", "seq", "rwkv_out")
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(cdt))
+    if return_state:
+        return out, x[:, -1, :], S_out
+    return out
+
+
+def rwkv_decode(p, cfg: ModelConfig, x, prev_x, S0):
+    """Single-token step. x: [B,1,d]; prev_x: [B,d]; S0: [B,H,hd,hd]."""
+    B, _, d = x.shape
+    H, hd = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    cdt = dt(cfg)
+    r, k, v, g, lw = _projections(p, cfg, x, prev_x)
+    rh, kh, vh = (_heads(t, H)[:, 0].astype(jnp.float32) for t in (r, k, v))
+    lwh = _heads(lw, H)[:, 0]                            # [B,H,hd]
+    u = p["bonus"].reshape(H, hd)
+    kv = kh[..., :, None] * vh[..., None, :]             # [B,H,hd,hd]
+    y = jnp.einsum("bhe,bhef->bhf", rh, S0 + u[None, :, :, None] * kv)
+    S_out = jnp.exp(lwh)[..., None] * S0 + kv
+    y = _groupnorm_heads(y, cfg.norm_eps).reshape(B, 1, d)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(cdt)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(cdt))
+    return out, x[:, 0, :], S_out
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> Tuple:
+    H, hd = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    prev_x = jnp.zeros((batch, cfg.d_model), dt(cfg))
+    S = jnp.zeros((batch, H, hd, hd), jnp.float32)
+    return prev_x, S

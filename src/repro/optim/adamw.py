@@ -1,0 +1,82 @@
+"""AdamW with global-norm gradient clipping, implemented directly in JAX
+(no optax dependency is available in this container)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    mu: Any                    # first moment (pytree like params)
+    nu: Any                    # second moment
+
+
+class AdamW(NamedTuple):
+    lr: Callable[[jnp.ndarray], jnp.ndarray]   # schedule: step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = global_norm(grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** step), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** step), nu)
+        lr = self.lr(step)
+
+        def upd(p, m, v):
+            u = m / (jnp.sqrt(v) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu_hat, nu_hat)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu), gnorm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f

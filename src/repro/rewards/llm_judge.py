@@ -1,0 +1,50 @@
+"""LLM-as-a-Judge reward (paper: Qwen2.5-7B validates math reasoning).
+
+The judge is a frozen LM scoring the trajectory text; because its weights
+never train, it is a stateless function (R3) and deploys behind the
+serverless platform instead of holding dedicated GPUs at 7% utilization.
+Live mode runs a tiny judge model on CPU; the score is the judge's mean
+action-token log-likelihood (a fluency/consistency proxy) blended with the
+environment return.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models.model import Model
+from repro.rl.losses import token_logprobs
+
+
+class LLMJudge:
+    def __init__(self, cfg: Optional[ModelConfig] = None, seed: int = 0,
+                 env_weight: float = 0.8):
+        self.cfg = cfg or get_config("tiny")
+        self.model = Model(self.cfg, remat=False)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.env_weight = env_weight
+        self._score_jit = jax.jit(self._score)
+
+    def _score(self, tokens, mask):
+        logits, _ = self.model.forward(params=self.params, tokens=tokens)
+        lp = token_logprobs(logits, tokens)
+        m = mask[:, 1:]
+        mean_lp = (lp * m).sum() / jnp.clip(m.sum(), 1.0)
+        # map mean logprob (-inf..0) to (0..1)
+        return jnp.exp(jnp.clip(mean_lp / 4.0, -20.0, 0.0))
+
+    def __call__(self, traj_payload: Dict) -> float:
+        tokens = traj_payload.get("tokens", [])
+        mask = traj_payload.get("loss_mask", [1] * len(tokens))
+        if len(tokens) < 2:
+            return float(traj_payload.get("env_return", 0.0))
+        n = min(len(tokens), 512)
+        t = jnp.asarray([tokens[:n]], jnp.int32)
+        m = jnp.asarray([mask[:n]], jnp.float32)
+        fluency = float(self._score_jit(t, m))
+        env_r = float(traj_payload.get("env_return", 0.0))
+        return self.env_weight * env_r + (1 - self.env_weight) * fluency

@@ -1,0 +1,29 @@
+"""Rule-based reward functions (stateless -> serverless-deployable, R3)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.data.pipeline import Trajectory
+
+
+def env_return_reward(traj_payload: Dict) -> float:
+    """Default: the environment's accumulated return."""
+    return float(traj_payload.get("env_return", 0.0))
+
+
+def format_bonus_reward(traj_payload: Dict) -> float:
+    """Env return + small bonus for well-formed tool/answer usage and a
+    length penalty — the shape of production rule-based rewards."""
+    r = float(traj_payload.get("env_return", 0.0))
+    text = traj_payload.get("text", "")
+    if "answer:" in text or "submit" in text or "buy" in text:
+        r += 0.05
+    n_tokens = int(traj_payload.get("num_tokens", 0))
+    r -= 0.0001 * max(0, n_tokens - 2048)
+    return r
+
+
+REWARD_FNS = {
+    "env_return": env_return_reward,
+    "format_bonus": format_bonus_reward,
+}

@@ -1,0 +1,285 @@
+"""Continuous-batching inference engine (the paper's command-driven event
+loop, Fig. 8): a slot-based engine over ``Model.decode_step`` that polls
+ADD/ABORT commands between engine steps, so adding or aborting a trajectory
+never stalls ongoing generation. This is the JAX stand-in for vLLM/SGLang in
+the data plane, and the unit LLMProxy dispatches to.
+
+Also implements the weight-sync hooks of the §6.2 protocol: ``suspend`` /
+``resume`` / ``update_params`` (with KV-cache recomputation for in-flight
+trajectories, step (5) of the protocol).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.rl.sampling import sample_tokens
+
+
+@dataclasses.dataclass
+class GenRequest:
+    request_id: str
+    prompt: List[int]
+    max_new_tokens: int = 64
+    temperature: float = 1.0
+    top_k: Optional[int] = None
+    stop_tokens: Sequence[int] = ()
+    tag: str = "default"          # task-domain tag (hardware affinity, R1)
+
+
+@dataclasses.dataclass
+class GenResult:
+    request_id: str
+    tokens: List[int]             # newly generated tokens
+    logprobs: List[float]
+    finish_reason: str            # "stop" | "length" | "aborted"
+    weight_version: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+
+@dataclasses.dataclass
+class _Slot:
+    active: bool = False
+    request: Optional[GenRequest] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    new_tokens: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    pos: int = 0                  # absolute position of next token slot
+    start_version: int = 0        # weight version at trajectory start
+
+
+class InferenceEngine:
+    """Slot-based continuous batching engine."""
+
+    def __init__(self, model: Model, params, *, max_slots: int = 8,
+                 max_len: int = 512, seed: int = 0,
+                 on_finish: Optional[Callable[[GenResult], None]] = None):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.on_finish = on_finish
+        self.weight_version = 0
+        self.suspended = False
+        self._key = jax.random.PRNGKey(seed)
+        self._slots = [_Slot() for _ in range(max_slots)]
+        self._commands = collections.deque()   # ("add", req) | ("abort", id)
+        self._lock = threading.Lock()
+        self._results: Dict[str, GenResult] = {}
+        self._cache = model.init_cache(max_slots, max_len)
+        # stats
+        self.steps = 0
+        self.busy_steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self._build_jit()
+
+    # ------------------------------------------------------------------
+    def _build_jit(self):
+        model = self.model
+
+        def _sample(logits, key, temperature):
+            scaled = logits / jnp.clip(temperature, 1e-6)
+            toks, lps = sample_tokens(key, scaled, temperature=1.0)
+            toks_g = jnp.argmax(logits, axis=-1)
+            lp_g = jnp.take_along_axis(
+                jax.nn.log_softmax(logits, -1), toks_g[:, None], -1)[:, 0]
+            use_greedy = temperature <= 0.0
+            return (jnp.where(use_greedy, toks_g, toks),
+                    jnp.where(use_greedy, lp_g, lps))
+
+        @jax.jit
+        def _decode(params, tokens, cache, positions, key, temperature):
+            logits, cache = model.decode_step(params, tokens, cache,
+                                              positions)
+            toks, lps = _sample(logits, key, temperature)
+            return toks, lps, cache
+
+        self._decode_jit = _decode
+        self._sample = _sample
+
+        def _prefill_into_slot(params, tokens, cache, slot, last_pos, key,
+                               temperature):
+            """tokens: [1, S]; writes slot's cache entries; samples the
+            first generated token from the last prompt position."""
+            small = model.init_cache(1, self.max_len)
+            logits, small = model.prefill(params, tokens, small,
+                                          last_pos=last_pos)
+            def put(big, little):
+                idx = (0, slot) + (0,) * (big.ndim - 2)
+                return jax.lax.dynamic_update_slice(big, little.astype(big.dtype), idx)
+            cache = jax.tree.map(put, cache, small)
+            toks, lps = _sample(logits, key, temperature)
+            return toks, lps, cache
+
+        self._prefill_jit = jax.jit(_prefill_into_slot,
+                                    static_argnames=())
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    # ------------------------------------------------------------------
+    # command interface (thread-safe)
+    # ------------------------------------------------------------------
+    def add_request(self, req: GenRequest):
+        with self._lock:
+            self._commands.append(("add", req))
+
+    def abort(self, request_id: str):
+        with self._lock:
+            self._commands.append(("abort", request_id))
+
+    def suspend(self):
+        """Stop admitting new requests; in-flight slots are preserved."""
+        self.suspended = True
+
+    def resume(self):
+        self.suspended = False
+
+    def update_params(self, params, version: int,
+                      recompute_caches: bool = True):
+        """Weight sync (protocol steps (3)+(5)): swap weights and rebuild
+        each in-flight trajectory's cache under the new weights."""
+        self.params = params
+        self.weight_version = version
+        if recompute_caches:
+            for i, s in enumerate(self._slots):
+                if s.active and s.pos > 0:
+                    self._reprefill_slot(i)
+
+    def _reprefill_slot(self, i: int):
+        s = self._slots[i]
+        toks = jnp.asarray([s.tokens[: s.pos]], jnp.int32)
+        last = jnp.asarray([s.pos - 1], jnp.int32)
+        _, _, self._cache = self._prefill_jit(
+            self.params, toks, self._cache, i, last, self._next_key(),
+            jnp.float32(-1.0))
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: GenRequest) -> bool:
+        free = [i for i, s in enumerate(self._slots) if not s.active]
+        if not free or len(req.prompt) + req.max_new_tokens > self.max_len:
+            return False
+        i = free[0]
+        s = self._slots[i]
+        s.active = True
+        s.request = req
+        s.tokens = list(req.prompt)
+        s.new_tokens, s.logprobs = [], []
+        s.pos = len(req.prompt)
+        s.start_version = self.weight_version
+        toks = jnp.asarray([s.tokens], jnp.int32)
+        last = jnp.asarray([s.pos - 1], jnp.int32)
+        tok, lp, self._cache = self._prefill_jit(
+            self.params, toks, self._cache, i, last, self._next_key(),
+            jnp.float32(req.temperature))
+        self.prefill_tokens += s.pos
+        self._append_token(i, int(tok[0]), float(lp[0]))
+        return True
+
+    def _append_token(self, i: int, tok: int, lp: float):
+        s = self._slots[i]
+        s.tokens.append(tok)
+        s.new_tokens.append(tok)
+        s.logprobs.append(lp)
+        s.pos += 1
+        req = s.request
+        if tok in req.stop_tokens:
+            self._finish(i, "stop")
+        elif len(s.new_tokens) >= req.max_new_tokens or s.pos >= self.max_len:
+            self._finish(i, "length")
+
+    def _finish(self, i: int, reason: str):
+        s = self._slots[i]
+        res = GenResult(
+            request_id=s.request.request_id,
+            tokens=list(s.new_tokens), logprobs=list(s.logprobs),
+            finish_reason=reason, weight_version=self.weight_version,
+            prefill_tokens=len(s.request.prompt),
+            decode_tokens=len(s.new_tokens))
+        self._results[res.request_id] = res
+        s.active = False
+        s.request = None
+        if self.on_finish:
+            self.on_finish(res)
+
+    def _abort(self, request_id: str):
+        for i, s in enumerate(self._slots):
+            if s.active and s.request.request_id == request_id:
+                self._finish(i, "aborted")
+                return
+        # not yet admitted: drop from pending adds
+        with self._lock:
+            self._commands = collections.deque(
+                c for c in self._commands
+                if not (c[0] == "add" and c[1].request_id == request_id))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: drain commands, then one decode step for
+        all active slots. Returns number of active slots decoded."""
+        # 1) command processing between engine steps (non-blocking)
+        while True:
+            with self._lock:
+                if not self._commands:
+                    break
+                kind, payload = self._commands.popleft()
+            if kind == "abort":
+                self._abort(payload)
+            elif kind == "add":
+                if self.suspended or not self._admit(payload):
+                    with self._lock:
+                        self._commands.appendleft((kind, payload))
+                    break
+        # 2) one decode step over active slots
+        active = [i for i, s in enumerate(self._slots) if s.active]
+        self.steps += 1
+        if not active:
+            return 0
+        self.busy_steps += 1
+        last_tokens = np.zeros((self.max_slots, 1), np.int32)
+        positions = np.zeros((self.max_slots,), np.int32)
+        temp = 1.0
+        for i, s in enumerate(self._slots):
+            if s.active:
+                last_tokens[i, 0] = s.tokens[-1]
+                positions[i] = s.pos - 1  # index of the token we feed
+                temp = s.request.temperature
+        toks, lps, self._cache = self._decode_jit(
+            self.params, jnp.asarray(last_tokens), self._cache,
+            jnp.asarray(positions), self._next_key(), jnp.float32(temp))
+        toks, lps = np.asarray(toks), np.asarray(lps)
+        for i in active:
+            if self._slots[i].active:
+                self.decode_tokens += 1
+                self._append_token(i, int(toks[i]), float(lps[i]))
+        return len(active)
+
+    # ------------------------------------------------------------------
+    def pop_result(self, request_id: str) -> Optional[GenResult]:
+        return self._results.pop(request_id, None)
+
+    @property
+    def num_active(self) -> int:
+        return sum(s.active for s in self._slots)
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(self._commands) or self.num_active > 0
+
+    def run_until_idle(self, max_steps: int = 100000):
+        for _ in range(max_steps):
+            if not self.has_pending:
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")

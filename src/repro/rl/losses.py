@@ -1,0 +1,122 @@
+"""RL and LM losses.
+
+GRPO (the paper's training algorithm, §7.1): group-normalized advantages,
+PPO-style token-level clipping, optional KL regularization to a reference
+policy. Multi-turn trajectories mask environment-observation tokens out of
+the loss via ``loss_mask`` (only action tokens are optimized), which is how
+agentic RL differs from single-turn RLHF.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def token_logprobs(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """logits: [B,S,V] (any float dtype) predicting token t+1; tokens: [B,S].
+
+    Returns log p(tokens[:, 1:]) as [B, S-1] in fp32.
+
+    Memory note: written as fused masked reductions (iota==label select +
+    logsumexp) instead of log_softmax + take_along_axis — the latter
+    materializes [B,S,V] fp32 activations *and* an s32 [B,S,V] scatter in
+    the backward pass (measured ~33 GiB/device on 1M-token MoE batches; see
+    EXPERIMENTS.md §Perf). XLA fuses these reductions so nothing [B,S,V]
+    beyond the bf16 logits themselves is materialized.
+    """
+    lg = logits[:, :-1]
+    lab = tokens[:, 1:]
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    shifted = (lg - m).astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    iota = jax.lax.broadcasted_iota(lab.dtype, (1, 1, lg.shape[-1]), 2)
+    label_shift = jnp.sum(
+        jnp.where(lab[..., None] == iota, shifted, 0.0), axis=-1)
+    return label_shift - lse
+
+
+def lm_loss(logits, tokens, mask=None):
+    """Next-token cross entropy. mask: [B,S] over *input* positions."""
+    lp = token_logprobs(logits, tokens)
+    m = jnp.ones_like(lp) if mask is None else mask[:, 1:].astype(jnp.float32)
+    return -(lp * m).sum() / jnp.clip(m.sum(), 1.0)
+
+
+def group_normalized_advantages(rewards: jnp.ndarray, group_size: int,
+                                eps: float = 1e-6) -> jnp.ndarray:
+    """GRPO advantages. rewards: [B] with B = n_groups * group_size and
+    group members contiguous. Returns [B]."""
+    g = rewards.reshape(-1, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    return ((g - mean) / (std + eps)).reshape(-1)
+
+
+def grpo_loss(logits: jnp.ndarray,
+              tokens: jnp.ndarray,
+              loss_mask: jnp.ndarray,
+              advantages: jnp.ndarray,
+              behavior_logprobs: jnp.ndarray,
+              ref_logprobs: Optional[jnp.ndarray] = None,
+              clip_eps: float = 0.2,
+              kl_coef: float = 0.0):
+    """Token-level clipped policy-gradient loss from logits. See
+    ``grpo_from_logprobs`` for the memory-lean entry point the trainer uses.
+    """
+    lp = token_logprobs(logits, tokens)                 # [B,S-1]
+    return grpo_from_logprobs(lp, tokens, loss_mask, advantages,
+                              behavior_logprobs, ref_logprobs=ref_logprobs,
+                              clip_eps=clip_eps, kl_coef=kl_coef)
+
+
+def grpo_from_logprobs(lp: jnp.ndarray,
+                       tokens: jnp.ndarray,
+                       loss_mask: jnp.ndarray,
+                       advantages: jnp.ndarray,
+                       behavior_logprobs: jnp.ndarray,
+                       ref_logprobs: Optional[jnp.ndarray] = None,
+                       clip_eps: float = 0.2,
+                       kl_coef: float = 0.0):
+    """lp: [B,S-1] current-policy logprobs of tokens[:,1:]; loss_mask: [B,S];
+    advantages: [B] per trajectory or [B,S-1] per token."""
+    m = loss_mask[:, 1:].astype(jnp.float32)
+    if advantages.ndim == 1:
+        adv = advantages[:, None]
+    else:
+        adv = advantages
+    ratio = jnp.exp(lp - behavior_logprobs)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv
+    pg = -jnp.minimum(unclipped, clipped)
+    loss = (pg * m).sum() / jnp.clip(m.sum(), 1.0)
+    metrics = {
+        "pg_loss": loss,
+        "ratio_mean": (ratio * m).sum() / jnp.clip(m.sum(), 1.0),
+        "clip_frac": (((jnp.abs(ratio - 1) > clip_eps) * m).sum()
+                      / jnp.clip(m.sum(), 1.0)),
+        "entropy_proxy": -(lp * m).sum() / jnp.clip(m.sum(), 1.0),
+    }
+    if kl_coef > 0.0 and ref_logprobs is not None:
+        # k3 estimator: E[exp(ref-lp) - (ref-lp) - 1] >= 0
+        d = ref_logprobs - lp
+        kl = (jnp.exp(d) - d - 1.0)
+        kl_term = (kl * m).sum() / jnp.clip(m.sum(), 1.0)
+        loss = loss + kl_coef * kl_term
+        metrics["kl"] = kl_term
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def ppo_loss(logits, tokens, loss_mask, advantages, behavior_logprobs,
+             values=None, returns=None, clip_eps: float = 0.2,
+             value_coef: float = 0.5):
+    """PPO: same clipped PG; optional value head term (values/returns [B,S])."""
+    loss, metrics = grpo_loss(logits, tokens, loss_mask, advantages,
+                              behavior_logprobs, clip_eps=clip_eps)
+    if values is not None and returns is not None:
+        v_loss = 0.5 * jnp.mean(jnp.square(values - returns))
+        loss = loss + value_coef * v_loss
+        metrics = dict(metrics, v_loss=v_loss, loss=loss)
+    return loss, metrics

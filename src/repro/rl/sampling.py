@@ -1,0 +1,36 @@
+"""Token sampling (temperature / top-k / top-p) with logprob bookkeeping."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(key, logits: jnp.ndarray, temperature: float = 1.0,
+                  top_k: Optional[int] = None, top_p: Optional[float] = None):
+    """logits: [B,V]. Returns (tokens [B], logprobs [B]).
+
+    logprobs are w.r.t. the *sampling* distribution's base logits (after
+    temperature/filtering), which is what importance ratios in GRPO need.
+    """
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:   # greedy
+        tokens = jnp.argmax(logits, axis=-1)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return tokens, jnp.take_along_axis(lp, tokens[:, None], -1)[:, 0]
+    logits = logits / temperature
+    if top_k is not None and top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p is not None and 0.0 < top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], -1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    tokens = jax.random.categorical(key, logits, axis=-1)
+    return tokens, jnp.take_along_axis(lp, tokens[:, None], -1)[:, 0]

@@ -1,0 +1,64 @@
+"""Online affinity profiler (paper §9 extension): classification,
+hysteresis, live re-routing of an LLMProxy, and drift adaptation."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import EngineHandle, LLMProxy
+from repro.core.profiler import AffinityProfiler
+from repro.models import Model
+from repro.rl.engine import InferenceEngine
+
+
+def feed(prof, tag, prefill, decode, turns, n):
+    for _ in range(n):
+        prof.observe(tag, prefill, decode, turns)
+
+
+def test_classification():
+    prof = AffinityProfiler()
+    feed(prof, "math", prefill=120, decode=6000, turns=3, n=12)
+    feed(prof, "swe", prefill=20000, decode=3000, turns=40, n=12)
+    assert prof.pool_for("math") == "H20"
+    assert prof.pool_for("swe") == "H800"
+    aff = prof.hw_affinity()
+    assert aff["math"] == "H20" and aff["swe"] == "H800"
+
+
+def test_min_samples_and_hysteresis():
+    prof = AffinityProfiler(min_samples=8, stability_windows=2)
+    feed(prof, "t", 100, 5000, 2, n=7)
+    assert prof.pool_for("t") is None            # not enough samples
+    feed(prof, "t", 100, 5000, 2, n=1)
+    assert prof.pool_for("t") is None            # classified, not stable yet
+    feed(prof, "t", 100, 5000, 2, n=3)
+    assert prof.pool_for("t") == "H20"
+
+
+def test_drift_reroutes_with_hysteresis():
+    """A domain alternating between profiles (the §9 scenario) only
+    re-routes after the new profile is stable."""
+    prof = AffinityProfiler(ewma=0.5, stability_windows=2)
+    feed(prof, "t", 100, 8000, 2, n=12)
+    assert prof.pool_for("t") == "H20"
+    # drift to prefill-heavy: EWMA shifts, class flips, stability resets
+    feed(prof, "t", 20000, 500, 30, n=2)
+    assert prof.pool_for("t") is None            # in flux: no routing claim
+    feed(prof, "t", 20000, 500, 30, n=4)
+    assert prof.pool_for("t") == "H800"
+
+
+def test_apply_to_proxy_reroutes_live():
+    cfg = get_config("tiny")
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    e1 = InferenceEngine(model, params, max_slots=2, max_len=64, seed=1)
+    e2 = InferenceEngine(model, params, max_slots=2, max_len=64, seed=2)
+    proxy = LLMProxy([EngineHandle(e1, "H800"), EngineHandle(e2, "H20")],
+                     hw_affinity={"default": "H800"})
+    prof = AffinityProfiler()
+    feed(prof, "chat", prefill=50, decode=4000, turns=1, n=12)
+    mapping = prof.apply_to(proxy)
+    assert mapping["chat"] == "H20"
+    assert proxy.hw_affinity["chat"] == "H20"
+    assert proxy._select("chat").pool == "H20"

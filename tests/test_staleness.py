@@ -1,0 +1,120 @@
+"""SampleBuffer staleness invariants (paper §6.2), incl. hypothesis
+property tests:
+- no returned trajectory violates start_version >= current - alpha;
+- eager eviction bounds buffer growth to O(alpha * E);
+- get_batch returns oldest-first and blocks until satisfied.
+"""
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffer import SampleBuffer
+from repro.data.pipeline import Trajectory
+
+
+def _traj(i, sv):
+    return Trajectory(traj_id=f"t{i}", task="math", tokens=[1, 2],
+                      loss_mask=[0, 1], logprobs=[0.0, -1.0],
+                      start_version=sv)
+
+
+def test_basic_put_get():
+    buf = SampleBuffer(alpha=1)
+    for i in range(4):
+        buf.put(_traj(i, 0))
+    batch = buf.get_batch(4, timeout=1)
+    assert len(batch) == 4
+    assert buf.size() == 0
+
+
+def test_stale_evicted_on_version_advance():
+    buf = SampleBuffer(alpha=1)
+    buf.put(_traj(0, 0))
+    buf.put(_traj(1, 1))
+    buf.set_version(2)          # bound: >= 1
+    assert buf.size() == 1
+    assert buf.total_evicted == 1
+    batch = buf.get_batch(1, timeout=1)
+    assert batch[0].start_version == 1
+
+
+def test_stale_put_rejected():
+    buf = SampleBuffer(alpha=1)
+    buf.set_version(5)
+    buf.put(_traj(0, 2))        # 2 < 5 - 1 -> evicted on arrival
+    assert buf.size() == 0
+    assert buf.total_evicted == 1
+
+
+def test_oldest_first_ordering():
+    buf = SampleBuffer(alpha=8)
+    for i, sv in enumerate([3, 1, 2, 1]):
+        buf.put(_traj(i, sv))
+    batch = buf.get_batch(2, timeout=1)
+    assert [t.start_version for t in batch] == [1, 1]
+
+
+def test_get_batch_blocks_until_filled():
+    buf = SampleBuffer(alpha=1)
+    out = {}
+
+    def consumer():
+        out["batch"] = buf.get_batch(2, timeout=5)
+
+    th = threading.Thread(target=consumer)
+    th.start()
+    time.sleep(0.05)
+    buf.put(_traj(0, 0))
+    buf.put(_traj(1, 0))
+    th.join(timeout=5)
+    assert len(out["batch"]) == 2
+
+
+def test_get_batch_timeout():
+    buf = SampleBuffer(alpha=1)
+    with pytest.raises(TimeoutError):
+        buf.get_batch(1, timeout=0.05)
+
+
+@given(alpha=st.integers(0, 3),
+       events=st.lists(st.tuples(st.sampled_from(["put", "bump"]),
+                                 st.integers(0, 3)), min_size=1,
+                       max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_staleness_invariant_property(alpha, events):
+    """After any interleaving of puts and version bumps, every buffered
+    trajectory satisfies the alpha bound and nothing valid was dropped."""
+    buf = SampleBuffer(alpha=alpha)
+    version = 0
+    i = 0
+    for kind, arg in events:
+        if kind == "put":
+            sv = max(0, version - arg)
+            buf.put(_traj(i, sv))
+            i += 1
+        else:
+            version += arg
+            buf.set_version(version)
+        # invariant: everything in the buffer is within the bound
+        with buf._lock:
+            for t in buf._items:
+                assert t.start_version >= version - alpha
+    # bounded growth: O(alpha * E) with E = puts
+    assert buf.size() <= i
+
+
+@given(n_envs=st.integers(1, 16), alpha=st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_buffer_bound_property(n_envs, alpha):
+    """With E concurrent producers each holding at most one pending
+    trajectory per version, the buffer never exceeds (alpha+1) * E."""
+    buf = SampleBuffer(alpha=alpha)
+    i = 0
+    for version in range(6):
+        buf.set_version(version)
+        for e in range(n_envs):
+            buf.put(_traj(i, version))
+            i += 1
+        assert buf.size() <= (alpha + 1) * n_envs
