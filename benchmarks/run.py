@@ -24,6 +24,7 @@ ALL = [
     "weight_sync",      # Table 4 / Fig 14a
     "redundant_rollouts",  # Fig 14b
     "pd_disagg",        # Table 5
+    "pd_disagg_live",   # Table 5 cross-check on the real engines
     "kernels_bench",
     "roofline",         # §Roofline from the dry-run artifacts
 ]

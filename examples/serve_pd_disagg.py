@@ -1,0 +1,69 @@
+"""Live prefill/decode disaggregation demo (§6.3): the same prompts served
+by a colocated engine and by a disaggregated 1P1D data plane — a
+prefill-role engine on the compute pool ("H800"), a decode-role engine on
+the bandwidth pool ("H20"), and a KV-cache slot handoff in between. At
+temperature 0 the two paths emit identical tokens, and the per-pool
+counters show prefill tokens landing only on the prefill pool and decode
+tokens only on the decode pool.
+
+    PYTHONPATH=src python examples/serve_pd_disagg.py
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import EngineHandle, LLMProxy, build_pd_proxy
+from repro.data.tokenizer import TOKENIZER
+from repro.models import Model
+from repro.rl.engine import GenRequest, InferenceEngine
+
+
+def serve(proxy, prompts, max_new):
+    out = {}
+    for i, p in enumerate(prompts):
+        proxy.submit(
+            GenRequest(request_id=f"r{i}",
+                       prompt=TOKENIZER.encode(p, bos=True),
+                       max_new_tokens=max_new, temperature=0.0),
+            callback=lambda r: out.__setitem__(r.request_id, r))
+    while proxy.busy:
+        proxy.pump()
+    return [out[f"r{i}"].tokens for i in range(len(prompts))]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = ["the agent moves ", "reward comes from ", "decode prefill "]
+
+    colocated = LLMProxy([EngineHandle(
+        InferenceEngine(model, params, max_slots=4, max_len=256), "H800")])
+    tokens_col = serve(colocated, prompts, args.max_new_tokens)
+
+    pd = build_pd_proxy(model, params, max_slots=4, max_len=256)
+    tokens_pd = serve(pd, prompts, args.max_new_tokens)
+
+    for p, tc, tp in zip(prompts, tokens_col, tokens_pd):
+        match = "==" if tc == tp else "!="
+        print(f"{p!r}: colocated {match} disaggregated | "
+              f"{TOKENIZER.decode(tp)!r}")
+    assert tokens_col == tokens_pd, "greedy parity violated"
+
+    stats = pd.stats()
+    print(f"\nhandoffs: {stats['handoffs']}")
+    for e in stats["engines"]:
+        print(f"  pool={e['pool']:5s} role={e['role']:7s} "
+              f"prefill_tokens={e['prefill_tokens']:4d} "
+              f"decode_tokens={e['decode_tokens']:4d} "
+              f"steps={e['steps']}")
+
+
+if __name__ == "__main__":
+    main()

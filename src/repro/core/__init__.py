@@ -3,7 +3,7 @@ from repro.core.cluster import Cluster
 from repro.core.envmanager import EMState, EnvManager, RolloutPolicy
 from repro.core.hardware import (H20, H800, PERF, REGISTRY, SERVERLESS,
                                  TPU_V5E, TPU_V5P, HardwareSpec, PerfModel)
-from repro.core.proxy import EngineHandle, LLMProxy
+from repro.core.proxy import EngineHandle, LLMProxy, build_pd_proxy
 from repro.core.resource import Binding, DeviceGroup, ResourceManager
 from repro.core.scheduler import LiveRLRunner, RunnerConfig
 from repro.core.serverless import ServerlessConfig, ServerlessPlatform

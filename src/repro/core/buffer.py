@@ -15,6 +15,7 @@ in-flight generation via LLMProxy).
 """
 from __future__ import annotations
 
+import itertools
 import threading
 from typing import Callable, List, Optional
 
@@ -25,6 +26,7 @@ class SampleBuffer:
     def __init__(self, alpha: int = 1,
                  on_evict: Optional[Callable[[Trajectory], None]] = None):
         self.alpha = alpha
+        self._seq = itertools.count()   # arrival order (deterministic FIFO)
         self._items: List[Trajectory] = []
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -38,6 +40,7 @@ class SampleBuffer:
     # ------------------------------------------------------------------
     def put(self, traj: Trajectory):
         with self._cv:
+            traj.seq = next(self._seq)
             if self._is_stale(traj, self.current_version):
                 self._evict(traj)
                 return
@@ -77,7 +80,9 @@ class SampleBuffer:
             self._items = self._evict_stale_locked()
             if len(self._items) < batch_size:
                 return None
-            self._items.sort(key=lambda t: (t.start_version, t.traj_id))
+            # oldest first: version, then numeric arrival order (the
+            # lexicographic traj_id would put "t10" before "t2")
+            self._items.sort(key=lambda t: (t.start_version, t.seq))
             batch, self._items = (self._items[:batch_size],
                                   self._items[batch_size:])
             self.total_consumed += len(batch)
@@ -103,7 +108,7 @@ class SampleBuffer:
                 raise TimeoutError(
                     f"get_batch({batch_size}) timed out with "
                     f"{len(self._items)} buffered")
-            self._items.sort(key=lambda t: (t.start_version, t.traj_id))
+            self._items.sort(key=lambda t: (t.start_version, t.seq))
             batch, self._items = (self._items[:batch_size],
                                   self._items[batch_size:])
             self.total_consumed += len(batch)

@@ -4,15 +4,26 @@ routing each request to the hardware class preferred for its task-domain
 tag (R1), and forwards ADD/ABORT commands so trajectory admission or
 cancellation never stalls ongoing generation. Also implements the
 suspend/resume half of the weight-sync protocol (R4).
+
+Prefill/decode disaggregation (§6.3, live counterpart of the simulator's
+``pd_disagg`` config): with ``pd_disagg=True`` the proxy runs a two-stage
+dispatch — each request's ADD is routed to a prefill-role engine on the
+compute-bound pool (H800-class); when that engine emits the request's
+:class:`~repro.rl.engine.KVHandoff` (prompt cache + first sampled token),
+the proxy migrates it to the least-loaded decode-role engine on the
+bandwidth-bound pool (H20-class), where the decode loop runs. ADD/ABORT
+and suspend/update/resume semantics are preserved across the handoff: the
+route table always points at the engine currently owning the request, and
+an abort that races the migration is resolved at handoff time.
 """
 from __future__ import annotations
 
-import itertools
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
-from repro.rl.engine import GenRequest, GenResult, InferenceEngine
+from repro.rl.engine import (GenRequest, GenResult, InferenceEngine,
+                             KVHandoff)
 
 
 @dataclass
@@ -24,18 +35,51 @@ class EngineHandle:
     def load(self) -> int:
         return self.engine.num_active + len(self.engine._commands)
 
+    @property
+    def role(self) -> str:
+        return self.engine.role
+
 
 class LLMProxy:
     def __init__(self, handles: List[EngineHandle],
-                 hw_affinity: Optional[Dict[str, str]] = None):
-        """hw_affinity: task tag -> pool name, must include "default"."""
+                 hw_affinity: Optional[Dict[str, str]] = None,
+                 pd_disagg: bool = False):
+        """hw_affinity: task tag -> pool name, must include "default".
+
+        With ``pd_disagg=True`` the handle list must contain at least one
+        ``role="prefill"`` and one ``role="decode"`` engine (all built from
+        the same model with the same ``max_len`` so cache slots are
+        shape-compatible across the handoff).
+        """
         if not handles:
             raise ValueError("LLMProxy needs at least one engine")
         self.handles = handles
-        self.hw_affinity = dict(hw_affinity or {"default": handles[0].pool})
-        self.hw_affinity.setdefault("default", handles[0].pool)
+        self.pd_disagg = pd_disagg
+        self.prefill_handles = [h for h in handles if h.role == "prefill"]
+        self.decode_handles = [h for h in handles if h.role == "decode"]
+        if pd_disagg:
+            if not self.prefill_handles or not self.decode_handles:
+                raise ValueError("pd_disagg=True needs at least one "
+                                 "prefill-role and one decode-role engine")
+            lens = {h.engine.max_len for h in handles}
+            if len(lens) != 1:
+                raise ValueError(f"PD pools must share max_len, got {lens}")
+            for h in self.prefill_handles:
+                h.engine.on_handoff = self._make_handoff_hook(h)
+            # prefill engines step first so a handoff produced this pump
+            # is injected before the decode engines step
+            self._pump_order = (self.prefill_handles + self.decode_handles
+                                + [h for h in handles
+                                   if h.role == "colocated"])
+        else:
+            self._pump_order = list(handles)
+        default_pool = (self.prefill_handles[0].pool if pd_disagg
+                        else handles[0].pool)
+        self.hw_affinity = dict(hw_affinity or {"default": default_pool})
+        self.hw_affinity.setdefault("default", default_pool)
         self._route: Dict[str, EngineHandle] = {}
         self._callbacks: Dict[str, Callable[[GenResult], None]] = {}
+        self._abort_requested: set = set()
         self._lock = threading.Lock()
         self.suspended = False
         for h in handles:
@@ -43,6 +87,7 @@ class LLMProxy:
         # stats
         self.requests = 0
         self.aborted = 0
+        self.handoffs = 0
         self.routed_by_pool: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
@@ -51,15 +96,50 @@ class LLMProxy:
             with self._lock:
                 cb = self._callbacks.pop(result.request_id, None)
                 self._route.pop(result.request_id, None)
+                self._abort_requested.discard(result.request_id)
             if cb:
                 cb(result)
         return hook
 
+    def _make_handoff_hook(self, src: EngineHandle):
+        def hook(handoff: KVHandoff):
+            rid = handoff.request.request_id
+            with self._lock:
+                if rid in self._abort_requested:
+                    # abort raced the prefill: resolve it here instead of
+                    # migrating a cancelled trajectory
+                    cb = self._callbacks.pop(rid, None)
+                    self._route.pop(rid, None)
+                    self._abort_requested.discard(rid)
+                    dst = None
+                else:
+                    dst = min(self.decode_handles, key=lambda h: h.load())
+                    self._route[rid] = dst
+                    # migrations are counted in `handoffs` (and per-engine
+                    # handoffs_in), NOT routed_by_pool, so the latter keeps
+                    # summing to `requests` in both modes
+                    self.handoffs += 1
+                    # enqueue while still holding the proxy lock: a
+                    # concurrent abort() that observes route=dst must find
+                    # its ABORT ordered after this INJECT in dst's queue
+                    handoff.source = src.pool
+                    dst.engine.inject(handoff)
+            if dst is None and cb:
+                cb(GenResult(
+                    request_id=rid, tokens=list(handoff.new_tokens),
+                    logprobs=list(handoff.logprobs),
+                    finish_reason="aborted",
+                    weight_version=src.engine.weight_version,
+                    prefill_tokens=len(handoff.request.prompt),
+                    decode_tokens=0))
+        return hook
+
     def _select(self, tag: str) -> EngineHandle:
+        cands = self.prefill_handles if self.pd_disagg else self.handles
         pool = self.hw_affinity.get(tag, self.hw_affinity["default"])
-        matched = [h for h in self.handles if h.pool == pool]
+        matched = [h for h in cands if h.pool == pool]
         if not matched:
-            matched = self.handles           # fallback: forward progress
+            matched = cands                  # fallback: forward progress
         return min(matched, key=lambda h: h.load())
 
     # ------------------------------------------------------------------
@@ -76,10 +156,15 @@ class LLMProxy:
         h.engine.add_request(req)
 
     def abort(self, request_id: str):
-        """ABORT command: cancel one trajectory's generation."""
+        """ABORT command: cancel one trajectory's generation (wherever it
+        currently lives — prefill engine, in migration, or decode engine)."""
         with self._lock:
             h = self._route.get(request_id)
             self.aborted += 1
+            if self.pd_disagg and h is not None:
+                # known in-flight request only — an unknown/finished id
+                # would otherwise pin a set entry forever
+                self._abort_requested.add(request_id)
         if h is not None:
             h.engine.abort(request_id)
 
@@ -104,8 +189,10 @@ class LLMProxy:
 
     # ------------------------------------------------------------------
     def pump(self) -> int:
-        """Advance every engine by one step; returns active slot count."""
-        return sum(h.engine.step() for h in self.handles)
+        """Advance every engine by one step; returns active slot count.
+        In PD mode prefill engines step before decode engines so a fresh
+        handoff starts decoding in the same pump."""
+        return sum(h.engine.step() for h in self._pump_order)
 
     @property
     def busy(self) -> bool:
@@ -115,11 +202,39 @@ class LLMProxy:
         return {
             "requests": self.requests,
             "aborted": self.aborted,
+            "pd_disagg": self.pd_disagg,
+            "handoffs": self.handoffs,
             "routed_by_pool": dict(self.routed_by_pool),
             "engines": [
-                {"pool": h.pool, "steps": h.engine.steps,
+                {"pool": h.pool, "name": h.name, "role": h.role,
+                 "steps": h.engine.steps,
                  "busy_steps": h.engine.busy_steps,
                  "prefill_tokens": h.engine.prefill_tokens,
-                 "decode_tokens": h.engine.decode_tokens}
+                 "decode_tokens": h.engine.decode_tokens,
+                 "handoffs_out": h.engine.handoffs_out,
+                 "handoffs_in": h.engine.handoffs_in}
                 for h in self.handles],
         }
+
+
+def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
+                   decode_pool: str = "H20", n_prefill: int = 1,
+                   n_decode: int = 1, max_slots: int = 8,
+                   max_len: int = 512, seed: int = 0,
+                   hw_affinity: Optional[Dict[str, str]] = None) -> LLMProxy:
+    """Build a PD-disaggregated proxy: ``n_prefill`` prefill-role engines on
+    the compute pool and ``n_decode`` decode-role engines on the bandwidth
+    pool (the live analogue of the simulator's ``gen_pools`` +
+    ``pd_disagg=True`` configuration)."""
+    handles = []
+    for i in range(n_prefill):
+        eng = InferenceEngine(model, params, max_slots=max_slots,
+                              max_len=max_len, seed=seed + i,
+                              role="prefill")
+        handles.append(EngineHandle(eng, prefill_pool, f"prefill-{i}"))
+    for i in range(n_decode):
+        eng = InferenceEngine(model, params, max_slots=max_slots,
+                              max_len=max_len, seed=seed + 1000 + i,
+                              role="decode")
+        handles.append(EngineHandle(eng, decode_pool, f"decode-{i}"))
+    return LLMProxy(handles, hw_affinity=hw_affinity, pd_disagg=True)

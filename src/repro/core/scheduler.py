@@ -57,6 +57,9 @@ class RunnerConfig:
     tasks: tuple = ("math", "game")
     redundancy: float = 1.0           # env groups launched / needed
     online_affinity: bool = False     # paper §9: auto-derive hw_mapping
+    pd_disagg: bool = False           # §6.3: proxy must be two-stage
+    #   (prefill pool -> KV handoff -> decode pool; see
+    #   repro.core.proxy.build_pd_proxy for constructing such a proxy)
     max_new_tokens: int = 32
     temperature: float = 1.0
     reward_url: str = "fc://rollart/reward"
@@ -87,6 +90,9 @@ class LiveRLRunner:
                  seq_len: int = 512):
         self.cfg = cfg
         assert cfg.mode in MODES
+        if cfg.pd_disagg and not proxy.pd_disagg:
+            raise ValueError("RunnerConfig.pd_disagg=True requires a "
+                             "PD-disaggregated LLMProxy (build_pd_proxy)")
         self.proxy = proxy
         self.state = train_state
         self.train_step_fn = train_step_fn
@@ -173,12 +179,26 @@ class LiveRLRunner:
             if em in self.active:
                 self.active.remove(em)
         # redundant rollouts: once the buffer has a full batch, cancel the
-        # slowest in-flight groups beyond what the next batch needs
+        # slowest in-flight rollouts beyond what the next iteration can use
         if (self.cfg.redundancy > 1.0
                 and self.buffer.size() >= self.cfg.batch_size):
-            for em in list(self.active):
-                if em.state == EMState.GENERATING:
-                    em.abort()
+            self._cancel_surplus()
+
+    def _cancel_surplus(self):
+        """Abort only the surplus beyond ``batch_size * redundancy``
+        in-flight trajectories (the headroom the next iteration launches
+        with), slowest first — matching the simulator's per-iteration
+        redundancy semantics. Aborting everything would also kill the
+        groups the next batch needs and force cold restarts."""
+        headroom = int(np.ceil(self.cfg.batch_size * self.cfg.redundancy))
+        generating = [em for em in self.active
+                      if em.state == EMState.GENERATING]
+        surplus = len(generating) - headroom
+        if surplus <= 0:
+            return
+        generating.sort(key=lambda em: em.turns)   # least progress first
+        for em in generating[:surplus]:
+            em.abort()
 
     # ------------------------------------------------------------------
     # the six-step protocol

@@ -18,6 +18,12 @@ Fidelity notes:
   runner, so the α-bound semantics have one implementation in both modes.
 
 Modes: sync | sync_plus | one_off | areal | rollart   (§7.1 baselines)
+
+The ``pd_disagg`` config here models §6.3 prefill/decode disaggregation in
+virtual time (Table 5); its live data-plane counterpart is
+``LLMProxy(pd_disagg=True)`` over prefill-/decode-role ``InferenceEngine``s
+(see repro.core.proxy / repro.rl.engine, and benchmarks/pd_disagg_live.py
+for the real-engine check of the Table-5 prediction).
 """
 from __future__ import annotations
 
@@ -376,7 +382,7 @@ class SimRL:
                 return
             resp = profile.sample_resp(self.rng)
             # with prefix caching only the last observation + cache misses
-            # are prefethed on later turns
+            # are prefetched on later turns
             new_ctx = context if turn == 0 else \
                 max(64, int(context * (1 - cfg.prefix_cache)))
             yield from pool.resource.acquire()

@@ -28,6 +28,10 @@ class Trajectory:
     start_version: int = 0        # weight version at trajectory start
     version: int = 0              # weight version at completion
     turns: int = 0
+    seq: int = -1                 # monotonic arrival number, stamped by
+                                  # SampleBuffer.put (FIFO tie-break; the
+                                  # lexicographic traj_id is NOT ordered:
+                                  # "t10" < "t2")
     meta: Dict = dataclasses.field(default_factory=dict)
 
 

@@ -1,8 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch tiny --prompt ...``
 
 Runs the continuous-batching engine on the local device, optionally with two
-affinity-routed pools. On TPU the same serve_step lowers against the
-production mesh (see launch/dryrun.py for the multi-pod proof).
+affinity-routed pools. With ``--pd-disagg`` the data plane is split into a
+prefill-role engine (compute pool) and a decode-role engine (bandwidth
+pool) with a live KV-cache handoff between them (§6.3). On TPU the same
+serve_step lowers against the production mesh (see launch/dryrun.py for the
+multi-pod proof).
 """
 from __future__ import annotations
 
@@ -11,7 +14,7 @@ import argparse
 import jax
 
 from repro.configs import get_config
-from repro.core import EngineHandle, LLMProxy
+from repro.core import EngineHandle, LLMProxy, build_pd_proxy
 from repro.data.tokenizer import TOKENIZER
 from repro.models import Model
 from repro.rl.engine import GenRequest, InferenceEngine
@@ -25,6 +28,9 @@ def main(argv=None):
     ap.add_argument("--max-new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--pd-disagg", action="store_true",
+                    help="split prefill/decode across two engine pools "
+                         "with live KV-cache handoff (§6.3)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -32,8 +38,13 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = Model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
-    eng = InferenceEngine(model, params, max_slots=args.slots, max_len=1024)
-    proxy = LLMProxy([EngineHandle(eng, "local")])
+    if args.pd_disagg:
+        proxy = build_pd_proxy(model, params, max_slots=args.slots,
+                               max_len=1024)
+    else:
+        eng = InferenceEngine(model, params, max_slots=args.slots,
+                              max_len=1024)
+        proxy = LLMProxy([EngineHandle(eng, "local")])
 
     prompts = args.prompt or ["the agent moves ", "reward comes from "]
     results = []
@@ -49,6 +60,11 @@ def main(argv=None):
         i = int(r.request_id[1:])
         print(f"[{r.request_id}] {prompts[i]!r} -> "
               f"{TOKENIZER.decode(r.tokens)!r}")
+    if args.pd_disagg:
+        for e in proxy.stats()["engines"]:
+            print(f"pool={e['pool']} role={e['role']} "
+                  f"prefill_tokens={e['prefill_tokens']} "
+                  f"decode_tokens={e['decode_tokens']}")
 
 
 if __name__ == "__main__":

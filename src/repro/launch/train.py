@@ -15,7 +15,7 @@ import jax
 from repro.checkpoint import checkpointer as CK
 from repro.configs import get_config
 from repro.core import (EngineHandle, LiveRLRunner, LLMProxy, RunnerConfig,
-                        ServerlessPlatform)
+                        ServerlessPlatform, build_pd_proxy)
 from repro.models import Model
 from repro.rewards.rule_based import REWARD_FNS
 from repro.rl.engine import InferenceEngine
@@ -39,6 +39,9 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--lm", action="store_true", help="LM pretrain instead "
                     "of agentic RL")
+    ap.add_argument("--pd-disagg", action="store_true",
+                    help="rollout on disaggregated prefill/decode engine "
+                         "pools with live KV handoff (§6.3)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args(argv)
 
@@ -61,13 +64,18 @@ def main(argv=None):
             print(f"step {i} loss {float(m['loss']):.4f}")
     else:
         step = jax.jit(make_grpo_train_step(model, opt))
-        eng = InferenceEngine(model, state.params, max_slots=8,
-                              max_len=640)
-        proxy = LLMProxy([EngineHandle(eng, "H20")])
+        if args.pd_disagg:
+            proxy = build_pd_proxy(model, state.params, max_slots=8,
+                                   max_len=640)
+        else:
+            eng = InferenceEngine(model, state.params, max_slots=8,
+                                  max_len=640)
+            proxy = LLMProxy([EngineHandle(eng, "H20")])
         runner = LiveRLRunner(
             RunnerConfig(batch_size=args.batch, group_size=args.group,
                          alpha=args.alpha, mode=args.mode,
-                         tasks=tuple(args.tasks.split(","))),
+                         tasks=tuple(args.tasks.split(",")),
+                         pd_disagg=args.pd_disagg),
             proxy, state, step, ServerlessPlatform(),
             REWARD_FNS[args.reward], seq_len=640)
         for h in runner.run_steps(args.steps):

@@ -274,6 +274,33 @@ class Model:
                      for pat in self.cfg.block_pattern)
 
     # ------------------------------------------------------------------
+    # KV-cache slot migration (live prefill/decode disaggregation)
+    # ------------------------------------------------------------------
+    # Every cache leaf is laid out (num_periods, batch, ...), so one
+    # trajectory's state is the batch-axis slice at its slot index. These
+    # two helpers are the data-plane handoff used by the PD-disaggregated
+    # engines: the prefill engine extracts a freshly filled slot and the
+    # decode engine injects it into one of its free slots.
+
+    def extract_cache_slot(self, cache, slot: int):
+        """Slice one slot (batch axis == 1) out of an engine cache pytree.
+
+        Returns a cache pytree with batch dimension 1, suitable for
+        ``inject_cache_slot`` on another engine built from the same model
+        with the same ``cache_len``.
+        """
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+            cache)
+
+    def inject_cache_slot(self, cache, slot_cache, slot: int):
+        """Write a batch-1 cache pytree into ``slot`` of a full cache."""
+        return jax.tree.map(
+            lambda big, little: jax.lax.dynamic_update_slice_in_dim(
+                big, little.astype(big.dtype), slot, axis=1),
+            cache, slot_cache)
+
+    # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
     def _block_decode(self, bp, pattern, x, cache, positions):

@@ -1,4 +1,5 @@
-from repro.rl.engine import GenRequest, GenResult, InferenceEngine
+from repro.rl.engine import (GenRequest, GenResult, InferenceEngine,
+                             KVHandoff)
 from repro.rl.trainer import (TrainState, default_optimizer, grpo_batch_spec,
                               init_train_state, make_grpo_train_step,
                               make_lm_train_step, make_logprob_fn)

@@ -7,6 +7,14 @@ the data plane, and the unit LLMProxy dispatches to.
 Also implements the weight-sync hooks of the §6.2 protocol: ``suspend`` /
 ``resume`` / ``update_params`` (with KV-cache recomputation for in-flight
 trajectories, step (5) of the protocol).
+
+Prefill/decode disaggregation (§6.3, live counterpart of the simulator's
+``pd_disagg`` mode): an engine can be constructed with
+``role="prefill"`` — it runs the compute-bound prefill, samples the first
+token, then packages the slot's KV cache as a :class:`KVHandoff` and emits
+it through ``on_handoff`` instead of decoding — or ``role="decode"``,
+which accepts handoffs via :meth:`inject` and runs the bandwidth-bound
+decode loop. ``LLMProxy(pd_disagg=True)`` routes between the two roles.
 """
 from __future__ import annotations
 
@@ -47,6 +55,24 @@ class GenResult:
 
 
 @dataclasses.dataclass
+class KVHandoff:
+    """A prefilled trajectory in flight between a prefill-role and a
+    decode-role engine: the request, the token/logprob state after the
+    first sampled token, and the slot's cache pytree (batch axis == 1,
+    extracted with ``Model.extract_cache_slot``). Both engines must share
+    the same model and ``max_len`` for the cache shapes to line up."""
+    request: GenRequest
+    tokens: List[int]             # prompt + first sampled token
+    new_tokens: List[int]
+    logprobs: List[float]
+    pos: int
+    start_version: int
+    cache: object
+    weight_version: int = 0       # weights the cache was prefilled under
+    source: str = ""              # originating pool/engine (stats only)
+
+
+@dataclasses.dataclass
 class _Slot:
     active: bool = False
     request: Optional[GenRequest] = None
@@ -57,22 +83,40 @@ class _Slot:
     start_version: int = 0        # weight version at trajectory start
 
 
+ROLES = ("colocated", "prefill", "decode")
+
+
 class InferenceEngine:
-    """Slot-based continuous batching engine."""
+    """Slot-based continuous batching engine.
+
+    ``role`` selects the engine's place in the data plane: ``"colocated"``
+    (default) serves prefill and decode monolithically; ``"prefill"`` only
+    prefills and emits a ``KVHandoff`` per admitted request through
+    ``on_handoff``; ``"decode"`` continues handed-off trajectories injected
+    via :meth:`inject` (it can also serve raw ADDs as a fallback, but the
+    proxy never routes them here in disaggregated mode).
+    """
 
     def __init__(self, model: Model, params, *, max_slots: int = 8,
                  max_len: int = 512, seed: int = 0,
-                 on_finish: Optional[Callable[[GenResult], None]] = None):
+                 on_finish: Optional[Callable[[GenResult], None]] = None,
+                 role: str = "colocated",
+                 on_handoff: Optional[Callable[[KVHandoff], None]] = None):
+        if role not in ROLES:
+            raise ValueError(f"role must be one of {ROLES}, got {role!r}")
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.on_finish = on_finish
+        self.role = role
+        self.on_handoff = on_handoff
         self.weight_version = 0
         self.suspended = False
         self._key = jax.random.PRNGKey(seed)
         self._slots = [_Slot() for _ in range(max_slots)]
-        self._commands = collections.deque()   # ("add", req) | ("abort", id)
+        # ("add", req) | ("abort", id) | ("inject", KVHandoff)
+        self._commands = collections.deque()
         self._lock = threading.Lock()
         self._results: Dict[str, GenResult] = {}
         self._cache = model.init_cache(max_slots, max_len)
@@ -81,6 +125,8 @@ class InferenceEngine:
         self.busy_steps = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self.handoffs_out = 0
+        self.handoffs_in = 0
         self._build_jit()
 
     # ------------------------------------------------------------------
@@ -88,12 +134,16 @@ class InferenceEngine:
         model = self.model
 
         def _sample(logits, key, temperature):
-            scaled = logits / jnp.clip(temperature, 1e-6)
+            # temperature is scalar (prefill, batch 1) or per-row [B]
+            # (batched decode over slots with mixed sampling configs)
+            t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32),
+                                 logits.shape[:1])
+            scaled = logits / jnp.clip(t, 1e-6)[:, None]
             toks, lps = sample_tokens(key, scaled, temperature=1.0)
             toks_g = jnp.argmax(logits, axis=-1)
             lp_g = jnp.take_along_axis(
                 jax.nn.log_softmax(logits, -1), toks_g[:, None], -1)[:, 0]
-            use_greedy = temperature <= 0.0
+            use_greedy = t <= 0.0
             return (jnp.where(use_greedy, toks_g, toks),
                     jnp.where(use_greedy, lp_g, lps))
 
@@ -114,10 +164,7 @@ class InferenceEngine:
             small = model.init_cache(1, self.max_len)
             logits, small = model.prefill(params, tokens, small,
                                           last_pos=last_pos)
-            def put(big, little):
-                idx = (0, slot) + (0,) * (big.ndim - 2)
-                return jax.lax.dynamic_update_slice(big, little.astype(big.dtype), idx)
-            cache = jax.tree.map(put, cache, small)
+            cache = model.inject_cache_slot(cache, small, slot)
             toks, lps = _sample(logits, key, temperature)
             return toks, lps, cache
 
@@ -134,6 +181,11 @@ class InferenceEngine:
     def add_request(self, req: GenRequest):
         with self._lock:
             self._commands.append(("add", req))
+
+    def inject(self, handoff: KVHandoff):
+        """Queue a prefilled trajectory for decode (PD disaggregation)."""
+        with self._lock:
+            self._commands.append(("inject", handoff))
 
     def abort(self, request_id: str):
         with self._lock:
@@ -185,6 +237,52 @@ class InferenceEngine:
             jnp.float32(req.temperature))
         self.prefill_tokens += s.pos
         self._append_token(i, int(tok[0]), float(lp[0]))
+        if self.role == "prefill" and s.active:
+            # still generating after the first token: migrate the slot's
+            # cache to a decode-role engine instead of decoding here
+            self._emit_handoff(i)
+        return True
+
+    def _emit_handoff(self, i: int):
+        if self.on_handoff is None:
+            raise RuntimeError(
+                "prefill-role engine needs an on_handoff hook "
+                "(set by LLMProxy(pd_disagg=True))")
+        s = self._slots[i]
+        handoff = KVHandoff(
+            request=s.request, tokens=list(s.tokens),
+            new_tokens=list(s.new_tokens), logprobs=list(s.logprobs),
+            pos=s.pos, start_version=s.start_version,
+            cache=self.model.extract_cache_slot(self._cache, i),
+            weight_version=self.weight_version)
+        s.active = False
+        s.request = None
+        self.handoffs_out += 1
+        self.on_handoff(handoff)
+
+    def _admit_handoff(self, handoff: KVHandoff) -> bool:
+        free = [i for i, s in enumerate(self._slots) if not s.active]
+        if not free:
+            return False
+        i = free[0]
+        s = self._slots[i]
+        s.active = True
+        s.request = handoff.request
+        s.tokens = list(handoff.tokens)
+        s.new_tokens = list(handoff.new_tokens)
+        s.logprobs = list(handoff.logprobs)
+        s.pos = handoff.pos
+        s.start_version = handoff.start_version
+        if handoff.weight_version != self.weight_version:
+            # the handoff sat in the command queue across a weight sync:
+            # protocol step (5) only recomputes ACTIVE slots, so rebuild
+            # this cache under the current weights instead of injecting
+            # the stale one
+            self._reprefill_slot(i)
+        else:
+            self._cache = self.model.inject_cache_slot(self._cache,
+                                                       handoff.cache, i)
+        self.handoffs_in += 1
         return True
 
     def _append_token(self, i: int, tok: int, lp: float):
@@ -213,34 +311,98 @@ class InferenceEngine:
         if self.on_finish:
             self.on_finish(res)
 
+    @staticmethod
+    def _cmd_request_id(cmd) -> Optional[str]:
+        kind, payload = cmd
+        if kind == "add":
+            return payload.request_id
+        if kind == "inject":
+            return payload.request.request_id
+        return None
+
+    def _emit_aborted_pending(self, cmd):
+        """A never-admitted ADD/INJECT was aborted: still emit a result so
+        the proxy/EnvManager callback chain observes the cancellation."""
+        kind, payload = cmd
+        if kind == "add":
+            res = GenResult(request_id=payload.request_id, tokens=[],
+                            logprobs=[], finish_reason="aborted",
+                            weight_version=self.weight_version,
+                            prefill_tokens=0, decode_tokens=0)
+        else:
+            res = GenResult(request_id=payload.request.request_id,
+                            tokens=list(payload.new_tokens),
+                            logprobs=list(payload.logprobs),
+                            finish_reason="aborted",
+                            weight_version=self.weight_version,
+                            prefill_tokens=len(payload.request.prompt),
+                            decode_tokens=0)
+        self._results[res.request_id] = res
+        if self.on_finish:
+            self.on_finish(res)
+
     def _abort(self, request_id: str):
         for i, s in enumerate(self._slots):
             if s.active and s.request.request_id == request_id:
                 self._finish(i, "aborted")
                 return
-        # not yet admitted: drop from pending adds
+        # not yet admitted: drop from pending adds/injects
+        dropped = None
         with self._lock:
-            self._commands = collections.deque(
-                c for c in self._commands
-                if not (c[0] == "add" and c[1].request_id == request_id))
+            kept = collections.deque()
+            for c in self._commands:
+                if dropped is None and self._cmd_request_id(c) == request_id:
+                    dropped = c
+                else:
+                    kept.append(c)
+            self._commands = kept
+        if dropped is not None:
+            self._emit_aborted_pending(dropped)
+
+    def _drain_commands(self):
+        """Process queued commands. ABORTs always drain — a blocked ADD or
+        INJECT (no free slot / suspended) defers itself and every later
+        admission (FIFO preserved) but must not head-of-line-block
+        cancellations queued behind it."""
+        with self._lock:
+            pending = list(self._commands)
+            self._commands.clear()
+        deferred = []
+        for cmd in pending:
+            kind, payload = cmd
+            if kind == "abort":
+                hit = next((c for c in deferred
+                            if self._cmd_request_id(c) == payload), None)
+                if hit is not None:
+                    deferred.remove(hit)
+                    self._emit_aborted_pending(hit)
+                else:
+                    self._abort(payload)
+                continue
+            if (kind == "add" and len(payload.prompt)
+                    + payload.max_new_tokens > self.max_len):
+                # unservable at ANY occupancy: deferring would wedge the
+                # engine (and head-of-line-block everything behind it)
+                # forever, so unwind the request immediately
+                self._emit_aborted_pending(cmd)
+                continue
+            blocked = self.suspended or bool(deferred)
+            if not blocked:
+                ok = (self._admit(payload) if kind == "add"
+                      else self._admit_handoff(payload))
+                blocked = not ok
+            if blocked:
+                deferred.append(cmd)
+        if deferred:
+            with self._lock:
+                self._commands.extendleft(reversed(deferred))
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine iteration: drain commands, then one decode step for
         all active slots. Returns number of active slots decoded."""
         # 1) command processing between engine steps (non-blocking)
-        while True:
-            with self._lock:
-                if not self._commands:
-                    break
-                kind, payload = self._commands.popleft()
-            if kind == "abort":
-                self._abort(payload)
-            elif kind == "add":
-                if self.suspended or not self._admit(payload):
-                    with self._lock:
-                        self._commands.appendleft((kind, payload))
-                    break
+        self._drain_commands()
         # 2) one decode step over active slots
         active = [i for i, s in enumerate(self._slots) if s.active]
         self.steps += 1
@@ -249,15 +411,15 @@ class InferenceEngine:
         self.busy_steps += 1
         last_tokens = np.zeros((self.max_slots, 1), np.int32)
         positions = np.zeros((self.max_slots,), np.int32)
-        temp = 1.0
+        temps = np.ones((self.max_slots,), np.float32)
         for i, s in enumerate(self._slots):
             if s.active:
                 last_tokens[i, 0] = s.tokens[-1]
                 positions[i] = s.pos - 1  # index of the token we feed
-                temp = s.request.temperature
+                temps[i] = s.request.temperature
         toks, lps, self._cache = self._decode_jit(
             self.params, jnp.asarray(last_tokens), self._cache,
-            jnp.asarray(positions), self._next_key(), jnp.float32(temp))
+            jnp.asarray(positions), self._next_key(), jnp.asarray(temps))
         toks, lps = np.asarray(toks), np.asarray(lps)
         for i in active:
             if self._slots[i].active:

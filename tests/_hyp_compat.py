@@ -1,0 +1,113 @@
+"""Deterministic fallback for the slice of the ``hypothesis`` API this test
+suite uses (``given`` / ``settings`` / ``strategies``).
+
+Tier-1 CI images may not ship hypothesis (see requirements-dev.txt). A
+module-level ``pytest.importorskip("hypothesis")`` would skip the WHOLE
+module — including the plain parametrized tests that live in the same
+files — so instead the test modules import these shims on ImportError:
+each property test then runs over a small fixed set of deterministic
+examples (boundaries, midpoints, and cycled composites) rather than being
+skipped. With hypothesis installed, the real library is used unchanged.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import List
+
+
+class _Strategy:
+    def __init__(self, examples: List):
+        self.examples = list(examples)
+
+
+def _dedup(xs):
+    out = []
+    for x in xs:
+        if x not in out:
+            out.append(x)
+    return out
+
+
+class st:
+    """Deterministic stand-ins for ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=100):
+        mid = (min_value + max_value) // 2
+        return _Strategy(_dedup([min_value, min(min_value + 1, max_value),
+                                 mid, max(max_value - 1, min_value),
+                                 max_value]))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0):
+        return _Strategy(_dedup([min_value, (min_value + max_value) / 2,
+                                 max_value]))
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True])
+
+    @staticmethod
+    def text(max_size=80):
+        cases = ["", "a", "hello world", "\n\t ", "π ∆ → 🦊",
+                 ("the quick brown fox " * 12)]
+        return _Strategy(_dedup([c[:max_size] for c in cases]))
+
+    @staticmethod
+    def sampled_from(xs):
+        return _Strategy(list(xs))
+
+    @staticmethod
+    def tuples(*strategies):
+        pools = [s.examples for s in strategies]
+        n = max(len(p) for p in pools)
+        return _Strategy([tuple(p[(i + j) % len(p)]
+                                for j, p in enumerate(pools))
+                          for i in range(n)])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        ex = elements.examples
+
+        def take(n, off=0):
+            return [ex[(off + i) % len(ex)] for i in range(n)]
+
+        sizes = sorted({min_size, max(min_size, 1),
+                        (min_size + max_size) // 2, max_size})
+        return _Strategy([take(n, off) for off, n in enumerate(sizes)
+                          if n >= min_size])
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the wrapped test once per deterministic example tuple, cycling
+    shorter example pools (the fallback analogue of hypothesis' sampler)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            pos_pools = [s.examples for s in arg_strategies]
+            kw_pools = {k: s.examples for k, s in kw_strategies.items()}
+            n = max([len(p) for p in pos_pools]
+                    + [len(p) for p in kw_pools.values()] + [1])
+            for i in range(n):
+                pos = [p[i % len(p)] for p in pos_pools]
+                kws = {k: p[i % len(p)] for k, p in kw_pools.items()}
+                fn(*args, *pos, **kws, **kwargs)
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution (hypothesis' own @given does the same). Keyword
+        # strategies remove their named parameter; positional strategies
+        # fill the trailing parameters.
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in kw_strategies]
+        if arg_strategies:
+            kept = kept[:-len(arg_strategies)]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(**_kwargs):
+    """No-op: example counts are fixed by the fallback strategies."""
+    return lambda fn: fn

@@ -5,7 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # CI image without hypothesis: run the property
+    from _hyp_compat import given, settings, st   # tests on deterministic
+    # fallback examples instead of skipping the whole module
 
 from repro.kernels import ref as R
 from repro.kernels.decode_attention import decode_attention

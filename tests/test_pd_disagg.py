@@ -1,0 +1,325 @@
+"""Live prefill/decode disaggregation (§6.3) + engine correctness fixes:
+
+- greedy parity: a request served colocated and through the
+  prefill -> KV-handoff -> decode path emits identical tokens;
+- per-pool counters: prefill tokens land only on the prefill pool,
+  decode tokens only on the decode pool;
+- suspend/update/resume and ABORT semantics survive the handoff;
+- per-slot temperature in batched decode (mixed-temperature batches);
+- ABORTs drain past a head-of-line-blocked ADD;
+- SampleBuffer FIFO uses a numeric sequence, not lexicographic traj_id;
+- redundancy cancellation aborts only the surplus beyond headroom.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import EMState, EngineHandle, LLMProxy, build_pd_proxy
+from repro.core.buffer import SampleBuffer
+from repro.core.scheduler import LiveRLRunner, RunnerConfig
+from repro.data.pipeline import Trajectory
+from repro.models import Model
+from repro.rl.engine import GenRequest, InferenceEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("tiny")
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _greedy_colocated(model, params, prompt, n, max_len=96):
+    eng = InferenceEngine(model, params, max_slots=2, max_len=max_len)
+    eng.add_request(GenRequest(request_id="ref", prompt=list(prompt),
+                               max_new_tokens=n, temperature=0.0))
+    eng.run_until_idle()
+    return eng.pop_result("ref").tokens
+
+
+def _serve(proxy, reqs, max_pumps=2000):
+    out = {}
+    for r in reqs:
+        proxy.submit(r, callback=lambda res: out.__setitem__(
+            res.request_id, res))
+    pumps = 0
+    while proxy.busy:
+        proxy.pump()
+        pumps += 1
+        assert pumps < max_pumps, "proxy did not drain"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tentpole: KV handoff parity + pool counters
+# ---------------------------------------------------------------------------
+def test_pd_greedy_parity_and_pool_counters(tiny_setup):
+    cfg, model, params = tiny_setup
+    prompts = [[1, 5, 7, 9], [1, 2, 3], [1, 9, 9, 4, 2]]
+    proxy = build_pd_proxy(model, params, max_slots=4, max_len=96, seed=7)
+    reqs = [GenRequest(request_id=f"r{i}", prompt=p, max_new_tokens=6,
+                       temperature=0.0) for i, p in enumerate(prompts)]
+    out = _serve(proxy, reqs)
+    for i, p in enumerate(prompts):
+        assert out[f"r{i}"].tokens == _greedy_colocated(model, params, p, 6)
+        assert out[f"r{i}"].finish_reason in ("stop", "length")
+    stats = proxy.stats()
+    assert stats["handoffs"] == 3
+    by_role = {e["role"]: e for e in stats["engines"]}
+    assert by_role["prefill"]["prefill_tokens"] == sum(map(len, prompts))
+    assert by_role["prefill"]["decode_tokens"] == 0
+    assert by_role["decode"]["prefill_tokens"] == 0
+    assert by_role["decode"]["decode_tokens"] > 0
+
+
+def test_pd_suspend_update_resume_across_handoff(tiny_setup):
+    """Weight-sync protocol on the disaggregated plane: suspending,
+    re-publishing the same weights as v1 (cache recompute included), and
+    resuming must not change the greedy token stream."""
+    cfg, model, params = tiny_setup
+    proxy = build_pd_proxy(model, params, max_slots=2, max_len=96, seed=11)
+    out = {}
+    proxy.submit(GenRequest(request_id="x", prompt=[1, 4, 2],
+                            max_new_tokens=8, temperature=0.0),
+                 callback=lambda r: out.__setitem__(r.request_id, r))
+    proxy.pump()           # prefill + handoff + first decode step
+    proxy.pump()
+    proxy.suspend()
+    proxy.update_all(params, version=1, recompute_caches=True)
+    proxy.resume()
+    pumps = 0
+    while proxy.busy:
+        proxy.pump()
+        pumps += 1
+        assert pumps < 200
+    assert out["x"].tokens == _greedy_colocated(model, params, [1, 4, 2], 8)
+    assert out["x"].weight_version == 1
+
+
+def test_pd_abort_midflight_and_during_migration(tiny_setup):
+    cfg, model, params = tiny_setup
+    proxy = build_pd_proxy(model, params, max_slots=2, max_len=96, seed=13)
+    out = {}
+    # abort while decoding on the decode engine
+    proxy.submit(GenRequest(request_id="a", prompt=[1, 2],
+                            max_new_tokens=40, temperature=1.0),
+                 callback=lambda r: out.__setitem__(r.request_id, r))
+    proxy.pump()
+    proxy.pump()
+    proxy.abort("a")
+    while proxy.busy:
+        proxy.pump()
+    assert out["a"].finish_reason == "aborted"
+    assert len(out["a"].tokens) < 40
+    # abort before the first pump: resolved at/with the handoff, never
+    # reaching the decode pool
+    proxy.submit(GenRequest(request_id="b", prompt=[1, 3],
+                            max_new_tokens=40, temperature=1.0),
+                 callback=lambda r: out.__setitem__(r.request_id, r))
+    proxy.abort("b")
+    pumps = 0
+    while proxy.busy:
+        proxy.pump()
+        pumps += 1
+        assert pumps < 100
+    assert out["b"].finish_reason == "aborted"
+
+
+def test_stale_handoff_recomputed_on_inject(tiny_setup):
+    """A KVHandoff that crosses a weight sync while queued (protocol step
+    (5) only recomputes ACTIVE slots) must be re-prefilled under the new
+    weights at injection, not decoded against its stale cache."""
+    import jax.numpy as jnp
+    cfg, model, params = tiny_setup
+    params2 = model.init(jax.random.PRNGKey(42))
+    handoffs = []
+    prefill = InferenceEngine(model, params, max_slots=1, max_len=96,
+                              role="prefill", on_handoff=handoffs.append)
+    prefill.add_request(GenRequest(request_id="s", prompt=[1, 3, 5],
+                                   max_new_tokens=6, temperature=0.0))
+    prefill.step()
+    (h,) = handoffs
+    decode = InferenceEngine(model, params, max_slots=1, max_len=96,
+                             role="decode")
+    decode.update_params(params2, version=1)   # sync BEFORE the inject
+    decode.inject(h)
+    decode.run_until_idle()
+    res = decode.pop_result("s")
+    # expected: greedy continuation of (prompt + v0 first token) computed
+    # entirely under params2
+    prefix = list(h.tokens)
+    cache = model.init_cache(1, 96)
+    lg, cache = model.prefill(params2, jnp.asarray([prefix]), cache)
+    expect = []
+    pos = len(prefix)
+    for _ in range(5):
+        nt = int(jnp.argmax(lg[0]))
+        expect.append(nt)
+        lg, cache = model.decode_step(params2, jnp.asarray([[nt]]), cache,
+                                      jnp.asarray([pos]))
+        pos += 1
+    assert res.tokens[1:] == expect
+    assert res.weight_version == 1
+
+
+def test_pd_finish_at_prefill(tiny_setup):
+    """max_new_tokens=1 completes on the prefill engine — no handoff."""
+    cfg, model, params = tiny_setup
+    proxy = build_pd_proxy(model, params, max_slots=2, max_len=96, seed=17)
+    out = _serve(proxy, [GenRequest(request_id="one", prompt=[1, 5, 7],
+                                    max_new_tokens=1, temperature=0.0)])
+    ref = _greedy_colocated(model, params, [1, 5, 7], 1)
+    assert out["one"].tokens == ref
+    assert proxy.stats()["handoffs"] == 0
+
+
+def test_cache_slot_extract_inject_roundtrip(tiny_setup):
+    cfg, model, params = tiny_setup
+    cache = model.init_cache(4, 64)
+    lg, cache = model.prefill(params, jax.numpy.asarray([[1, 5, 7, 9],
+                                                         [2, 6, 8, 3],
+                                                         [0, 0, 0, 0],
+                                                         [0, 0, 0, 0]]),
+                              cache)
+    slot1 = model.extract_cache_slot(cache, 1)
+    dst = model.init_cache(4, 64)
+    dst = model.inject_cache_slot(dst, slot1, 3)
+    for a, b in zip(jax.tree.leaves(slot1),
+                    jax.tree.leaves(model.extract_cache_slot(dst, 3))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# satellite: per-slot temperature
+# ---------------------------------------------------------------------------
+def test_per_slot_temperature_in_batched_decode(tiny_setup):
+    """A greedy (temperature=0) slot must stay greedy even when it shares
+    the batched decode with a hot slot admitted later (previously the LAST
+    active slot's temperature was applied to every slot)."""
+    cfg, model, params = tiny_setup
+    eng = InferenceEngine(model, params, max_slots=2, max_len=96, seed=5)
+    # cold first (slot 0), hot second (slot 1): pre-fix the hot slot's
+    # temperature would override the cold slot's greedy sampling
+    eng.add_request(GenRequest(request_id="cold", prompt=[1, 5, 7, 9],
+                               max_new_tokens=8, temperature=0.0))
+    eng.add_request(GenRequest(request_id="hot", prompt=[1, 2, 3],
+                               max_new_tokens=8, temperature=3.0))
+    eng.run_until_idle()
+    cold = eng.pop_result("cold")
+    assert cold.tokens == _greedy_colocated(model, params, [1, 5, 7, 9], 8)
+
+
+# ---------------------------------------------------------------------------
+# satellite: ABORT drains past a blocked ADD
+# ---------------------------------------------------------------------------
+def test_abort_drains_behind_blocked_add(tiny_setup):
+    cfg, model, params = tiny_setup
+    eng = InferenceEngine(model, params, max_slots=1, max_len=96)
+    eng.add_request(GenRequest(request_id="a", prompt=[1, 2],
+                               max_new_tokens=40, temperature=1.0))
+    eng.step()                 # admit "a": the only slot is now busy
+    eng.add_request(GenRequest(request_id="b", prompt=[1, 3],
+                               max_new_tokens=4, temperature=1.0))
+    eng.abort("a")             # queued BEHIND the blocked ADD
+    eng.step()                 # ADD "b" still blocked, ABORT must drain
+    res = eng.pop_result("a")
+    assert res is not None and res.finish_reason == "aborted"
+    eng.run_until_idle()
+    assert eng.pop_result("b").finish_reason in ("stop", "length")
+
+
+def test_oversized_request_rejected_not_wedged(tiny_setup):
+    """An ADD that can never fit (prompt + max_new_tokens > max_len) must
+    unwind immediately instead of deferring forever and head-of-line
+    blocking the engine."""
+    cfg, model, params = tiny_setup
+    eng = InferenceEngine(model, params, max_slots=2, max_len=32)
+    eng.add_request(GenRequest(request_id="big", prompt=[1] * 20,
+                               max_new_tokens=20, temperature=1.0))
+    eng.add_request(GenRequest(request_id="ok", prompt=[1, 2],
+                               max_new_tokens=4, temperature=1.0))
+    eng.run_until_idle(max_steps=200)
+    assert eng.pop_result("big").finish_reason == "aborted"
+    assert eng.pop_result("ok").finish_reason in ("stop", "length")
+
+
+def test_abort_of_pending_add_emits_result(tiny_setup):
+    """Aborting a request that was never admitted still produces an
+    'aborted' GenResult so the proxy/EnvManager callback chain unwinds."""
+    cfg, model, params = tiny_setup
+    eng = InferenceEngine(model, params, max_slots=1, max_len=96)
+    eng.add_request(GenRequest(request_id="a", prompt=[1, 2],
+                               max_new_tokens=30, temperature=1.0))
+    eng.step()
+    eng.add_request(GenRequest(request_id="b", prompt=[1, 3],
+                               max_new_tokens=4, temperature=1.0))
+    eng.abort("b")
+    eng.step()
+    res = eng.pop_result("b")
+    assert res is not None
+    assert res.finish_reason == "aborted" and res.tokens == []
+    eng.abort("a")
+    eng.run_until_idle()
+
+
+# ---------------------------------------------------------------------------
+# satellite: FIFO buffer ordering
+# ---------------------------------------------------------------------------
+def _traj(tid, sv=0):
+    return Trajectory(traj_id=tid, task="math", tokens=[1, 2],
+                      loss_mask=[0, 1], logprobs=[0.0, -1.0],
+                      start_version=sv)
+
+
+def test_buffer_fifo_is_numeric_not_lexicographic():
+    buf = SampleBuffer(alpha=8)
+    for tid in ["t2", "t10", "t1"]:     # lexicographic would give t1,t10,t2
+        buf.put(_traj(tid))
+    batch = buf.get_batch(3, timeout=1)
+    assert [t.traj_id for t in batch] == ["t2", "t10", "t1"]
+
+
+def test_buffer_fifo_within_version():
+    buf = SampleBuffer(alpha=8)
+    buf.put(_traj("t9", sv=1))
+    buf.put(_traj("t10", sv=0))
+    buf.put(_traj("t2", sv=0))
+    batch = buf.try_get_batch(3)
+    assert [t.traj_id for t in batch] == ["t10", "t2", "t9"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: redundancy cancels only the surplus
+# ---------------------------------------------------------------------------
+class _FakeEM:
+    def __init__(self, turns):
+        self.state = EMState.GENERATING
+        self.turns = turns
+        self.aborted = False
+
+    def abort(self):
+        self.aborted = True
+
+
+def test_cancel_surplus_keeps_headroom():
+    runner = LiveRLRunner.__new__(LiveRLRunner)   # logic-only instance
+    runner.cfg = RunnerConfig(batch_size=4, group_size=2, redundancy=1.5)
+    ems = [_FakeEM(t) for t in [5, 0, 3, 1, 4, 2, 7, 6]]
+    runner.active = list(ems)
+    runner._cancel_surplus()
+    aborted = [em for em in ems if em.aborted]
+    # headroom = ceil(4 * 1.5) = 6 -> exactly 2 of 8 cancelled, slowest
+    # (fewest turns) first
+    assert len(aborted) == 2
+    assert sorted(em.turns for em in aborted) == [0, 1]
+
+
+def test_cancel_surplus_noop_within_headroom():
+    runner = LiveRLRunner.__new__(LiveRLRunner)
+    runner.cfg = RunnerConfig(batch_size=4, group_size=2, redundancy=2.0)
+    ems = [_FakeEM(t) for t in range(5)]          # 5 <= ceil(4*2) = 8
+    runner.active = list(ems)
+    runner._cancel_surplus()
+    assert not any(em.aborted for em in ems)

@@ -8,7 +8,12 @@ import threading
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # CI image without hypothesis: run the property
+    from _hyp_compat import given, settings, st   # tests on deterministic
+    # fallback examples instead of skipping the whole module
 
 from repro.core.buffer import SampleBuffer
 from repro.data.pipeline import Trajectory

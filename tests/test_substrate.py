@@ -6,8 +6,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # CI image without hypothesis: run the property
+    from _hyp_compat import given, settings, st   # tests on deterministic
+    # fallback examples instead of skipping the whole module
 
 from repro.checkpoint import checkpointer as CK
 from repro.configs import get_config
