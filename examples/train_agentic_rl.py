@@ -30,7 +30,8 @@ def main():
     ap.add_argument("--alpha", type=int, default=1)
     ap.add_argument("--tasks", default="math,game")
     ap.add_argument("--mode", default="rollart",
-                    choices=["rollart", "areal", "sync", "sync_plus"])
+                    choices=["rollart", "areal", "one_off", "sync",
+                             "sync_plus"])
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--max-new-tokens", type=int, default=24)
     args = ap.parse_args()
@@ -54,24 +55,24 @@ def main():
                      "swe": "H800", "math": "H20", "game": "H20",
                      "default": "H20"})
 
-    runner = LiveRLRunner(
-        RunnerConfig(batch_size=args.batch, group_size=args.group,
-                     alpha=args.alpha, mode=args.mode,
-                     tasks=tuple(args.tasks.split(",")),
-                     max_new_tokens=args.max_new_tokens),
-        proxy, state, step_fn, ServerlessPlatform(), format_bonus_reward,
-        seq_len=640)
-
     t0 = time.time()
-    for h in runner.run_steps(args.steps):
-        print(f"step {h.step:3d}  loss {h.loss:+.4f}  "
-              f"reward {h.reward_mean:+.3f}  wall {h.wall_s:5.1f}s  "
-              f"evicted {h.evicted}  aborted {h.aborted}")
-    stats = runner.proxy.stats()
-    print(f"\ndone in {time.time() - t0:.0f}s; routed by pool: "
-          f"{stats['routed_by_pool']}; serverless reward calls: "
-          f"{runner.serverless.stats.invocations}; weight versions "
-          f"published: {runner.store.latest_version + 1}")
+    with LiveRLRunner(
+            RunnerConfig(batch_size=args.batch, group_size=args.group,
+                         alpha=args.alpha, mode=args.mode,
+                         tasks=tuple(args.tasks.split(",")),
+                         max_new_tokens=args.max_new_tokens),
+            proxy, state, step_fn, ServerlessPlatform(),
+            format_bonus_reward, seq_len=640) as runner:
+        for h in runner.run_steps(args.steps):
+            print(f"step {h.step:3d}  loss {h.loss:+.4f}  "
+                  f"reward {h.reward_mean:+.3f}  wall {h.wall_s:5.1f}s  "
+                  f"ovl {h.decode_during_train:4d}  "
+                  f"evicted {h.evicted}  aborted {h.aborted}")
+        stats = runner.proxy.stats()
+        print(f"\ndone in {time.time() - t0:.0f}s; routed by pool: "
+              f"{stats['routed_by_pool']}; serverless reward calls: "
+              f"{runner.serverless.stats.invocations}; weight versions "
+              f"published: {runner.store.latest_version + 1}")
 
 
 if __name__ == "__main__":

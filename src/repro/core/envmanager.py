@@ -133,11 +133,22 @@ class EnvManager:
 
     # ------------------------------------------------------------------
     def abort(self):
-        """Cancel this trajectory (staleness bound / redundant rollouts)."""
+        """Cancel this trajectory (staleness bound / redundant rollouts).
+
+        Idempotent. A GENERATING manager is cancelled through the proxy
+        and completes via the aborted-result callback; a manager that is
+        not generating (IDLE, or mid-transition) is completed HERE —
+        ``on_complete`` must still fire, otherwise the runner never learns
+        the manager terminated and leaks it in its active set forever.
+        """
+        if self.state in (EMState.DONE, EMState.FAILED, EMState.ABORTED):
+            return                       # already completed; hook already ran
         if self.state == EMState.GENERATING and self._active_req:
             self.proxy.abort(self._active_req)
-        else:
-            self.state = EMState.ABORTED
+            return
+        self.state = EMState.ABORTED
+        if self.on_complete:
+            self.on_complete(self)
 
     def trajectory(self) -> Trajectory:
         return Trajectory(

@@ -33,7 +33,7 @@ class EngineHandle:
     name: str = ""
 
     def load(self) -> int:
-        return self.engine.num_active + len(self.engine._commands)
+        return self.engine.num_active + self.engine.queue_len
 
     @property
     def role(self) -> str:
@@ -157,16 +157,18 @@ class LLMProxy:
 
     def abort(self, request_id: str):
         """ABORT command: cancel one trajectory's generation (wherever it
-        currently lives — prefill engine, in migration, or decode engine)."""
+        currently lives — prefill engine, in migration, or decode engine).
+        Unknown or already-finished ids are a no-op: they are not counted
+        in ``aborted`` (nothing was cancelled) and, in PD mode, must not
+        pin an ``_abort_requested`` entry forever."""
         with self._lock:
             h = self._route.get(request_id)
+            if h is None:
+                return
             self.aborted += 1
-            if self.pd_disagg and h is not None:
-                # known in-flight request only — an unknown/finished id
-                # would otherwise pin a set entry forever
+            if self.pd_disagg:
                 self._abort_requested.add(request_id)
-        if h is not None:
-            h.engine.abort(request_id)
+        h.engine.abort(request_id)
 
     # ------------------------------------------------------------------
     # weight-sync protocol hooks (steps (2)-(4))
@@ -182,7 +184,11 @@ class LLMProxy:
             h.engine.resume()
 
     def update_all(self, params, version: int, recompute_caches: bool = True):
-        """Protocol steps (3) update + (5) KV-cache recomputation."""
+        """Protocol steps (3) update + (5) KV-cache recomputation.
+        Engines already at ``version`` no-op (see
+        ``InferenceEngine.update_params``), so pulling an unchanged store
+        version — always true on iteration 0 — costs nothing instead of
+        re-prefilling every in-flight KV cache."""
         for h in self.handles:
             h.engine.update_params(params, version,
                                    recompute_caches=recompute_caches)

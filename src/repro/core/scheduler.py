@@ -6,32 +6,52 @@ real GRPO updates) through the paper's six-step weight-sync protocol:
   (1) get_batch   — blocking retrieval from SampleBuffer
   (2) suspend     — LLMProxy stops admitting requests (in-flight preserved)
   (3) update      — engines pull the latest weights from the Mooncake store
+                    (a version-matched pull is a no-op: nothing re-prefills)
   (4) resume      — pending generation continues
   (5) recomp      — in-flight trajectories' KV caches rebuilt under the new
                     weights (so they continue instead of restarting)
-  (6) train_step  — the GRPO update, overlapped with resumed rollout
+  (6) train_step  — the GRPO update, genuinely overlapped with rollout
 
-plus trajectory-level staleness enforcement (abort EnvManagers whose
-start_version < n - alpha, every iteration — stricter than AReaL) and
-redundant environment rollouts (launch extra groups, cancel the slowest
+The overlap is real, not cooperative: in the asynchronous modes ("rollart",
+"areal", "one_off") the entire rollout side — proxy pump, EnvManager
+completion cascade, serverless reward scoring — runs on a persistent
+background worker thread that keeps producing into ``SampleBuffer`` while
+the trainer thread executes the six-step protocol. The ONLY barrier between
+the two threads is the suspend → update → resume critical section, taken
+under the shared pump lock so a weight swap never races a decode step.
+Reward scoring is non-blocking (``ServerlessPlatform.invoke_async``): a
+scored trajectory enters the buffer when its future resolves — drained in
+submission order so batch composition stays deterministic — and the weight
+push after each train step happens on its own thread, awaited only at the
+next suspend barrier. ``StepMetrics.decode_during_train`` counts decode
+tokens the engines generated while ``train_step`` ran (> 0 in the threaded
+modes, 0 in the synchronous baselines; see benchmarks/async_overlap.py).
+
+Also implements trajectory-level staleness enforcement (abort EnvManagers
+whose start_version < n - alpha, every rollout tick — stricter than AReaL)
+and redundant environment rollouts (launch extra groups, cancel the slowest
 once the target count is met; exploits GRPO's group structure).
 
 Modes ("rollart", "sync", "sync_plus", "one_off", "areal") reproduce the
 paper's baselines with the same code path, differing only in coordination:
-  sync      — rollout and training strictly alternate; batched env waits
-  sync_plus — sync + async reward + serverless offload
-  one_off   — training consumes the previous iteration's trajectories
-  areal     — staleness bound applied at trajectory start only
-  rollart   — bounded staleness alpha enforced per iteration + affinity
+  sync      — rollout and training strictly alternate; blocking reward
+  sync_plus — sync + async (serverless-offloaded) reward scoring
+  one_off   — training consumes the PREVIOUS iteration's batch while the
+              next one rolls out (threaded; one-step pipeline)
+  areal     — staleness bound applied at trajectory start only (threaded)
+  rollart   — bounded staleness alpha enforced per tick + affinity
+              (threaded)
 """
 from __future__ import annotations
 
+import collections
 import itertools
+import threading
 import time
-from dataclasses import dataclass, field
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro.core.buffer import SampleBuffer
@@ -46,6 +66,7 @@ from repro.envs import make_env
 from repro.rl.trainer import TrainState
 
 MODES = ("rollart", "sync", "sync_plus", "one_off", "areal")
+THREADED_MODES = ("rollart", "areal", "one_off")
 
 
 @dataclass
@@ -64,6 +85,10 @@ class RunnerConfig:
     temperature: float = 1.0
     reward_url: str = "fc://rollart/reward"
     max_pump_steps: int = 200000
+    # backpressure: the worker stops spawning new env groups once the
+    # buffer already holds this many batches ahead of the trainer
+    max_buffered_batches: int = 2
+    batch_timeout_s: float = 300.0    # threaded-mode starvation guard
     seed: int = 0
 
 
@@ -73,13 +98,26 @@ class StepMetrics:
     wall_s: float
     loss: float
     reward_mean: float
-    evicted: int
-    aborted: int
+    evicted: int                 # evictions during THIS step (delta)
+    aborted: int                 # aborts during THIS step (delta)
     trajs: int
+    decode_during_train: int = 0     # decode tokens generated while
+    #                                  train_step ran (overlap evidence)
+    batch_fetched_step: int = 0      # trainer step at which the trained
+    #                                  batch left the buffer (-1 = primed
+    #                                  before any training; < step in
+    #                                  one_off mode: previous-batch rule)
+    batch_max_version: int = 0       # newest start_version in the batch
 
 
 class LiveRLRunner:
-    """Cooperative single-process runner of the full RollArt pipeline."""
+    """Producer/consumer runner of the full RollArt pipeline.
+
+    Asynchronous modes run the rollout side on a background worker thread
+    (`_rollout_worker_loop`); synchronous baselines tick the same rollout
+    code cooperatively on the trainer thread. Call :meth:`close` (or use as
+    a context manager) to join the worker and the push thread.
+    """
 
     def __init__(self, cfg: RunnerConfig, proxy: LLMProxy,
                  train_state: TrainState,
@@ -108,12 +146,37 @@ class LiveRLRunner:
         self.active: List[EnvManager] = []
         self._seed_counter = itertools.count(cfg.seed * 1000)
         self.history: List[StepMetrics] = []
+        self.threaded = cfg.mode in THREADED_MODES
+        # async modes score rewards through invoke_async + a pending-
+        # futures drain; plain "sync" keeps the blocking inline call
+        self._use_async_reward = cfg.mode != "sync"
+        # pump-vs-control barrier: the worker holds it per rollout tick,
+        # the trainer holds it across suspend -> update -> resume
+        self._pump_lock = threading.Lock()
+        self._completed_lock = threading.Lock()
+        self._completed_this_round: List[EnvManager] = []
+        # (trajectory, reward-future), drained in submission order
+        self._pending_rewards: collections.deque = collections.deque()
+        self._run_rollout = threading.Event()
+        self._stop = threading.Event()
+        self._rollout_thread: Optional[threading.Thread] = None
+        self._rollout_error: Optional[BaseException] = None
+        # async weight push: one thread so publications stay ordered
+        self._push_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="weight-push")
+        self._push_future: Optional[Future] = None
+        # one_off pipeline state: the batch fetched last step, trained on
+        # this step while its successor rolls out
+        self._prev_batch: Optional[List[Trajectory]] = None
+        self._prev_batch_fetched_step = -1
+        self.last_batch: List[Trajectory] = []
+        self._last_evicted = 0
+        self._last_aborted = 0
         # publish v0 weights
         push_params(self.store, self.state.params, version=0)
-        self._completed_this_round: List[EnvManager] = []
 
     # ------------------------------------------------------------------
-    # rollout side
+    # rollout side (worker thread in threaded modes, cooperative in sync)
     # ------------------------------------------------------------------
     def _spawn_group(self, task: str, group_id: str, n: int):
         for _ in range(n):
@@ -128,10 +191,13 @@ class LiveRLRunner:
             em.start(version=self.version, seed=next(self._seed_counter))
 
     def _on_em_complete(self, em: EnvManager):
-        self._completed_this_round.append(em)
+        with self._completed_lock:
+            self._completed_this_round.append(em)
 
     def _score_and_buffer(self, em: EnvManager):
-        """Reward stage: serverless scoring as soon as a trajectory lands."""
+        """Reward stage. Async modes submit the serverless call and return
+        immediately — the trajectory enters the buffer when its future
+        resolves (``_drain_rewards``), not inline in the pump."""
         traj = em.trajectory()
         if self.profiler is not None and em.turns:
             prefill = sum(1 for m in em.loss_mask if m == 0)
@@ -146,21 +212,59 @@ class LiveRLRunner:
             "num_tokens": len(traj.tokens),
             "text": self.tok.decode(traj.tokens),
         }
-        traj.reward = float(self.serverless.invoke(self.cfg.reward_url,
-                                                   payload))
-        self.buffer.put(traj)
+        if self._use_async_reward:
+            fut = self.serverless.invoke_async(self.cfg.reward_url, payload)
+            self._pending_rewards.append((traj, fut))
+        else:
+            traj.reward = float(self.serverless.invoke(self.cfg.reward_url,
+                                                       payload))
+            self.buffer.put(traj)
+
+    def _drain_rewards(self, block: bool = False) -> int:
+        """Move reward-scored trajectories into the buffer. Completed-
+        PREFIX drain: trajectories are buffered in reward SUBMISSION order
+        even when a later future resolves first, so batch composition does
+        not depend on serverless timing."""
+        n = 0
+        while self._pending_rewards:
+            traj, fut = self._pending_rewards[0]
+            if not block and not fut.done():
+                break
+            traj.reward = float(fut.result())
+            self._pending_rewards.popleft()
+            self.buffer.put(traj)
+            n += 1
+        return n
+
+    def _drain_completions(self) -> int:
+        with self._completed_lock:
+            done = self._completed_this_round
+            self._completed_this_round = []
+        for em in done:
+            self._score_and_buffer(em)
+            if em in self.active:
+                self.active.remove(em)
+        return len(done)
 
     def _enforce_staleness(self):
-        """RollArt: per-iteration trajectory-level staleness control."""
+        """RollArt: per-tick trajectory-level staleness control."""
         if self.cfg.mode == "areal":
             return   # AReaL bounds staleness at trajectory start only
         bound = self.version - self.cfg.alpha
-        for em in self.active:
+        for em in list(self.active):
             if em.state == EMState.GENERATING and em.start_version < bound:
                 em.abort()
 
     def _ensure_inflight(self):
-        """Keep enough environment groups running to feed the buffer."""
+        """Keep enough environment groups running to feed the buffer —
+        unless it is already ``max_buffered_batches`` ahead of the trainer
+        (backpressure: the worker must not produce unboundedly). The
+        backlog includes trajectories parked on unresolved reward futures,
+        or slow serverless calls would defeat the bound."""
+        backlog = self.buffer.size() + len(self._pending_rewards)
+        if (backlog >= self.cfg.batch_size
+                * max(1, self.cfg.max_buffered_batches)):
+            return
         need_groups = int(np.ceil(
             self.cfg.batch_size / self.cfg.group_size * self.cfg.redundancy))
         alive = len({em.group_id for em in self.active
@@ -170,19 +274,21 @@ class LiveRLRunner:
             gid = f"v{self.version}.g{g}.{task}.{next(self._seed_counter)}"
             self._spawn_group(task, gid, self.cfg.group_size)
 
-    def _pump(self):
-        """One cooperative tick: engines decode; completions cascade."""
-        self.proxy.pump()
-        done, self._completed_this_round = self._completed_this_round, []
-        for em in done:
-            self._score_and_buffer(em)
-            if em in self.active:
-                self.active.remove(em)
+    def _rollout_tick(self) -> int:
+        """One rollout iteration: staleness enforcement, env-group top-up,
+        one proxy pump, completion cascade, reward drain, surplus
+        cancellation. Returns an activity count (0 == idle tick)."""
+        self._enforce_staleness()
+        self._ensure_inflight()
+        n = self.proxy.pump()
+        n += self._drain_completions()
+        n += self._drain_rewards()
         # redundant rollouts: once the buffer has a full batch, cancel the
         # slowest in-flight rollouts beyond what the next iteration can use
         if (self.cfg.redundancy > 1.0
                 and self.buffer.size() >= self.cfg.batch_size):
             self._cancel_surplus()
+        return n
 
     def _cancel_surplus(self):
         """Abort only the surplus beyond ``batch_size * redundancy``
@@ -201,55 +307,198 @@ class LiveRLRunner:
             em.abort()
 
     # ------------------------------------------------------------------
-    # the six-step protocol
+    # background rollout worker (the producer thread)
+    # ------------------------------------------------------------------
+    def _rollout_worker_loop(self):
+        try:
+            while not self._stop.is_set():
+                if not self._run_rollout.wait(timeout=0.05):
+                    continue
+                with self._pump_lock:
+                    if not self._run_rollout.is_set():
+                        continue
+                    n = self._rollout_tick()
+                if n == 0:
+                    time.sleep(0.002)   # idle: yield the GIL to the trainer
+        except BaseException as e:        # surfaced by _await_batch
+            self._rollout_error = e
+            self._run_rollout.clear()
+
+    def _start_rollout_worker(self):
+        if self._stop.is_set():
+            raise RuntimeError("runner is closed; create a new LiveRLRunner")
+        if self._rollout_thread is None:
+            self._rollout_thread = threading.Thread(
+                target=self._rollout_worker_loop, name="rollout-worker",
+                daemon=True)
+            self._rollout_thread.start()
+        self._run_rollout.set()
+
+    def _pause_rollout_worker(self):
+        """Park the worker; returns only once no tick is in flight (any
+        tick that already passed the flag check finishes first)."""
+        self._run_rollout.clear()
+        with self._pump_lock:
+            pass
+
+    def close(self):
+        """Join the rollout worker and the weight-push thread."""
+        self._run_rollout.clear()
+        self._stop.set()
+        if self._rollout_thread is not None:
+            self._rollout_thread.join(timeout=10.0)
+            self._rollout_thread = None
+        self._await_push()
+        self._push_pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------------------
+    # trainer side helpers
+    # ------------------------------------------------------------------
+    def _await_batch(self) -> List[Trajectory]:
+        """Protocol step (1). Threaded modes block on the buffer (the
+        worker produces concurrently); synchronous modes pump the rollout
+        cooperatively until a batch exists."""
+        if self.threaded:
+            deadline = time.monotonic() + self.cfg.batch_timeout_s
+            while True:
+                if self._rollout_error is not None:
+                    raise RuntimeError("rollout worker died") \
+                        from self._rollout_error
+                try:
+                    return self.buffer.get_batch(self.cfg.batch_size,
+                                                 timeout=0.2)
+                except TimeoutError:
+                    if time.monotonic() > deadline:
+                        raise RuntimeError(
+                            "rollout starved: no batch collected")
+        pumps = 0
+        while True:
+            batch = self.buffer.try_get_batch(self.cfg.batch_size)
+            if batch is not None:
+                return batch
+            self._rollout_tick()
+            pumps += 1
+            if pumps > self.cfg.max_pump_steps:
+                raise RuntimeError("rollout starved: no batch collected")
+
+    def _drain_rollout(self):
+        """Synchronous baselines: rollout and training strictly alternate,
+        so — like the simulator's sync mode — leftover in-flight rollouts
+        are CANCELLED after the batch, not completed into the next one
+        (each iteration trains on freshly generated trajectories)."""
+        for em in list(self.active):
+            em.abort()
+        pumps = 0
+        while self.proxy.busy:
+            self.proxy.pump()
+            self._drain_completions()
+            self._drain_rewards()
+            pumps += 1
+            if pumps > self.cfg.max_pump_steps:
+                raise RuntimeError("rollout did not drain")
+        self._drain_completions()
+        self._drain_rewards(block=True)
+
+    def _push_async(self):
+        """Publish the new weights off-thread; the transfer overlaps the
+        resumed rollout and is awaited at the next suspend barrier."""
+        params, version = self.state.params, self.version
+        self._push_future = self._push_pool.submit(
+            push_params, self.store, params, version)
+
+    def _await_push(self):
+        if self._push_future is not None:
+            self._push_future.result()
+            self._push_future = None
+
+    def _decode_tokens_total(self) -> int:
+        return sum(h.engine.decode_tokens for h in self.proxy.handles)
+
+    # ------------------------------------------------------------------
+    # the six-step protocol (the consumer thread)
     # ------------------------------------------------------------------
     def run_steps(self, num_steps: int) -> List[StepMetrics]:
         sync_like = self.cfg.mode in ("sync", "sync_plus")
-        for step in range(num_steps):
-            t0 = time.monotonic()
-            self._ensure_inflight()
-            # (1) get_batch: pump the pipeline until a batch is ready
-            pumps = 0
-            while True:
-                batch_trajs = self.buffer.try_get_batch(self.cfg.batch_size)
-                if batch_trajs is not None:
-                    break
-                self._ensure_inflight()
-                self._pump()
-                pumps += 1
-                if pumps > self.cfg.max_pump_steps:
-                    raise RuntimeError("rollout starved: no batch collected")
-            # (2) suspend
-            self.proxy.suspend()
-            # (3) update: engines pull the newest weights from the store
-            pulled = pull_params(self.store, self.state.params)
-            if pulled is not None:
-                params, v = pulled
-                # (5) recomp happens inside update_all (cache rebuild)
-                self.proxy.update_all(params, v, recompute_caches=True)
-            # (4) resume
-            self.proxy.resume()
-            # (6) train_step (+ publish weights for the next pull)
-            batch = self._pack(batch_trajs)
-            self.state, metrics = self.train_step_fn(self.state, batch)
-            self.version = int(self.state.version)
-            self.buffer.set_version(self.version)
-            self._enforce_staleness()
-            if self.profiler is not None:
-                self.profiler.apply_to(self.proxy)   # §9 online re-routing
-            push_params(self.store, self.state.params, version=self.version)
-            if sync_like:
-                # synchronous baselines: drain all rollout before continuing
-                while self.proxy.busy:
-                    self._pump()
-            rewards = [t.reward for t in batch_trajs]
-            sm = StepMetrics(
-                step=step, wall_s=time.monotonic() - t0,
-                loss=float(metrics["loss"]),
-                reward_mean=float(np.mean(rewards)),
-                evicted=self.buffer.total_evicted,
-                aborted=self.proxy.aborted, trajs=len(batch_trajs))
-            self.history.append(sm)
+        one_off = self.cfg.mode == "one_off"
+        if self.threaded:
+            self._start_rollout_worker()
+        try:
+            for _ in range(num_steps):
+                step = len(self.history)
+                t0 = time.monotonic()
+                # (1) get_batch. one_off trains on the PREVIOUS iteration's
+                # batch (fetched at the end of the last step, so it was in
+                # hand before this step began) while its successor rolls out.
+                if one_off:
+                    if self._prev_batch is None:
+                        self._prev_batch = self._await_batch()   # priming
+                        self._prev_batch_fetched_step = -1
+                    batch_trajs = self._prev_batch
+                    fetched_step = self._prev_batch_fetched_step
+                else:
+                    batch_trajs = self._await_batch()
+                    fetched_step = step
+                self.last_batch = batch_trajs
+                # (2)-(5) the ONLY rollout/trainer barrier: suspend,
+                # pull + update + in-flight KV recompute, resume — atomic
+                # w.r.t. the pump so a weight swap never races a decode.
+                self._await_push()
+                with self._pump_lock:
+                    self.proxy.suspend()
+                    pulled = pull_params(self.store, self.state.params)
+                    if pulled is not None:
+                        params, v = pulled
+                        # (5) recomp happens inside update_all (no-op for
+                        # engines already at version v)
+                        self.proxy.update_all(params, v,
+                                              recompute_caches=True)
+                    self.proxy.resume()
+                # (6) train_step, overlapped with the resumed rollout
+                batch = self._pack(batch_trajs)
+                d0 = self._decode_tokens_total()
+                self.state, metrics = self.train_step_fn(self.state, batch)
+                loss = float(metrics["loss"])   # blocks until step done
+                d1 = self._decode_tokens_total()
+                self.version = int(self.state.version)
+                self.buffer.set_version(self.version)
+                if self.profiler is not None:
+                    with self._pump_lock:       # §9 online re-routing
+                        self.profiler.apply_to(self.proxy)
+                self._push_async()
+                if one_off:
+                    # the batch produced while we trained becomes the NEXT
+                    # iteration's training data
+                    self._prev_batch = self._await_batch()
+                    self._prev_batch_fetched_step = step
+                if sync_like:
+                    self._drain_rollout()
+                rewards = [t.reward for t in batch_trajs]
+                ev_total = self.buffer.total_evicted
+                ab_total = self.proxy.aborted
+                sm = StepMetrics(
+                    step=step, wall_s=time.monotonic() - t0,
+                    loss=loss,
+                    reward_mean=float(np.mean(rewards)),
+                    evicted=ev_total - self._last_evicted,
+                    aborted=ab_total - self._last_aborted,
+                    trajs=len(batch_trajs),
+                    decode_during_train=d1 - d0,
+                    batch_fetched_step=fetched_step,
+                    batch_max_version=max(t.start_version
+                                          for t in batch_trajs))
+                self._last_evicted, self._last_aborted = ev_total, ab_total
+                self.history.append(sm)
+        finally:
+            if self.threaded:
+                self._pause_rollout_worker()
+            self._await_push()
         return self.history
 
     def _pack(self, trajs: List[Trajectory]) -> Dict:

@@ -35,10 +35,43 @@ class ServerlessConfig:
     io_max_s: float = 2.1              # paper §7.5: max 2.1 s/call
     io_tail_prob: float = 0.002        # probability of a tail I/O event
     max_concurrency: int = 1024
+    # live mode: actually sleep the sampled per-call I/O tax instead of
+    # only accounting it — makes blocking vs async reward scoring visible
+    # in wall time (benchmarks/async_overlap.py)
+    sleep_io: bool = False
+
+
+def payload_nbytes(obj) -> int:
+    """Approximate serialized size of an invocation payload (the paper
+    measures up to 5.2 MB per reward call)."""
+    if isinstance(obj, (bytes, bytearray)):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj.encode("utf-8", "ignore"))
+    if obj is None or isinstance(obj, bool):
+        return 1
+    if isinstance(obj, (int, float)):
+        return 8
+    if isinstance(obj, dict):
+        return sum(payload_nbytes(k) + payload_nbytes(v)
+                   for k, v in obj.items())
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return sum(payload_nbytes(x) for x in obj)
+    nbytes = getattr(obj, "nbytes", None)   # numpy / jax arrays
+    if isinstance(nbytes, (int, float)):
+        return int(nbytes)
+    return 64
 
 
 class ServerlessPlatform:
-    """Registry + executor for serverless endpoints ("fc://...")."""
+    """Registry + executor for serverless endpoints ("fc://...").
+
+    Thread-safe: ``invoke`` / ``invoke_async`` may be called concurrently
+    from the rollout worker, the trainer, and pool threads. All shared
+    mutable state (the RNG, the warm map, and every ``stats`` field) is
+    guarded by ``_lock``; ``max_concurrency`` is enforced by blocking
+    admission on the same lock's condition variable.
+    """
 
     def __init__(self, config: Optional[ServerlessConfig] = None,
                  seed: int = 0):
@@ -46,6 +79,7 @@ class ServerlessPlatform:
         self._fns: Dict[str, Callable] = {}
         self._pool = ThreadPoolExecutor(max_workers=32)
         self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
         self._warm: Dict[str, float] = {}   # url -> last-used wall time
         self._active = 0
         self._rng = random.Random(seed)
@@ -59,10 +93,11 @@ class ServerlessPlatform:
 
     # ------------------------------------------------------------------
     def sample_io_s(self) -> float:
-        if self._rng.random() < self.cfg.io_tail_prob:
-            return self._rng.uniform(0.5, self.cfg.io_max_s)
-        return max(0.0, self._rng.gauss(self.cfg.io_mean_s,
-                                        self.cfg.io_mean_s / 2))
+        with self._lock:
+            if self._rng.random() < self.cfg.io_tail_prob:
+                return self._rng.uniform(0.5, self.cfg.io_max_s)
+            return max(0.0, self._rng.gauss(self.cfg.io_mean_s,
+                                            self.cfg.io_mean_s / 2))
 
     def is_cold(self, url: str, now: Optional[float] = None) -> bool:
         now = time.monotonic() if now is None else now
@@ -79,11 +114,17 @@ class ServerlessPlatform:
         """Synchronous invocation (what a Worker's redirected attribute
         calls). Cold starts and I/O tax are accounted but not slept in live
         mode (tiny-model runs should stay fast); sim mode models them in
-        virtual time via ``sim_latency``."""
+        virtual time via ``sim_latency``. Blocks while ``max_concurrency``
+        instances are already executing."""
         fn = self._fns.get(url)
         if fn is None:
             raise KeyError(f"no function deployed at {url}")
-        with self._lock:
+        # O(payload) walk outside the lock: MB-scale reward payloads must
+        # not serialize every concurrent invocation's admission
+        nbytes = payload_nbytes(args) + payload_nbytes(kwargs)
+        with self._cv:
+            while self._active >= self.cfg.max_concurrency:
+                self._cv.wait()
             self.stats.invocations += 1
             if self.is_cold(url):
                 self.stats.cold_starts += 1
@@ -91,18 +132,22 @@ class ServerlessPlatform:
             self._active += 1
             self.stats.peak_instances = max(self.stats.peak_instances,
                                             self._active)
+            self.stats.payload_bytes += nbytes
         t0 = time.monotonic()
         try:
             io = self.sample_io_s()
+            if self.cfg.sleep_io:
+                time.sleep(io)
             result = fn(*args, **kwargs)
             return result
         finally:
             dt = time.monotonic() - t0
-            with self._lock:
+            with self._cv:
                 self._active -= 1
                 self.stats.total_exec_s += dt
                 self.stats.total_io_s += io
                 self.stats.max_io_s = max(self.stats.max_io_s, io)
+                self._cv.notify()
 
     def invoke_async(self, url: str, *args, **kwargs) -> Future:
         return self._pool.submit(self.invoke, url, *args, **kwargs)
@@ -113,6 +158,7 @@ class ServerlessPlatform:
     def sim_latency(self, url: str, exec_s: float, payload_bytes: int = 0,
                     now: float = 0.0) -> float:
         """Virtual-time latency of one invocation (used by the simulator)."""
+        io = self.sample_io_s()
         with self._lock:
             self.stats.invocations += 1
             self.stats.payload_bytes += payload_bytes
@@ -120,8 +166,7 @@ class ServerlessPlatform:
             if cold:
                 self.stats.cold_starts += 1
             self._touch(url, now)
-        io = self.sample_io_s()
-        self.stats.total_io_s += io
-        self.stats.max_io_s = max(self.stats.max_io_s, io)
-        self.stats.total_exec_s += exec_s
+            self.stats.total_io_s += io
+            self.stats.max_io_s = max(self.stats.max_io_s, io)
+            self.stats.total_exec_s += exec_s
         return (self.cfg.cold_start_s if cold else 0.0) + io + exec_s

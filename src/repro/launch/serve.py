@@ -10,6 +10,8 @@ multi-pod proof).
 from __future__ import annotations
 
 import argparse
+import threading
+import time
 
 import jax
 
@@ -31,6 +33,10 @@ def main(argv=None):
     ap.add_argument("--pd-disagg", action="store_true",
                     help="split prefill/decode across two engine pools "
                          "with live KV-cache handoff (§6.3)")
+    ap.add_argument("--async-pump", action="store_true",
+                    help="pump the engines from a background thread while "
+                         "requests are submitted concurrently (the live "
+                         "runner's producer/consumer shape)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -48,14 +54,39 @@ def main(argv=None):
 
     prompts = args.prompt or ["the agent moves ", "reward comes from "]
     results = []
+    if args.async_pump:
+        # producer/consumer serving: a dedicated thread pumps while this
+        # thread keeps submitting — the engine command queues and the
+        # proxy route table absorb the concurrency
+        stop = threading.Event()
+        pump_error = []
+
+        def pump_loop():
+            try:
+                while not stop.is_set():
+                    if proxy.pump() == 0:
+                        time.sleep(0.001)
+            except BaseException as e:      # surfaced by the wait loop
+                pump_error.append(e)
+
+        pump_thread = threading.Thread(target=pump_loop, daemon=True)
+        pump_thread.start()
     for i, p in enumerate(prompts):
         proxy.submit(GenRequest(request_id=f"r{i}",
                                 prompt=TOKENIZER.encode(p, bos=True),
                                 max_new_tokens=args.max_new_tokens,
                                 temperature=args.temperature),
                      callback=results.append)
-    while proxy.busy:
-        proxy.pump()
+    if args.async_pump:
+        while len(results) < len(prompts):
+            if pump_error:
+                raise RuntimeError("pump thread died") from pump_error[0]
+            time.sleep(0.005)
+        stop.set()
+        pump_thread.join()
+    else:
+        while proxy.busy:
+            proxy.pump()
     for r in sorted(results, key=lambda r: r.request_id):
         i = int(r.request_id[1:])
         print(f"[{r.request_id}] {prompts[i]!r} -> "

@@ -32,7 +32,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--group", type=int, default=4)
     ap.add_argument("--alpha", type=int, default=1)
-    ap.add_argument("--mode", default="rollart")
+    ap.add_argument("--mode", default="rollart",
+                    choices=["rollart", "areal", "one_off", "sync",
+                             "sync_plus"],
+                    help="rollart/areal/one_off run rollout on a "
+                         "background worker thread, overlapping train_step")
     ap.add_argument("--tasks", default="math,game")
     ap.add_argument("--reward", default="format_bonus",
                     choices=sorted(REWARD_FNS))
@@ -71,17 +75,18 @@ def main(argv=None):
             eng = InferenceEngine(model, state.params, max_slots=8,
                                   max_len=640)
             proxy = LLMProxy([EngineHandle(eng, "H20")])
-        runner = LiveRLRunner(
-            RunnerConfig(batch_size=args.batch, group_size=args.group,
-                         alpha=args.alpha, mode=args.mode,
-                         tasks=tuple(args.tasks.split(",")),
-                         pd_disagg=args.pd_disagg),
-            proxy, state, step, ServerlessPlatform(),
-            REWARD_FNS[args.reward], seq_len=640)
-        for h in runner.run_steps(args.steps):
-            print(f"step {h.step} loss {h.loss:.4f} "
-                  f"reward {h.reward_mean:.3f} wall {h.wall_s:.1f}s")
-        state = runner.state
+        with LiveRLRunner(
+                RunnerConfig(batch_size=args.batch, group_size=args.group,
+                             alpha=args.alpha, mode=args.mode,
+                             tasks=tuple(args.tasks.split(",")),
+                             pd_disagg=args.pd_disagg),
+                proxy, state, step, ServerlessPlatform(),
+                REWARD_FNS[args.reward], seq_len=640) as runner:
+            for h in runner.run_steps(args.steps):
+                print(f"step {h.step} loss {h.loss:.4f} "
+                      f"reward {h.reward_mean:.3f} wall {h.wall_s:.1f}s "
+                      f"ovl_decode_toks {h.decode_during_train}")
+            state = runner.state
     if args.ckpt:
         print("saved:", CK.save(args.ckpt, state.params,
                                 step=int(state.version)))

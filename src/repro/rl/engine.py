@@ -111,6 +111,16 @@ class InferenceEngine:
         self.on_finish = on_finish
         self.role = role
         self.on_handoff = on_handoff
+        # KV recompute (protocol step (5)) pads prefills to power-of-two
+        # buckets so XLA compiles O(log max_len) shapes instead of one per
+        # in-flight sequence length. Only valid for full-attention stacks:
+        # padded positions beyond last_pos are causally masked and later
+        # overwritten by decode, but a recurrent mixer (mamba/rwkv) would
+        # scan pad tokens into its state, and a ring-buffered sliding
+        # window could wrap them over live entries.
+        self._bucketed_reprefill = (
+            model.window is None
+            and all(mixer == "attn" for mixer, _ in model.cfg.block_pattern))
         self.weight_version = 0
         self.suspended = False
         self._key = jax.random.PRNGKey(seed)
@@ -118,6 +128,11 @@ class InferenceEngine:
         # ("add", req) | ("abort", id) | ("inject", KVHandoff)
         self._commands = collections.deque()
         self._lock = threading.Lock()
+        # serializes the mutators of _slots/_cache/params: step() (the pump
+        # thread) vs update_params() (the control thread's weight sync).
+        # The command queue has its own lock so add/abort/inject never
+        # block on an in-flight decode step.
+        self._step_lock = threading.Lock()
         self._results: Dict[str, GenResult] = {}
         self._cache = model.init_cache(max_slots, max_len)
         # stats
@@ -125,6 +140,7 @@ class InferenceEngine:
         self.busy_steps = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self.recomputes = 0           # in-flight KV rebuilds (protocol (5))
         self.handoffs_out = 0
         self.handoffs_in = 0
         self._build_jit()
@@ -192,7 +208,11 @@ class InferenceEngine:
             self._commands.append(("abort", request_id))
 
     def suspend(self):
-        """Stop admitting new requests; in-flight slots are preserved."""
+        """Stop admitting new requests; in-flight slots are preserved.
+        A bare flag write (atomic under the GIL): the pump thread reads it
+        inside ``step``; callers needing a hard barrier (nothing decoding
+        while weights swap) hold the runner-level pump lock across
+        suspend → update → resume."""
         self.suspended = True
 
     def resume(self):
@@ -201,21 +221,40 @@ class InferenceEngine:
     def update_params(self, params, version: int,
                       recompute_caches: bool = True):
         """Weight sync (protocol steps (3)+(5)): swap weights and rebuild
-        each in-flight trajectory's cache under the new weights."""
-        self.params = params
-        self.weight_version = version
-        if recompute_caches:
-            for i, s in enumerate(self._slots):
-                if s.active and s.pos > 0:
-                    self._reprefill_slot(i)
+        each in-flight trajectory's cache under the new weights.
+
+        No-op when ``version`` equals the engine's current weight version
+        (e.g. iteration 0, where the store still holds the weights the
+        engine was built with): re-prefilling every in-flight cache under
+        identical weights would burn a full prefill per slot for nothing.
+        """
+        if version == self.weight_version:
+            return
+        with self._step_lock:
+            self.params = params
+            self.weight_version = version
+            if recompute_caches:
+                for i, s in enumerate(self._slots):
+                    if s.active and s.pos > 0:
+                        self._reprefill_slot(i)
+
+    def _bucket_len(self, n: int) -> int:
+        b = 16
+        while b < n:
+            b <<= 1
+        return min(b, self.max_len)
 
     def _reprefill_slot(self, i: int):
         s = self._slots[i]
-        toks = jnp.asarray([s.tokens[: s.pos]], jnp.int32)
+        toks = s.tokens[: s.pos]
+        if self._bucketed_reprefill:
+            toks = toks + [0] * (self._bucket_len(len(toks)) - len(toks))
+        tok_arr = jnp.asarray([toks], jnp.int32)
         last = jnp.asarray([s.pos - 1], jnp.int32)
         _, _, self._cache = self._prefill_jit(
-            self.params, toks, self._cache, i, last, self._next_key(),
+            self.params, tok_arr, self._cache, i, last, self._next_key(),
             jnp.float32(-1.0))
+        self.recomputes += 1
 
     # ------------------------------------------------------------------
     def _admit(self, req: GenRequest) -> bool:
@@ -305,7 +344,8 @@ class InferenceEngine:
             finish_reason=reason, weight_version=self.weight_version,
             prefill_tokens=len(s.request.prompt),
             decode_tokens=len(s.new_tokens))
-        self._results[res.request_id] = res
+        with self._lock:
+            self._results[res.request_id] = res
         s.active = False
         s.request = None
         if self.on_finish:
@@ -337,7 +377,8 @@ class InferenceEngine:
                             weight_version=self.weight_version,
                             prefill_tokens=len(payload.request.prompt),
                             decode_tokens=0)
-        self._results[res.request_id] = res
+        with self._lock:
+            self._results[res.request_id] = res
         if self.on_finish:
             self.on_finish(res)
 
@@ -400,7 +441,13 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine iteration: drain commands, then one decode step for
-        all active slots. Returns number of active slots decoded."""
+        all active slots. Returns number of active slots decoded.
+        Serialized against ``update_params`` so a weight sync never races
+        a decode step over the same slots/cache."""
+        with self._step_lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> int:
         # 1) command processing between engine steps (non-blocking)
         self._drain_commands()
         # 2) one decode step over active slots
@@ -429,15 +476,21 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------
     def pop_result(self, request_id: str) -> Optional[GenResult]:
-        return self._results.pop(request_id, None)
+        with self._lock:
+            return self._results.pop(request_id, None)
 
     @property
     def num_active(self) -> int:
         return sum(s.active for s in self._slots)
 
     @property
+    def queue_len(self) -> int:
+        with self._lock:
+            return len(self._commands)
+
+    @property
     def has_pending(self) -> bool:
-        return bool(self._commands) or self.num_active > 0
+        return self.queue_len > 0 or self.num_active > 0
 
     def run_until_idle(self, max_steps: int = 100000):
         for _ in range(max_steps):

@@ -218,14 +218,15 @@ def test_live_pipeline_two_steps(tiny_setup):
     eng = InferenceEngine(model, state.params, max_slots=8, max_len=256,
                           seed=3)
     proxy = LLMProxy([EngineHandle(eng, "H20")])
-    runner = LiveRLRunner(
-        RunnerConfig(batch_size=4, group_size=2, alpha=1,
-                     tasks=("game",), max_new_tokens=12),
-        proxy, state, jax.jit(make_grpo_train_step(model, opt)),
-        ServerlessPlatform(), format_bonus_reward, seq_len=256)
-    hist = runner.run_steps(2)
-    assert len(hist) == 2
-    assert runner.version == 2
-    assert all(np.isfinite(h.loss) for h in hist)
-    assert runner.serverless.stats.invocations >= 8
-    assert runner.store.latest_version == 2
+    with LiveRLRunner(
+            RunnerConfig(batch_size=4, group_size=2, alpha=1,
+                         tasks=("game",), max_new_tokens=12),
+            proxy, state, jax.jit(make_grpo_train_step(model, opt)),
+            ServerlessPlatform(), format_bonus_reward,
+            seq_len=256) as runner:
+        hist = runner.run_steps(2)
+        assert len(hist) == 2
+        assert runner.version == 2
+        assert all(np.isfinite(h.loss) for h in hist)
+        assert runner.serverless.stats.invocations >= 8
+        assert runner.store.latest_version == 2
