@@ -18,6 +18,7 @@ ALL = [
     "e2e_steptime",     # Fig 10a/b
     "scaling",          # Fig 10c
     "hw_affinity",      # Fig 11a (R1)
+    "affinity_mapping",  # Table 2 ordering + live rebalancer (R1)
     "traj_vs_batch",    # Fig 11b (R2)
     "serverless_reward",  # Fig 6/12 (R3)
     "staleness_sweep",  # Fig 13 (R4)

@@ -1,11 +1,15 @@
 from repro.core.buffer import SampleBuffer
 from repro.core.cluster import Cluster
 from repro.core.envmanager import EMState, EnvManager, RolloutPolicy
-from repro.core.hardware import (H20, H800, PERF, REGISTRY, SERVERLESS,
+from repro.core.hardware import (H20, H800, PERF, REGISTRY,
+                                 ROLE_CLASS_AFFINITY, SERVERLESS,
                                  TPU_V5E, TPU_V5P, HardwareSpec, PerfModel)
-from repro.core.proxy import EngineHandle, LLMProxy, build_pd_proxy
-from repro.core.resource import Binding, DeviceGroup, ResourceManager
-from repro.core.scheduler import LiveRLRunner, RunnerConfig
+from repro.core.proxy import (EngineHandle, LLMProxy, RebalancerConfig,
+                              build_pd_proxy)
+from repro.core.resource import (Binding, DeviceGroup, ResourceManager,
+                                 parse_pools)
+from repro.core.scheduler import (DEFAULT_TASK_WEIGHTS, DEFAULT_TASKS,
+                                  LiveRLRunner, RunnerConfig)
 from repro.core.serverless import ServerlessConfig, ServerlessPlatform
 from repro.core.simclock import Event, Resource, Simulator, Timeout
 from repro.core.weightstore import (MooncakeStore, pull_params, push_params)

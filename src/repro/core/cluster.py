@@ -41,20 +41,35 @@ class Cluster:
 
     # ------------------------------------------------------------------
     def _create_workers(self, n: int, hw: str, devs: int, kwargs: Dict):
-        for _ in range(n):
-            wid = f"{self.role}-{next(_counter)}"
-            binding = self.rm.bind(wid, self.role, hw, n_devices=devs)
-            if binding is None:
-                raise RuntimeError(
-                    f"resource manager cannot bind {wid} to {hw} "
-                    f"(snapshot: {self.rm.snapshot()['free']})")
-            info = WorkerInfo(worker_id=wid, role=self.role,
-                              resource_type=binding.group.pool,
-                              device_ids=tuple(binding.group.device_ids))
-            w = self.worker_cls(info, **kwargs)
-            self._apply_serverless_decls(w)
-            w.setup()
-            self.workers.append(w)
+        bound_ids: List[str] = []
+        try:
+            for _ in range(n):
+                wid = f"{self.role}-{next(_counter)}"
+                binding = self.rm.bind(wid, self.role, hw, n_devices=devs)
+                if binding is None:
+                    raise RuntimeError(
+                        f"resource manager cannot bind {wid} to {hw} "
+                        f"(snapshot: {self.rm.snapshot()['free']})")
+                bound_ids.append(wid)
+                info = WorkerInfo(worker_id=wid, role=self.role,
+                                  resource_type=binding.group.pool,
+                                  device_ids=tuple(binding.group.device_ids))
+                w = self.worker_cls(info, **kwargs)
+                self._apply_serverless_decls(w)
+                w.setup()
+                self.workers.append(w)
+        except BaseException:
+            # unwind: a partially-created cluster must not strand the
+            # first k-1 device groups in the resource manager
+            for w in self.workers:
+                try:
+                    w.teardown()
+                except Exception:
+                    pass
+            self.workers.clear()
+            for wid in bound_ids:
+                self.rm.release(wid)
+            raise
 
     def _apply_serverless_decls(self, worker: Worker):
         for mname, meta in self._decls.items():

@@ -15,6 +15,21 @@ from typing import Dict
 
 from repro.configs.base import ModelConfig
 
+# Role -> hardware-class affinity (paper §5.2 / Table 2 / Fig. 4):
+# compute-bound prefill belongs on compute-class chips (H800/TPUv5p),
+# bandwidth-bound decode on bandwidth-class chips (H20/TPUv5e). Colocated
+# engines serve both phases; the prefill phase is the one that saturates
+# first on a mismatched chip, so they default to compute-class.
+ROLE_CLASS_AFFINITY: Dict[str, str] = {
+    "prefill": "compute",
+    "decode": "bandwidth",
+    "colocated": "compute",
+    "train": "compute",
+    "generate": "bandwidth",
+    "environment": "host",
+    "reward": "elastic",
+}
+
 
 @dataclass(frozen=True)
 class HardwareSpec:
@@ -96,6 +111,45 @@ class PerfModel:
     def transfer_time(self, nbytes: float, bw_gbs: float,
                       latency_s: float = 0.005) -> float:
         return latency_s + nbytes / (bw_gbs * 1e9)
+
+    # -- placement pricing (§5.2: the PerfModel as the placement layer) ----
+    def role_latency(self, cfg: ModelConfig, role: str, hw: HardwareSpec,
+                     tp_degree: int = 1, *, prompt_tokens: int = 512,
+                     new_tokens: int = 256, concurrency: int = 32) -> float:
+        """Modeled per-request latency of one serving group in ``role`` on
+        ``hw``: the prefill phase for prefill-role, the decode loop for
+        decode-role, and their sum for a colocated engine."""
+        t_p = self.prefill_time(cfg, prompt_tokens, hw, tp_degree)
+        t_d = self.decode_time(cfg, new_tokens, hw, tp_degree,
+                               context=prompt_tokens + new_tokens,
+                               concurrency=concurrency)
+        return {"prefill": t_p, "decode": t_d}.get(role, t_p + t_d)
+
+    def price_placement(self, cfg: ModelConfig, prefill_hw: HardwareSpec,
+                        decode_hw: HardwareSpec, *, n_prefill: int = 1,
+                        n_decode: int = 1, prompt_tokens: int = 4096,
+                        new_tokens: int = 256,
+                        concurrency: int = 32) -> Dict[str, float]:
+        """Price a two-stage placement: request rate of the pipeline
+        (bottleneck stage), its normalized dollar cost, and the
+        cost-normalized throughput the paper's Table 2 ordering is stated
+        in. A prefill group serves one request at a time; a decode group
+        serves ``concurrency`` streams per engine step."""
+        t_p = self.prefill_time(cfg, prompt_tokens, prefill_hw, 1)
+        t_d = self.decode_time(cfg, new_tokens, decode_hw, 1,
+                               context=prompt_tokens + new_tokens,
+                               concurrency=concurrency)
+        prefill_rate = n_prefill / max(t_p, 1e-12)
+        decode_rate = n_decode * max(concurrency, 1) / max(t_d, 1e-12)
+        rate = min(prefill_rate, decode_rate)
+        cost = n_prefill * prefill_hw.norm_cost + n_decode * decode_hw.norm_cost
+        return {
+            "prefill_s": t_p, "decode_s": t_d,
+            "prefill_rate_rps": prefill_rate, "decode_rate_rps": decode_rate,
+            "rate_rps": rate, "norm_cost": cost,
+            "tokens_per_s": rate * (prompt_tokens + new_tokens),
+            "cost_norm_throughput": rate / max(cost, 1e-12),
+        }
 
 
 PERF = PerfModel()

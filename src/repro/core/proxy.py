@@ -22,6 +22,8 @@ import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
+from repro.core.hardware import PERF, REGISTRY, ROLE_CLASS_AFFINITY
+from repro.core.resource import Binding, ResourceManager
 from repro.rl.engine import (GenRequest, GenResult, InferenceEngine,
                              KVHandoff)
 
@@ -31,6 +33,8 @@ class EngineHandle:
     engine: InferenceEngine
     pool: str                   # hardware pool name ("H800"/"H20"/...)
     name: str = ""
+    binding: Optional[Binding] = None   # device group held via the
+    #                                     ResourceManager (None = unmanaged)
 
     def load(self) -> int:
         return self.engine.num_active + self.engine.queue_len
@@ -40,39 +44,53 @@ class EngineHandle:
         return self.engine.role
 
 
+@dataclass
+class RebalancerConfig:
+    """Hysteresis band for the dynamic prefill<->decode role switch. The
+    proxy tracks the decode/prefill queue-depth ratio each pump; only after
+    ``window`` consecutive pumps outside [low, high] — and at least
+    ``cooldown`` pumps since the last switch — does an engine flip roles,
+    so transient bursts never thrash the placement."""
+    high: float = 4.0        # decode backlog dominates: prefill -> decode
+    low: float = 0.25        # prefill backlog dominates: decode -> prefill
+    window: int = 4          # consecutive out-of-band pumps required
+    cooldown: int = 16       # min pumps between two switches
+
+
 class LLMProxy:
     def __init__(self, handles: List[EngineHandle],
                  hw_affinity: Optional[Dict[str, str]] = None,
-                 pd_disagg: bool = False):
+                 pd_disagg: bool = False,
+                 resource_manager: Optional[ResourceManager] = None,
+                 rebalancer: Optional[RebalancerConfig] = None):
         """hw_affinity: task tag -> pool name, must include "default".
 
         With ``pd_disagg=True`` the handle list must contain at least one
         ``role="prefill"`` and one ``role="decode"`` engine (all built from
         the same model with the same ``max_len`` so cache slots are
-        shape-compatible across the handoff).
+        shape-compatible across the handoff). ``resource_manager`` lets the
+        proxy release/re-bind device groups when the dynamic ``rebalancer``
+        (PD mode only) switches an engine's role.
         """
         if not handles:
             raise ValueError("LLMProxy needs at least one engine")
+        if rebalancer is not None and not pd_disagg:
+            raise ValueError("the dynamic rebalancer switches prefill<->"
+                             "decode roles and requires pd_disagg=True")
         self.handles = handles
         self.pd_disagg = pd_disagg
-        self.prefill_handles = [h for h in handles if h.role == "prefill"]
-        self.decode_handles = [h for h in handles if h.role == "decode"]
+        self.rm = resource_manager
+        self.rebalancer = rebalancer
         if pd_disagg:
-            if not self.prefill_handles or not self.decode_handles:
+            pre = [h for h in handles if h.role == "prefill"]
+            dec = [h for h in handles if h.role == "decode"]
+            if not pre or not dec:
                 raise ValueError("pd_disagg=True needs at least one "
                                  "prefill-role and one decode-role engine")
             lens = {h.engine.max_len for h in handles}
             if len(lens) != 1:
                 raise ValueError(f"PD pools must share max_len, got {lens}")
-            for h in self.prefill_handles:
-                h.engine.on_handoff = self._make_handoff_hook(h)
-            # prefill engines step first so a handoff produced this pump
-            # is injected before the decode engines step
-            self._pump_order = (self.prefill_handles + self.decode_handles
-                                + [h for h in handles
-                                   if h.role == "colocated"])
-        else:
-            self._pump_order = list(handles)
+        self._refresh_roles()
         default_pool = (self.prefill_handles[0].pool if pd_disagg
                         else handles[0].pool)
         self.hw_affinity = dict(hw_affinity or {"default": default_pool})
@@ -89,6 +107,31 @@ class LLMProxy:
         self.aborted = 0
         self.handoffs = 0
         self.routed_by_pool: Dict[str, int] = {}
+        # rebalancer state/stats
+        self.role_switches = 0
+        self.switch_migrations = 0     # in-flight KV moved by role switches
+        self.switch_log: List[Dict] = []
+        self._pumps = 0
+        self._last_switch_pump: Optional[int] = None
+        self._streak_high = 0
+        self._streak_low = 0
+
+    def _refresh_roles(self):
+        """Recompute role views after construction or a role switch: the
+        prefill/decode handle lists, the pump order (prefill engines step
+        first so a handoff produced this pump is injected before the decode
+        engines step), and the handoff hooks of prefill engines."""
+        self.prefill_handles = [h for h in self.handles
+                                if h.role == "prefill"]
+        self.decode_handles = [h for h in self.handles if h.role == "decode"]
+        if self.pd_disagg:
+            for h in self.prefill_handles:
+                h.engine.on_handoff = self._make_handoff_hook(h)
+            self._pump_order = (self.prefill_handles + self.decode_handles
+                                + [h for h in self.handles
+                                   if h.role == "colocated"])
+        else:
+            self._pump_order = list(self.handles)
 
     # ------------------------------------------------------------------
     def _make_finish_hook(self, handle: EngineHandle):
@@ -101,37 +144,45 @@ class LLMProxy:
                 cb(result)
         return hook
 
+    def _route_handoff(self, handoff: KVHandoff, src_pool: str,
+                       weight_version: int) -> bool:
+        """Route a prefilled trajectory to the least-loaded decode engine,
+        or resolve a raced abort instead of migrating a cancelled
+        trajectory. Returns True if the handoff was injected. Shared by the
+        prefill handoff hook and the role-switch migration path."""
+        rid = handoff.request.request_id
+        with self._lock:
+            if rid in self._abort_requested:
+                cb = self._callbacks.pop(rid, None)
+                self._route.pop(rid, None)
+                self._abort_requested.discard(rid)
+                dst = None
+            else:
+                dst = min(self.decode_handles, key=lambda h: h.load())
+                self._route[rid] = dst
+                # enqueue while still holding the proxy lock: a
+                # concurrent abort() that observes route=dst must find
+                # its ABORT ordered after this INJECT in dst's queue
+                handoff.source = src_pool
+                dst.engine.inject(handoff)
+        if dst is None and cb:
+            cb(GenResult(
+                request_id=rid, tokens=list(handoff.new_tokens),
+                logprobs=list(handoff.logprobs),
+                finish_reason="aborted",
+                weight_version=weight_version,
+                prefill_tokens=len(handoff.request.prompt),
+                decode_tokens=0))
+        return dst is not None
+
     def _make_handoff_hook(self, src: EngineHandle):
         def hook(handoff: KVHandoff):
-            rid = handoff.request.request_id
-            with self._lock:
-                if rid in self._abort_requested:
-                    # abort raced the prefill: resolve it here instead of
-                    # migrating a cancelled trajectory
-                    cb = self._callbacks.pop(rid, None)
-                    self._route.pop(rid, None)
-                    self._abort_requested.discard(rid)
-                    dst = None
-                else:
-                    dst = min(self.decode_handles, key=lambda h: h.load())
-                    self._route[rid] = dst
-                    # migrations are counted in `handoffs` (and per-engine
-                    # handoffs_in), NOT routed_by_pool, so the latter keeps
-                    # summing to `requests` in both modes
-                    self.handoffs += 1
-                    # enqueue while still holding the proxy lock: a
-                    # concurrent abort() that observes route=dst must find
-                    # its ABORT ordered after this INJECT in dst's queue
-                    handoff.source = src.pool
-                    dst.engine.inject(handoff)
-            if dst is None and cb:
-                cb(GenResult(
-                    request_id=rid, tokens=list(handoff.new_tokens),
-                    logprobs=list(handoff.logprobs),
-                    finish_reason="aborted",
-                    weight_version=src.engine.weight_version,
-                    prefill_tokens=len(handoff.request.prompt),
-                    decode_tokens=0))
+            # migrations are counted in `handoffs` (and per-engine
+            # handoffs_in), NOT routed_by_pool, so the latter keeps
+            # summing to `requests` in both modes
+            if self._route_handoff(handoff, src.pool,
+                                   src.engine.weight_version):
+                self.handoffs += 1
         return hook
 
     def _select(self, tag: str) -> EngineHandle:
@@ -194,11 +245,141 @@ class LLMProxy:
                                    recompute_caches=recompute_caches)
 
     # ------------------------------------------------------------------
+    # dynamic rebalancing (prefill<->decode role switch)
+    # ------------------------------------------------------------------
+    def queue_depth_ratio(self) -> float:
+        """Decode-side backlog over prefill-side backlog (+1 smoothing so
+        an idle side doesn't divide by zero)."""
+        pre = sum(h.load() for h in self.prefill_handles)
+        dec = sum(h.load() for h in self.decode_handles)
+        return (dec + 1.0) / (pre + 1.0)
+
+    def _maybe_rebalance(self):
+        rb = self.rebalancer
+        ratio = self.queue_depth_ratio()
+        self._streak_high = self._streak_high + 1 if ratio >= rb.high else 0
+        self._streak_low = self._streak_low + 1 if ratio <= rb.low else 0
+        if (self._last_switch_pump is not None
+                and self._pumps - self._last_switch_pump < rb.cooldown):
+            return
+        # a switch must leave at least one engine on each side
+        if self._streak_high >= rb.window and len(self.prefill_handles) > 1:
+            donor = min(self.prefill_handles, key=lambda h: h.load())
+            self.switch_role(donor, "decode")
+        elif self._streak_low >= rb.window and len(self.decode_handles) > 1:
+            donor = min(self.decode_handles, key=lambda h: h.load())
+            self.switch_role(donor, "prefill")
+
+    def switch_role(self, handle: EngineHandle, new_role: str):
+        """Flip one engine between prefill and decode roles: drain its
+        queued commands and in-flight slots, release and re-bind its device
+        group under the new role's hardware affinity (when a
+        ResourceManager is attached), and re-dispatch the drained work —
+        in-flight KV migrates to the remaining engines of the old role via
+        the same KVHandoff path the PD split uses."""
+        if not self.pd_disagg:
+            raise RuntimeError("role switching requires a PD-disaggregated "
+                               "proxy")
+        if new_role not in ("prefill", "decode") or handle.role == new_role:
+            raise ValueError(f"cannot switch {handle.role} -> {new_role}")
+        donors = (self.prefill_handles if handle.role == "prefill"
+                  else self.decode_handles)
+        if len(donors) <= 1:
+            raise ValueError(
+                f"cannot switch the last {handle.role}-role engine: the "
+                "proxy must keep at least one engine on each side")
+        old_role, old_pool = handle.role, handle.pool
+        eng = handle.engine
+        pending = eng.extract_pending()
+        # only a decode-role donor can hold in-flight slots (a prefill
+        # engine's slots free the moment its handoff is emitted)
+        migrated = eng.drain_active_handoffs()
+        eng.set_role(new_role)
+        if self.rm is not None and handle.binding is not None:
+            b = self.rm.rebind(handle.binding.worker_id, new_role)
+            if b is not None:
+                handle.binding = b
+                handle.pool = b.group.pool
+        self._refresh_roles()
+        # in-flight KV continues on the remaining old-role engines
+        for handoff in migrated:
+            if self._route_handoff(handoff, old_pool, eng.weight_version):
+                self.switch_migrations += 1
+        # queued commands re-enter through the proxy's normal routing
+        for kind, payload in pending:
+            if kind == "add":
+                dst = self._select(payload.tag)
+                with self._lock:
+                    if payload.request_id in self._route:
+                        self._route[payload.request_id] = dst
+                dst.engine.add_request(payload)
+            elif kind == "inject":
+                self._route_handoff(payload, payload.source,
+                                    payload.weight_version)
+            else:                            # abort: follow current route
+                with self._lock:
+                    dst = self._route.get(payload)
+                if dst is not None:
+                    dst.engine.abort(payload)
+        self.role_switches += 1
+        self._last_switch_pump = self._pumps
+        self._streak_high = self._streak_low = 0
+        self.switch_log.append({
+            "pump": self._pumps, "engine": handle.name,
+            "from_role": old_role, "to_role": new_role,
+            "from_pool": old_pool, "to_pool": handle.pool,
+            "migrated": len(migrated), "requeued": len(pending)})
+
+    # ------------------------------------------------------------------
+    def placement_report(self, *, prompt_tokens: int = 512,
+                         new_tokens: int = 128) -> List[Dict]:
+        """Modeled placement pricing per engine: prefill/decode latency of
+        its pool's HardwareSpec under the PerfModel, whether the engine's
+        role matches its pool's hardware class (affine), and the pool's
+        normalized cost. Pools not in the hardware registry (e.g. "local")
+        are reported without pricing."""
+        cfg = self.handles[0].engine.model.cfg
+        out = []
+        for h in self.handles:
+            hw = REGISTRY.get(h.pool)
+            row = {"name": h.name, "pool": h.pool, "role": h.role,
+                   "devices": (h.binding.group.size if h.binding else 1)}
+            if hw is not None:
+                conc = max(h.engine.max_slots, 1)
+                row.update({
+                    "klass": hw.klass,
+                    "affine": ROLE_CLASS_AFFINITY.get(h.role) == hw.klass,
+                    "modeled_prefill_s": PERF.prefill_time(
+                        cfg, prompt_tokens, hw, 1),
+                    "modeled_decode_s": PERF.decode_time(
+                        cfg, new_tokens, hw, 1,
+                        context=prompt_tokens + new_tokens,
+                        concurrency=conc),
+                    "norm_cost": hw.norm_cost * row["devices"],
+                })
+            out.append(row)
+        return out
+
+    def release_bindings(self):
+        """Return every managed device group to the ResourceManager."""
+        if self.rm is None:
+            return
+        for h in self.handles:
+            if h.binding is not None:
+                self.rm.release(h.binding.worker_id)
+                h.binding = None
+
+    # ------------------------------------------------------------------
     def pump(self) -> int:
         """Advance every engine by one step; returns active slot count.
         In PD mode prefill engines step before decode engines so a fresh
-        handoff starts decoding in the same pump."""
-        return sum(h.engine.step() for h in self._pump_order)
+        handoff starts decoding in the same pump; afterwards the dynamic
+        rebalancer (if configured) checks the queue-depth ratio."""
+        n = sum(h.engine.step() for h in self._pump_order)
+        self._pumps += 1
+        if self.rebalancer is not None and self.pd_disagg:
+            self._maybe_rebalance()
+        return n
 
     @property
     def busy(self) -> bool:
@@ -211,6 +392,9 @@ class LLMProxy:
             "pd_disagg": self.pd_disagg,
             "handoffs": self.handoffs,
             "routed_by_pool": dict(self.routed_by_pool),
+            "role_switches": self.role_switches,
+            "switch_migrations": self.switch_migrations,
+            "switch_log": list(self.switch_log),
             "engines": [
                 {"pool": h.pool, "name": h.name, "role": h.role,
                  "steps": h.engine.steps,
@@ -223,24 +407,78 @@ class LLMProxy:
         }
 
 
+def format_placement_row(row: Dict) -> str:
+    """One-line rendering of a ``placement_report`` row (launchers)."""
+    out = (f"{row['name']:>10} pool={row['pool']:<5} "
+           f"role={row['role']:<7}")
+    if "affine" in row:
+        out += (f" affine={row['affine']} "
+                f"prefill_s={row['modeled_prefill_s']:.2e} "
+                f"decode_s={row['modeled_decode_s']:.2e} "
+                f"cost={row['norm_cost']}")
+    return out
+
+
+def format_switch_event(ev: Dict) -> str:
+    """One-line rendering of a ``switch_log`` entry (launchers)."""
+    return (f"rebalance@pump{ev['pump']}: {ev['engine']} "
+            f"{ev['from_role']}->{ev['to_role']} "
+            f"pool {ev['from_pool']}->{ev['to_pool']} "
+            f"(migrated {ev['migrated']} in-flight)")
+
+
 def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
                    decode_pool: str = "H20", n_prefill: int = 1,
                    n_decode: int = 1, max_slots: int = 8,
                    max_len: int = 512, seed: int = 0,
-                   hw_affinity: Optional[Dict[str, str]] = None) -> LLMProxy:
+                   hw_affinity: Optional[Dict[str, str]] = None,
+                   resource_manager: Optional[ResourceManager] = None,
+                   devices_per_engine: int = 1,
+                   rebalancer: Optional[RebalancerConfig] = None) -> LLMProxy:
     """Build a PD-disaggregated proxy: ``n_prefill`` prefill-role engines on
     the compute pool and ``n_decode`` decode-role engines on the bandwidth
     pool (the live analogue of the simulator's ``gen_pools`` +
-    ``pd_disagg=True`` configuration)."""
+    ``pd_disagg=True`` configuration).
+
+    With a ``resource_manager``, each engine acquires a real device group
+    through ``ResourceManager.bind_affine`` — prefill engines land on
+    compute-class pools, decode engines on bandwidth-class pools, with
+    opportunistic fallback when the preferred class is exhausted — and the
+    ``prefill_pool``/``decode_pool`` names are superseded by the bound
+    pools. Pass a ``RebalancerConfig`` to enable the dynamic
+    prefill<->decode role switch (which releases/re-binds those groups)."""
     handles = []
+    bound = []
+
+    def _bind(wid, role):
+        if resource_manager is None:
+            return None
+        b = resource_manager.bind_affine(wid, role,
+                                         n_devices=devices_per_engine)
+        if b is None:
+            for w in bound:                  # no partial-placement leak
+                resource_manager.release(w)
+            raise RuntimeError(
+                f"resource manager cannot bind {wid} ({role}) (snapshot: "
+                f"{resource_manager.snapshot()['free']})")
+        bound.append(wid)
+        return b
+
     for i in range(n_prefill):
+        name = f"prefill-{i}"
+        b = _bind(name, "prefill")
         eng = InferenceEngine(model, params, max_slots=max_slots,
                               max_len=max_len, seed=seed + i,
                               role="prefill")
-        handles.append(EngineHandle(eng, prefill_pool, f"prefill-{i}"))
+        handles.append(EngineHandle(eng, b.group.pool if b else prefill_pool,
+                                    name, binding=b))
     for i in range(n_decode):
+        name = f"decode-{i}"
+        b = _bind(name, "decode")
         eng = InferenceEngine(model, params, max_slots=max_slots,
                               max_len=max_len, seed=seed + 1000 + i,
                               role="decode")
-        handles.append(EngineHandle(eng, decode_pool, f"decode-{i}"))
-    return LLMProxy(handles, hw_affinity=hw_affinity, pd_disagg=True)
+        handles.append(EngineHandle(eng, b.group.pool if b else decode_pool,
+                                    name, binding=b))
+    return LLMProxy(handles, hw_affinity=hw_affinity, pd_disagg=True,
+                    resource_manager=resource_manager, rebalancer=rebalancer)

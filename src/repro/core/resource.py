@@ -12,7 +12,8 @@ import dataclasses
 import threading
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.hardware import REGISTRY, HardwareSpec
+from repro.core.hardware import (REGISTRY, ROLE_CLASS_AFFINITY,
+                                 HardwareSpec)
 
 
 @dataclasses.dataclass
@@ -69,25 +70,79 @@ class ResourceManager:
             return len(self._free.get(pool, []))
 
     # ------------------------------------------------------------------
+    def _bind_locked(self, worker_id: str, role: str, candidates,
+                     n_devices: int) -> Optional[Binding]:
+        """Try (pool, is_fallback) candidates in order; caller holds lock."""
+        for pool, is_fb in candidates:
+            free = self._free.get(pool, [])
+            if len(free) >= n_devices:
+                ids = [free.pop() for _ in range(n_devices)]
+                grp = DeviceGroup(pool=pool, device_ids=sorted(ids),
+                                  owner=worker_id)
+                b = Binding(worker_id=worker_id, role=role, group=grp,
+                            fallback=is_fb)
+                self._meta[worker_id] = b
+                return b
+        return None
+
+    def _affine_candidates(self, role: str, n_devices: int):
+        """Preference order for a role: pools whose hardware class matches
+        the role's affinity (most free devices first, so load spreads), then
+        the remaining pools as fallbacks. Caller holds lock."""
+        klass = ROLE_CLASS_AFFINITY.get(role)
+        names = sorted(
+            self.pools,
+            key=lambda n: (REGISTRY[n].klass != klass,
+                           -len(self._free.get(n, []))))
+        return [(n, REGISTRY[n].klass != klass) for n in names]
+
     def bind(self, worker_id: str, role: str, preferred: str,
              n_devices: int = 1,
              allow_fallback: bool = True) -> Optional[Binding]:
         """Bind a worker to ``n_devices`` of the preferred pool, falling back
         to a compatible pool if exhausted. Returns None if impossible."""
         with self._lock:
-            for pool, is_fb in [(preferred, False)] + [
-                    (fb, True) for fb in
-                    (FALLBACKS.get(preferred, []) if allow_fallback else [])]:
-                free = self._free.get(pool, [])
-                if len(free) >= n_devices:
-                    ids = [free.pop() for _ in range(n_devices)]
-                    grp = DeviceGroup(pool=pool, device_ids=sorted(ids),
-                                      owner=worker_id)
-                    b = Binding(worker_id=worker_id, role=role, group=grp,
-                                fallback=is_fb)
-                    self._meta[worker_id] = b
-                    return b
-        return None
+            cands = [(preferred, False)] + [
+                (fb, True) for fb in
+                (FALLBACKS.get(preferred, []) if allow_fallback else [])]
+            return self._bind_locked(worker_id, role, cands, n_devices)
+
+    def bind_affine(self, worker_id: str, role: str,
+                    n_devices: int = 1) -> Optional[Binding]:
+        """Role-affine binding (paper §5.2): prefill-role workers land on
+        compute-class pools, decode-role on bandwidth-class pools, falling
+        back opportunistically to any pool with capacity rather than
+        stalling deployment. ``fallback=True`` on the returned Binding
+        means the worker is NOT on its class-preferred hardware."""
+        with self._lock:
+            return self._bind_locked(
+                worker_id, role, self._affine_candidates(role, n_devices),
+                n_devices)
+
+    def rebind(self, worker_id: str, new_role: str) -> Optional[Binding]:
+        """Atomically release a worker's device group and re-bind it under
+        ``new_role``'s affinity (the dynamic prefill<->decode role switch).
+        The freed devices are visible to the new bind, so a single-pool
+        manager re-binds in place; on a heterogeneous pool the group
+        migrates to the new role's preferred class when it has capacity.
+        Returns None (old binding restored) only if re-binding is
+        impossible, which cannot happen while the freed group exists."""
+        with self._lock:
+            old = self._meta.pop(worker_id, None)
+            if old is None:
+                return None
+            self._free.setdefault(old.group.pool, []).extend(
+                old.group.device_ids)
+            b = self._bind_locked(
+                worker_id, new_role,
+                self._affine_candidates(new_role, old.group.size),
+                old.group.size)
+            if b is None:        # restore: never leave the worker unbound
+                ids = self._free[old.group.pool]
+                for d in old.group.device_ids:
+                    ids.remove(d)
+                self._meta[worker_id] = old
+            return b
 
     def release(self, worker_id: str):
         with self._lock:
@@ -111,3 +166,28 @@ class ResourceManager:
                 "bound": {k: dataclasses.asdict(v)
                           for k, v in self._meta.items()},
             }
+
+
+def parse_pools(spec: str) -> Dict[str, int]:
+    """Parse a ``--pools`` flag value like ``"H800:8,H20:8"`` into the
+    pool dict a ResourceManager is built from."""
+    pools: Dict[str, int] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, count = part.partition(":")
+        name = name.strip()
+        if name not in REGISTRY:
+            raise ValueError(f"unknown hardware {name!r} in --pools "
+                             f"(known: {sorted(REGISTRY)})")
+        try:
+            n = int(count)
+        except ValueError:
+            raise ValueError(f"bad device count in --pools entry {part!r}")
+        if n <= 0:
+            raise ValueError(f"device count must be positive in {part!r}")
+        pools[name] = pools.get(name, 0) + n
+    if not pools:
+        raise ValueError(f"empty --pools spec {spec!r}")
+    return pools

@@ -68,6 +68,13 @@ from repro.rl.trainer import TrainState
 MODES = ("rollart", "sync", "sync_plus", "one_off", "areal")
 THREADED_MODES = ("rollart", "areal", "one_off")
 
+# Default multi-task mix: the paper's Fig. 3/5 analysis centers on the
+# long-tail SWE/webshop environments, so the live runner schedules them by
+# default — weighted toward the fast decode-heavy tasks so batches keep
+# filling while the long-tail trajectories mature.
+DEFAULT_TASKS = ("math", "game", "swe", "webshop")
+DEFAULT_TASK_WEIGHTS = (0.35, 0.35, 0.15, 0.15)
+
 
 @dataclass
 class RunnerConfig:
@@ -75,12 +82,21 @@ class RunnerConfig:
     group_size: int = 4
     alpha: int = 1
     mode: str = "rollart"
-    tasks: tuple = ("math", "game")
+    tasks: tuple = DEFAULT_TASKS
+    # None = the weighted default mix when `tasks` is DEFAULT_TASKS,
+    # uniform otherwise; an explicit tuple must match len(tasks)
+    task_weights: Optional[tuple] = None
     redundancy: float = 1.0           # env groups launched / needed
     online_affinity: bool = False     # paper §9: auto-derive hw_mapping
     pd_disagg: bool = False           # §6.3: proxy must be two-stage
     #   (prefill pool -> KV handoff -> decode pool; see
     #   repro.core.proxy.build_pd_proxy for constructing such a proxy)
+    # resource plane (launchers: --pools / --affinity). `pools` is the
+    # heterogeneous device inventory a ResourceManager is built from;
+    # `affinity` binds engines role-affinely through it and enables the
+    # dynamic prefill<->decode rebalancer.
+    pools: Optional[Dict[str, int]] = None
+    affinity: bool = False
     max_new_tokens: int = 32
     temperature: float = 1.0
     reward_url: str = "fc://rollart/reward"
@@ -90,6 +106,13 @@ class RunnerConfig:
     max_buffered_batches: int = 2
     batch_timeout_s: float = 300.0    # threaded-mode starvation guard
     seed: int = 0
+
+    def sampler_weights(self) -> Optional[List[float]]:
+        if self.task_weights is not None:
+            return list(self.task_weights)
+        if tuple(self.tasks) == DEFAULT_TASKS:
+            return list(DEFAULT_TASK_WEIGHTS)
+        return None                   # custom task set: uniform
 
 
 @dataclass
@@ -108,6 +131,8 @@ class StepMetrics:
     #                                  before any training; < step in
     #                                  one_off mode: previous-batch rule)
     batch_max_version: int = 0       # newest start_version in the batch
+    role_switches: int = 0           # dynamic prefill<->decode role
+    #                                  switches during THIS step (delta)
 
 
 class LiveRLRunner:
@@ -131,6 +156,11 @@ class LiveRLRunner:
         if cfg.pd_disagg and not proxy.pd_disagg:
             raise ValueError("RunnerConfig.pd_disagg=True requires a "
                              "PD-disaggregated LLMProxy (build_pd_proxy)")
+        if cfg.affinity and (proxy.rm is None or proxy.rebalancer is None):
+            raise ValueError(
+                "RunnerConfig.affinity=True requires a proxy built with a "
+                "ResourceManager and a RebalancerConfig (build_pd_proxy("
+                "resource_manager=..., rebalancer=...))")
         self.proxy = proxy
         self.state = train_state
         self.train_step_fn = train_step_fn
@@ -139,7 +169,8 @@ class LiveRLRunner:
         self.store = store or MooncakeStore(bucket_mb=1)
         self.buffer = SampleBuffer(alpha=cfg.alpha)
         self.tok = ByteTokenizer()
-        self.sampler = TaskSampler(list(cfg.tasks), seed=cfg.seed)
+        self.sampler = TaskSampler(list(cfg.tasks), seed=cfg.seed,
+                                   weights=cfg.sampler_weights())
         self.seq_len = seq_len
         self.version = 0
         self.profiler = AffinityProfiler() if cfg.online_affinity else None
@@ -172,6 +203,7 @@ class LiveRLRunner:
         self.last_batch: List[Trajectory] = []
         self._last_evicted = 0
         self._last_aborted = 0
+        self._last_role_switches = 0
         # publish v0 weights
         push_params(self.store, self.state.params, version=0)
 
@@ -421,6 +453,11 @@ class LiveRLRunner:
     def _decode_tokens_total(self) -> int:
         return sum(h.engine.decode_tokens for h in self.proxy.handles)
 
+    def placement_report(self, **kw) -> List[Dict]:
+        """Modeled prefill/decode latency + cost per engine pool (PerfModel
+        pricing of the live placement; see LLMProxy.placement_report)."""
+        return self.proxy.placement_report(**kw)
+
     # ------------------------------------------------------------------
     # the six-step protocol (the consumer thread)
     # ------------------------------------------------------------------
@@ -482,6 +519,7 @@ class LiveRLRunner:
                 rewards = [t.reward for t in batch_trajs]
                 ev_total = self.buffer.total_evicted
                 ab_total = self.proxy.aborted
+                rs_total = self.proxy.role_switches
                 sm = StepMetrics(
                     step=step, wall_s=time.monotonic() - t0,
                     loss=loss,
@@ -492,8 +530,10 @@ class LiveRLRunner:
                     decode_during_train=d1 - d0,
                     batch_fetched_step=fetched_step,
                     batch_max_version=max(t.start_version
-                                          for t in batch_trajs))
+                                          for t in batch_trajs),
+                    role_switches=rs_total - self._last_role_switches)
                 self._last_evicted, self._last_aborted = ev_total, ab_total
+                self._last_role_switches = rs_total
                 self.history.append(sm)
         finally:
             if self.threaded:

@@ -104,15 +104,32 @@ def lm_batches(tokenizer, seq_len: int, batch: int, n_steps: int,
 
 
 class TaskSampler:
-    """Uniform multi-task sampler (paper §7.1: uniform task sampling)."""
+    """Multi-task sampler (paper §7.1): uniform when ``weights`` is None,
+    weighted otherwise. Weight vectors are validated eagerly — a
+    mismatched length, a negative/non-finite entry, or an all-zero vector
+    is a configuration error, not something to silently fall back from."""
 
     def __init__(self, tasks: Sequence[str], seed: int = 0,
                  weights: Optional[Sequence[float]] = None):
         self.tasks = list(tasks)
-        self.weights = list(weights) if weights else None
+        if not self.tasks:
+            raise ValueError("TaskSampler needs at least one task")
+        if weights is None:
+            self.weights = None
+        else:
+            ws = [float(w) for w in weights]
+            if len(ws) != len(self.tasks):
+                raise ValueError(
+                    f"weights length {len(ws)} != tasks length "
+                    f"{len(self.tasks)} ({self.tasks})")
+            if any(not np.isfinite(w) or w < 0 for w in ws):
+                raise ValueError(f"weights must be finite and >= 0: {ws}")
+            if sum(ws) <= 0:
+                raise ValueError(f"weights must not sum to zero: {ws}")
+            self.weights = ws
         self._rng = random.Random(seed)
 
     def sample(self) -> str:
-        if self.weights:
+        if self.weights is not None:
             return self._rng.choices(self.tasks, weights=self.weights)[0]
         return self._rng.choice(self.tasks)

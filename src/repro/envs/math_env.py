@@ -51,8 +51,11 @@ class MathEnv(TextEnv):
     def _step(self, action: str) -> Tuple[str, float, bool, Dict]:
         a = action.strip().lower()
         if "calc:" in a:
-            expr = a.split("calc:", 1)[1].strip().splitlines()[0]
-            val = self._safe_eval(expr)
+            # "calc:" with an empty payload must hit the malformed-action
+            # path, not raise IndexError on splitlines()[0]
+            lines = a.split("calc:", 1)[1].strip().splitlines()
+            expr = lines[0] if lines else ""
+            val = self._safe_eval(expr) if expr else None
             if val is None:
                 return "calculator error.", -0.02, False, {"tool": "err"}
             return f"calculator: {expr} = {val}", 0.0, False, {"tool": "ok"}

@@ -68,7 +68,12 @@ class SWEEnv(TextEnv):
         if low.startswith("ls") or " ls" in low[:6]:
             return " ".join(sorted(self.files)), 0.0, False, {}
         if "cat:" in low:
-            fname = a.split(":", 1)[1].strip().split()[0]
+            # empty payload ("cat:" with no filename) is a malformed
+            # action, not a crash
+            words = a.split(":", 1)[1].strip().split()
+            if not words:
+                return "cat needs a filename.", -0.02, False, {}
+            fname = words[0]
             if fname not in self.files:
                 return f"no such file {fname}.", -0.02, False, {}
             body = "\n".join(f"{i}: {l}"

@@ -16,7 +16,9 @@ import time
 import jax
 
 from repro.configs import get_config
-from repro.core import EngineHandle, LLMProxy, build_pd_proxy
+from repro.core import (EngineHandle, LLMProxy, RebalancerConfig,
+                        ResourceManager, build_pd_proxy, parse_pools)
+from repro.core.proxy import format_placement_row
 from repro.data.tokenizer import TOKENIZER
 from repro.models import Model
 from repro.rl.engine import GenRequest, InferenceEngine
@@ -33,6 +35,17 @@ def main(argv=None):
     ap.add_argument("--pd-disagg", action="store_true",
                     help="split prefill/decode across two engine pools "
                          "with live KV-cache handoff (§6.3)")
+    ap.add_argument("--pools", default=None, metavar="SPEC",
+                    help="heterogeneous device inventory, e.g. "
+                         "'H800:8,H20:8'; engines acquire device groups "
+                         "through the ResourceManager")
+    ap.add_argument("--affinity", action="store_true",
+                    help="role-affine placement (prefill -> compute-class, "
+                         "decode -> bandwidth-class pools, §5.2) plus the "
+                         "dynamic prefill<->decode rebalancer; implies "
+                         "--pd-disagg and requires --pools")
+    ap.add_argument("--n-prefill", type=int, default=1)
+    ap.add_argument("--n-decode", type=int, default=1)
     ap.add_argument("--async-pump", action="store_true",
                     help="pump the engines from a background thread while "
                          "requests are submitted concurrently (the live "
@@ -44,9 +57,21 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = Model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
-    if args.pd_disagg:
-        proxy = build_pd_proxy(model, params, max_slots=args.slots,
-                               max_len=1024)
+    if args.affinity and not args.pools:
+        ap.error("--affinity requires --pools (e.g. --pools H800:2,H20:2)")
+    if args.pools and not (args.pd_disagg or args.affinity):
+        ap.error("--pools only takes effect on the disaggregated plane; "
+                 "add --pd-disagg or --affinity")
+    rm = ResourceManager(parse_pools(args.pools)) if args.pools else None
+    if args.pd_disagg or args.affinity:
+        proxy = build_pd_proxy(
+            model, params, max_slots=args.slots, max_len=1024,
+            n_prefill=args.n_prefill, n_decode=args.n_decode,
+            resource_manager=rm,
+            rebalancer=RebalancerConfig() if args.affinity else None)
+        if args.affinity:
+            for row in proxy.placement_report():
+                print("placement: " + format_placement_row(row))
     else:
         eng = InferenceEngine(model, params, max_slots=args.slots,
                               max_len=1024)
@@ -91,11 +116,16 @@ def main(argv=None):
         i = int(r.request_id[1:])
         print(f"[{r.request_id}] {prompts[i]!r} -> "
               f"{TOKENIZER.decode(r.tokens)!r}")
-    if args.pd_disagg:
-        for e in proxy.stats()["engines"]:
+    if args.pd_disagg or args.affinity:
+        stats = proxy.stats()
+        for e in stats["engines"]:
             print(f"pool={e['pool']} role={e['role']} "
                   f"prefill_tokens={e['prefill_tokens']} "
                   f"decode_tokens={e['decode_tokens']}")
+        if args.affinity:
+            print(f"role_switches={stats['role_switches']} "
+                  f"switch_migrations={stats['switch_migrations']}")
+    proxy.release_bindings()
 
 
 if __name__ == "__main__":

@@ -14,8 +14,10 @@ import jax
 
 from repro.checkpoint import checkpointer as CK
 from repro.configs import get_config
-from repro.core import (EngineHandle, LiveRLRunner, LLMProxy, RunnerConfig,
-                        ServerlessPlatform, build_pd_proxy)
+from repro.core import (DEFAULT_TASKS, EngineHandle, LiveRLRunner, LLMProxy,
+                        RebalancerConfig, ResourceManager, RunnerConfig,
+                        ServerlessPlatform, build_pd_proxy, parse_pools)
+from repro.core.proxy import format_placement_row, format_switch_event
 from repro.models import Model
 from repro.rewards.rule_based import REWARD_FNS
 from repro.rl.engine import InferenceEngine
@@ -37,7 +39,13 @@ def main(argv=None):
                              "sync_plus"],
                     help="rollart/areal/one_off run rollout on a "
                          "background worker thread, overlapping train_step")
-    ap.add_argument("--tasks", default="math,game")
+    ap.add_argument("--tasks", default=",".join(DEFAULT_TASKS),
+                    help="comma-separated multi-task mix (default includes "
+                         "the long-tail swe/webshop environments)")
+    ap.add_argument("--task-weights", default=None,
+                    help="comma-separated sampling weights matching --tasks "
+                         "(default: weighted mix for the default tasks, "
+                         "uniform for a custom task set)")
     ap.add_argument("--reward", default="format_bonus",
                     choices=sorted(REWARD_FNS))
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -46,6 +54,19 @@ def main(argv=None):
     ap.add_argument("--pd-disagg", action="store_true",
                     help="rollout on disaggregated prefill/decode engine "
                          "pools with live KV handoff (§6.3)")
+    ap.add_argument("--pools", default=None, metavar="SPEC",
+                    help="heterogeneous rollout device inventory, e.g. "
+                         "'H800:8,H20:8' (ResourceManager-backed)")
+    ap.add_argument("--affinity", action="store_true",
+                    help="role-affine placement (prefill -> compute-class, "
+                         "decode -> bandwidth-class, §5.2) plus the dynamic "
+                         "prefill<->decode rebalancer; implies --pd-disagg "
+                         "and requires --pools")
+    ap.add_argument("--n-prefill", type=int, default=None,
+                    help="prefill-role engines when disaggregated "
+                         "(default 1; 2 with --affinity, so the "
+                         "rebalancer has room to switch one)")
+    ap.add_argument("--n-decode", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args(argv)
 
@@ -68,25 +89,51 @@ def main(argv=None):
             print(f"step {i} loss {float(m['loss']):.4f}")
     else:
         step = jax.jit(make_grpo_train_step(model, opt))
-        if args.pd_disagg:
-            proxy = build_pd_proxy(model, state.params, max_slots=8,
-                                   max_len=640)
+        if args.affinity and not args.pools:
+            ap.error("--affinity requires --pools "
+                     "(e.g. --pools H800:2,H20:2)")
+        pd = args.pd_disagg or args.affinity
+        if args.pools and not pd:
+            ap.error("--pools only takes effect on the disaggregated "
+                     "plane; add --pd-disagg or --affinity")
+        pools = parse_pools(args.pools) if args.pools else None
+        rm = ResourceManager(pools) if pools else None
+        n_prefill = args.n_prefill or (2 if args.affinity else 1)
+        if pd:
+            proxy = build_pd_proxy(
+                model, state.params, max_slots=8, max_len=640,
+                n_prefill=n_prefill, n_decode=args.n_decode,
+                resource_manager=rm,
+                rebalancer=RebalancerConfig() if args.affinity else None)
         else:
             eng = InferenceEngine(model, state.params, max_slots=8,
                                   max_len=640)
             proxy = LLMProxy([EngineHandle(eng, "H20")])
+        weights = (tuple(float(w) for w in args.task_weights.split(","))
+                   if args.task_weights else None)
         with LiveRLRunner(
                 RunnerConfig(batch_size=args.batch, group_size=args.group,
                              alpha=args.alpha, mode=args.mode,
                              tasks=tuple(args.tasks.split(",")),
-                             pd_disagg=args.pd_disagg),
+                             task_weights=weights,
+                             pd_disagg=pd, pools=pools,
+                             affinity=args.affinity),
                 proxy, state, step, ServerlessPlatform(),
                 REWARD_FNS[args.reward], seq_len=640) as runner:
+            if args.affinity:
+                for row in runner.placement_report():
+                    print("placement: " + format_placement_row(row))
             for h in runner.run_steps(args.steps):
                 print(f"step {h.step} loss {h.loss:.4f} "
                       f"reward {h.reward_mean:.3f} wall {h.wall_s:.1f}s "
-                      f"ovl_decode_toks {h.decode_during_train}")
+                      f"ovl_decode_toks {h.decode_during_train}"
+                      + (f" role_switches {h.role_switches}"
+                         if args.affinity else ""))
+            if args.affinity:
+                for ev in runner.proxy.switch_log:
+                    print(format_switch_event(ev))
             state = runner.state
+        proxy.release_bindings()
     if args.ckpt:
         print("saved:", CK.save(args.ckpt, state.params,
                                 step=int(state.version)))

@@ -207,6 +207,34 @@ class InferenceEngine:
         with self._lock:
             self._commands.append(("abort", request_id))
 
+    def set_role(self, role: str):
+        """Switch the engine's data-plane role (dynamic rebalancing). The
+        caller (LLMProxy) is responsible for draining queued commands and
+        in-flight slots first — see ``extract_pending`` and
+        ``drain_active_handoffs`` — and for installing ``on_handoff`` when
+        the new role is ``"prefill"``."""
+        if role not in ROLES:
+            raise ValueError(f"role must be one of {ROLES}, got {role!r}")
+        with self._step_lock:
+            self.role = role
+
+    def extract_pending(self) -> List:
+        """Atomically remove and return all queued commands (role switch:
+        the proxy re-dispatches them through its routing tables)."""
+        with self._lock:
+            cmds = list(self._commands)
+            self._commands.clear()
+        return cmds
+
+    def drain_active_handoffs(self) -> List[KVHandoff]:
+        """Package every in-flight slot as a KVHandoff and free it — the
+        migration half of a decode->prefill role switch. Serialized against
+        ``step``/``update_params`` so no slot is mid-decode while its cache
+        is extracted."""
+        with self._step_lock:
+            return [self._package_handoff(i)
+                    for i, s in enumerate(self._slots) if s.active]
+
     def suspend(self):
         """Stop admitting new requests; in-flight slots are preserved.
         A bare flag write (atomic under the GIL): the pump thread reads it
@@ -282,11 +310,8 @@ class InferenceEngine:
             self._emit_handoff(i)
         return True
 
-    def _emit_handoff(self, i: int):
-        if self.on_handoff is None:
-            raise RuntimeError(
-                "prefill-role engine needs an on_handoff hook "
-                "(set by LLMProxy(pd_disagg=True))")
+    def _package_handoff(self, i: int) -> KVHandoff:
+        """Freeze slot ``i`` into a KVHandoff and free the slot."""
         s = self._slots[i]
         handoff = KVHandoff(
             request=s.request, tokens=list(s.tokens),
@@ -296,6 +321,14 @@ class InferenceEngine:
             weight_version=self.weight_version)
         s.active = False
         s.request = None
+        return handoff
+
+    def _emit_handoff(self, i: int):
+        if self.on_handoff is None:
+            raise RuntimeError(
+                "prefill-role engine needs an on_handoff hook "
+                "(set by LLMProxy(pd_disagg=True))")
+        handoff = self._package_handoff(i)
         self.handoffs_out += 1
         self.on_handoff(handoff)
 

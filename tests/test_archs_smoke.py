@@ -12,6 +12,10 @@ from repro.models import Model
 from repro.rl.trainer import (default_optimizer, init_train_state,
                               make_grpo_train_step)
 
+# the per-arch JIT sweep (jamba alone is >1 min) dominates tier-1 wall
+# time with the kernel suites; the fast CI job skips it
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def rng():

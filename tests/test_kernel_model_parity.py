@@ -4,6 +4,7 @@ not just match the standalone oracles)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.kernels.decode_attention import decode_attention
@@ -13,6 +14,9 @@ from repro.kernels.rwkv6_scan import rwkv6_scan
 from repro.models import layers as L
 from repro.models import mamba as M
 from repro.models import rwkv6 as R
+
+# kernel JIT dominates tier-1 wall time; the fast CI job skips these
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(7)
 

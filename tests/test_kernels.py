@@ -18,6 +18,9 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
+# kernel JIT dominates tier-1 wall time; the fast CI job skips these
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

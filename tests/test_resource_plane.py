@@ -1,0 +1,429 @@
+"""Resource plane + hardware-affinity workload mapping for the live data
+plane:
+
+- role-affine binding (prefill -> compute-class, decode -> bandwidth-class)
+  with preferred-pool-exhausted fallback and release-then-rebind reuse;
+- ResourceManager under concurrent bind/release;
+- rebind (the role-switch path) migrates the device group to the new
+  role's preferred class;
+- Cluster._create_workers releases earlier bindings when the k-th bind
+  (or a worker setup) fails;
+- the dynamic prefill<->decode rebalancer: hysteresis band, role switch
+  with device re-bind, in-flight KV migration with greedy parity, and the
+  switch recorded in StepMetrics;
+- PerfModel placement pricing reproduces the Table 2 ordering;
+- TaskSampler weight validation; empty-payload env actions are penalties,
+  not crashes.
+"""
+import threading
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import (H20, H800, PERF, Cluster, LiveRLRunner, LLMProxy,
+                        RebalancerConfig, ResourceManager, RunnerConfig,
+                        ServerlessPlatform, build_pd_proxy, parse_pools)
+from repro.core.scheduler import DEFAULT_TASKS
+from repro.core.worker import Worker
+from repro.data.pipeline import TaskSampler
+from repro.envs.math_env import MathEnv
+from repro.envs.swe_sim import SWEEnv
+from repro.models import Model
+from repro.rewards.rule_based import format_bonus_reward
+from repro.rl.engine import GenRequest, InferenceEngine
+from repro.rl.trainer import (default_optimizer, init_train_state,
+                              make_grpo_train_step)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("tiny")
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# role-affine binding
+# ---------------------------------------------------------------------------
+def test_bind_affine_prefers_role_class():
+    rm = ResourceManager({"H800": 2, "H20": 2})
+    bp = rm.bind_affine("p0", "prefill")
+    bd = rm.bind_affine("d0", "decode")
+    assert bp.group.pool == "H800" and not bp.fallback
+    assert bd.group.pool == "H20" and not bd.fallback
+
+
+def test_bind_affine_falls_back_then_rebinds_preferred():
+    rm = ResourceManager({"H800": 1, "H20": 1})
+    b0 = rm.bind_affine("p0", "prefill")
+    assert b0.group.pool == "H800"
+    # preferred (compute) pool exhausted: opportunistic fallback, flagged
+    b1 = rm.bind_affine("p1", "prefill")
+    assert b1 is not None and b1.group.pool == "H20" and b1.fallback
+    # both pools exhausted: bind is impossible, not an exception
+    assert rm.bind_affine("p2", "prefill") is None
+    # release-then-rebind reuse: the freed H800 device comes back
+    rm.release("p0")
+    b2 = rm.bind_affine("p2", "prefill")
+    assert b2.group.pool == "H800" and not b2.fallback
+    assert b2.group.device_ids == b0.group.device_ids
+
+
+def test_rebind_migrates_to_new_role_class():
+    rm = ResourceManager({"H800": 1, "H20": 1})
+    b = rm.bind_affine("e0", "prefill")
+    assert b.group.pool == "H800"
+    b2 = rm.rebind("e0", "decode")
+    assert b2.group.pool == "H20" and b2.role == "decode"
+    assert rm.available("H800") == 1          # old group released
+    assert rm.available("H20") == 0
+    assert rm.rebind("ghost", "decode") is None
+
+
+def test_rebind_single_pool_rebinds_in_place():
+    rm = ResourceManager({"H800": 1})
+    rm.bind_affine("e0", "prefill")
+    b = rm.rebind("e0", "decode")             # nowhere else to go
+    assert b is not None and b.group.pool == "H800" and b.fallback
+    assert rm.available("H800") == 0
+
+
+def test_concurrent_bind_release_no_double_allocation():
+    rm = ResourceManager({"H20": 4})
+    held, errors = set(), []
+    held_lock = threading.Lock()
+
+    def worker(tid):
+        try:
+            for i in range(100):
+                wid = f"w{tid}.{i}"
+                b = rm.bind_affine(wid, "decode")
+                if b is None:
+                    continue
+                with held_lock:
+                    for d in b.group.device_ids:
+                        assert d not in held, "device double-allocated"
+                        held.add(d)
+                with held_lock:
+                    for d in b.group.device_ids:
+                        held.discard(d)
+                rm.release(wid)
+        except BaseException as e:             # surfaced after join
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert rm.available("H20") == 4            # everything returned
+
+
+# ---------------------------------------------------------------------------
+# Cluster binding-leak fix
+# ---------------------------------------------------------------------------
+class _GenWorker(Worker):
+    ROLE = "generate"
+    DEFAULT_HW = "H20"
+    torn_down = []
+
+    def teardown(self):
+        _GenWorker.torn_down.append(self.info.worker_id)
+
+
+class _ExplodingWorker(_GenWorker):
+    created = 0
+
+    def setup(self):
+        _ExplodingWorker.created += 1
+        if _ExplodingWorker.created >= 2:
+            raise RuntimeError("boom on worker 2")
+
+
+def test_cluster_partial_bind_failure_releases_bindings():
+    rm = ResourceManager({"H20": 2})
+    with pytest.raises(RuntimeError, match="cannot bind"):
+        Cluster(rm, _GenWorker, num_workers=5)   # only 2 fit (no fallback
+    #                                              pool is configured)
+    snap = rm.snapshot()
+    assert snap["free"]["H20"] == 2              # k-1 bindings released
+    assert snap["bound"] == {}                   # no stale metadata
+
+
+def test_cluster_setup_failure_tears_down_and_releases():
+    rm = ResourceManager({"H20": 4})
+    _GenWorker.torn_down = []
+    _ExplodingWorker.created = 0
+    with pytest.raises(RuntimeError, match="boom"):
+        Cluster(rm, _ExplodingWorker, num_workers=3)
+    assert rm.snapshot()["free"]["H20"] == 4
+    assert len(_GenWorker.torn_down) == 1        # worker 1 torn down
+
+
+# ---------------------------------------------------------------------------
+# PerfModel placement pricing (Table 2 ordering)
+# ---------------------------------------------------------------------------
+def test_price_placement_table2_ordering():
+    cfg = get_config("qwen3-8b")
+    kw = dict(prompt_tokens=4096, new_tokens=256, concurrency=32)
+    affine = PERF.price_placement(cfg, H800, H20, **kw)
+    anti = PERF.price_placement(cfg, H20, H800, **kw)
+    homog = max(PERF.price_placement(cfg, H800, H800, **kw),
+                PERF.price_placement(cfg, H20, H20, **kw),
+                key=lambda p: p["cost_norm_throughput"])
+    assert affine["cost_norm_throughput"] \
+        >= 1.2 * anti["cost_norm_throughput"]
+    assert affine["cost_norm_throughput"] > homog["cost_norm_throughput"]
+    # the bottleneck-stage rate is what gets priced
+    assert affine["rate_rps"] == pytest.approx(
+        min(affine["prefill_rate_rps"], affine["decode_rate_rps"]))
+
+
+def test_role_latency_matches_phases():
+    cfg = get_config("qwen3-8b")
+    t_p = PERF.role_latency(cfg, "prefill", H800, prompt_tokens=1024,
+                            new_tokens=128)
+    t_d = PERF.role_latency(cfg, "decode", H20, prompt_tokens=1024,
+                            new_tokens=128)
+    t_c = PERF.role_latency(cfg, "colocated", H800, prompt_tokens=1024,
+                            new_tokens=128)
+    assert t_p == pytest.approx(PERF.prefill_time(cfg, 1024, H800, 1))
+    assert t_d == pytest.approx(PERF.decode_time(cfg, 128, H20, 1,
+                                                 context=1152,
+                                                 concurrency=32))
+    assert t_c > t_p
+
+
+# ---------------------------------------------------------------------------
+# live proxy: affine placement + placement report
+# ---------------------------------------------------------------------------
+def test_build_pd_proxy_binds_affine_and_reports(tiny_setup):
+    cfg, model, params = tiny_setup
+    rm = ResourceManager({"H800": 2, "H20": 2})
+    proxy = build_pd_proxy(model, params, max_slots=2, max_len=96,
+                           n_prefill=1, n_decode=1, resource_manager=rm)
+    pools = {h.name: h.pool for h in proxy.handles}
+    assert pools == {"prefill-0": "H800", "decode-0": "H20"}
+    report = {r["name"]: r for r in proxy.placement_report()}
+    assert report["prefill-0"]["affine"] and report["decode-0"]["affine"]
+    assert report["prefill-0"]["modeled_prefill_s"] \
+        < report["decode-0"]["modeled_prefill_s"]
+    proxy.release_bindings()
+    assert rm.snapshot()["free"] == {"H800": 2, "H20": 2}
+
+
+def test_build_pd_proxy_bind_failure_releases_partial(tiny_setup):
+    cfg, model, params = tiny_setup
+    rm = ResourceManager({"H800": 1})
+    with pytest.raises(RuntimeError, match="cannot bind"):
+        build_pd_proxy(model, params, max_slots=2, max_len=96,
+                       n_prefill=1, n_decode=1, resource_manager=rm,
+                       devices_per_engine=2)
+    assert rm.snapshot()["free"] == {"H800": 1}
+    assert rm.snapshot()["bound"] == {}
+
+
+# ---------------------------------------------------------------------------
+# dynamic rebalancer
+# ---------------------------------------------------------------------------
+def _serve(proxy, reqs, max_pumps=4000):
+    out = {}
+    for r in reqs:
+        proxy.submit(r, callback=lambda res: out.__setitem__(
+            res.request_id, res))
+    pumps = 0
+    while proxy.busy:
+        proxy.pump()
+        pumps += 1
+        assert pumps < max_pumps, "proxy did not drain"
+    return out
+
+
+def _greedy_colocated(model, params, prompt, n, max_len=96):
+    eng = InferenceEngine(model, params, max_slots=2, max_len=max_len)
+    eng.add_request(GenRequest(request_id="ref", prompt=list(prompt),
+                               max_new_tokens=n, temperature=0.0))
+    eng.run_until_idle()
+    return eng.pop_result("ref").tokens
+
+
+def test_rebalancer_switches_and_rebinds_under_decode_backlog(tiny_setup):
+    cfg, model, params = tiny_setup
+    rm = ResourceManager({"H800": 2, "H20": 2})
+    proxy = build_pd_proxy(
+        model, params, max_slots=4, max_len=96, n_prefill=2, n_decode=1,
+        resource_manager=rm,
+        rebalancer=RebalancerConfig(high=2.0, window=2, cooldown=8))
+    reqs = [GenRequest(request_id=f"r{i}", prompt=[1, 2 + i],
+                       max_new_tokens=20, temperature=0.0)
+            for i in range(6)]
+    out = _serve(proxy, reqs)
+    assert len(out) == 6
+    assert all(r.finish_reason in ("stop", "length") for r in out.values())
+    assert proxy.role_switches >= 1
+    ev = proxy.switch_log[0]
+    assert (ev["from_role"], ev["to_role"]) == ("prefill", "decode")
+    # the flipped engine released its compute-class device and re-bound
+    # on the free bandwidth-class one
+    assert (ev["from_pool"], ev["to_pool"]) == ("H800", "H20")
+    assert rm.snapshot()["free"]["H800"] == 1
+    # greedy parity survives the switch
+    for i in range(6):
+        assert out[f"r{i}"].tokens == _greedy_colocated(
+            model, params, [1, 2 + i], 20)
+    proxy.release_bindings()
+
+
+def test_rebalancer_hysteresis_no_switch_in_band(tiny_setup):
+    cfg, model, params = tiny_setup
+    proxy = build_pd_proxy(
+        model, params, max_slots=4, max_len=96, n_prefill=2, n_decode=2,
+        rebalancer=RebalancerConfig(high=1000.0, low=0.0, window=2,
+                                    cooldown=0))
+    reqs = [GenRequest(request_id=f"r{i}", prompt=[1, 2 + i],
+                       max_new_tokens=8, temperature=0.0)
+            for i in range(4)]
+    _serve(proxy, reqs)
+    assert proxy.role_switches == 0            # ratio never left the band
+
+
+def test_switch_role_migrates_inflight_kv_with_parity(tiny_setup):
+    cfg, model, params = tiny_setup
+    proxy = build_pd_proxy(model, params, max_slots=4, max_len=96,
+                           n_prefill=1, n_decode=2)
+    out = {}
+    prompts = {f"m{i}": [1, 3 + i] for i in range(2)}
+    for rid, p in prompts.items():
+        proxy.submit(GenRequest(request_id=rid, prompt=p,
+                                max_new_tokens=16, temperature=0.0),
+                     callback=lambda r: out.__setitem__(r.request_id, r))
+    for _ in range(4):                          # mid-decode on both engines
+        proxy.pump()
+    donor = max(proxy.decode_handles, key=lambda h: h.engine.num_active)
+    n_active = donor.engine.num_active
+    assert n_active >= 1
+    proxy.switch_role(donor, "prefill")
+    assert donor.role == "prefill"
+    assert proxy.switch_migrations == n_active
+    assert donor.engine.num_active == 0         # slots drained
+    pumps = 0
+    while proxy.busy:
+        proxy.pump()
+        pumps += 1
+        assert pumps < 500
+    for rid, p in prompts.items():
+        assert out[rid].tokens == _greedy_colocated(model, params, p, 16)
+    assert len(proxy.prefill_handles) == 2
+    assert len(proxy.decode_handles) == 1
+
+
+def test_rebalancer_requires_pd(tiny_setup):
+    cfg, model, params = tiny_setup
+    eng = InferenceEngine(model, params, max_slots=2, max_len=96)
+    from repro.core import EngineHandle
+    with pytest.raises(ValueError, match="pd_disagg"):
+        LLMProxy([EngineHandle(eng, "H20")],
+                 rebalancer=RebalancerConfig())
+
+
+def test_switch_role_refuses_last_engine_of_a_role(tiny_setup):
+    cfg, model, params = tiny_setup
+    proxy = build_pd_proxy(model, params, max_slots=2, max_len=96)
+    with pytest.raises(ValueError, match="last"):
+        proxy.switch_role(proxy.decode_handles[0], "prefill")
+    with pytest.raises(ValueError, match="last"):
+        proxy.switch_role(proxy.prefill_handles[0], "decode")
+    assert proxy.role_switches == 0
+
+
+# ---------------------------------------------------------------------------
+# StepMetrics records the role switch (live runner, --pools/--affinity path)
+# ---------------------------------------------------------------------------
+def test_live_runner_records_role_switch_in_stepmetrics(tiny_setup):
+    cfg, model, params = tiny_setup
+    opt = default_optimizer(1e-3)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    rm = ResourceManager({"H800": 2, "H20": 2})
+    proxy = build_pd_proxy(model, state.params, max_slots=4, max_len=256,
+                           n_prefill=2, n_decode=1, resource_manager=rm,
+                           rebalancer=RebalancerConfig())
+    with LiveRLRunner(
+            RunnerConfig(batch_size=4, group_size=2, mode="sync",
+                         tasks=("game",), max_new_tokens=12,
+                         pd_disagg=True, pools={"H800": 2, "H20": 2},
+                         affinity=True),
+            proxy, state, jax.jit(make_grpo_train_step(model, opt)),
+            ServerlessPlatform(), format_bonus_reward,
+            seq_len=256) as runner:
+        hist = runner.run_steps(1)
+    assert sum(h.role_switches for h in hist) >= 1
+    assert runner.proxy.role_switches == sum(h.role_switches for h in hist)
+    assert runner.placement_report()           # pricing available live
+    proxy.release_bindings()
+    assert rm.snapshot()["free"] == {"H800": 2, "H20": 2}
+
+
+# ---------------------------------------------------------------------------
+# satellites: parse_pools, TaskSampler validation, env empty payloads
+# ---------------------------------------------------------------------------
+def test_parse_pools():
+    assert parse_pools("H800:8,H20:8") == {"H800": 8, "H20": 8}
+    assert parse_pools(" H20:1 ") == {"H20": 1}
+    with pytest.raises(ValueError, match="unknown hardware"):
+        parse_pools("B200:4")
+    with pytest.raises(ValueError, match="bad device count"):
+        parse_pools("H20:lots")
+    with pytest.raises(ValueError, match="positive"):
+        parse_pools("H20:0")
+    with pytest.raises(ValueError, match="empty"):
+        parse_pools(",")
+
+
+def test_task_sampler_validates_weights():
+    with pytest.raises(ValueError, match="length"):
+        TaskSampler(["a", "b"], weights=[])       # falsy != uniform
+    with pytest.raises(ValueError, match="length"):
+        TaskSampler(["a", "b"], weights=[1.0, 2.0, 3.0])
+    with pytest.raises(ValueError, match="sum to zero"):
+        TaskSampler(["a", "b"], weights=[0.0, 0.0])
+    with pytest.raises(ValueError, match="finite"):
+        TaskSampler(["a", "b"], weights=[-1.0, 2.0])
+    with pytest.raises(ValueError, match="at least one task"):
+        TaskSampler([])
+    s = TaskSampler(["a", "b"], weights=[1.0, 0.0])
+    assert {s.sample() for _ in range(50)} == {"a"}
+    u = TaskSampler(["a", "b"], seed=1)           # uniform still works
+    assert {u.sample() for _ in range(50)} == {"a", "b"}
+
+
+def test_runner_default_mix_includes_long_tail():
+    cfg = RunnerConfig()
+    assert "swe" in cfg.tasks and "webshop" in cfg.tasks
+    ws = cfg.sampler_weights()
+    assert ws is not None and len(ws) == len(DEFAULT_TASKS)
+    assert RunnerConfig(tasks=("game",)).sampler_weights() is None
+
+
+def test_swe_env_empty_payloads_are_penalties_not_crashes():
+    env = SWEEnv(seed=3)
+    env.reset(seed=3)
+    obs, r, done, _ = env.step("cat:")
+    assert r < 0 and not done and "filename" in obs
+    obs, r, done, _ = env.step("cat:   ")
+    assert r < 0 and not done
+    obs, r, done, _ = env.step("patch:")
+    assert r < 0 and not done and "malformed" in obs
+    obs, r, done, _ = env.step("cat: calc.py")   # well-formed still works
+    assert r == 0.0 and "def add" in obs
+
+
+def test_math_env_empty_calc_is_error_not_crash():
+    env = MathEnv(seed=5)
+    env.reset(seed=5)
+    obs, r, done, _ = env.step("calc:")
+    assert r < 0 and not done and "error" in obs
+    obs, r, done, _ = env.step("calc: 2 + 2")
+    assert "= 4" in obs
