@@ -50,14 +50,20 @@ def live(steps=2):
     opt = default_optimizer(1e-3)
     state = init_train_state(model, jax.random.PRNGKey(0), opt)
     rm = ResourceManager({"H800": 2, "H20": 2})
+    # steps_per_dispatch=1: the mis-split decode backlog that triggers the
+    # rebalancer builds up per single-token pump; the default K=8
+    # macro-step drains the lone decode engine too fast to ever leave the
+    # hysteresis band on this tiny workload
     proxy = build_pd_proxy(model, state.params, max_slots=4, max_len=256,
                            n_prefill=2, n_decode=1, resource_manager=rm,
-                           rebalancer=RebalancerConfig())
+                           rebalancer=RebalancerConfig(),
+                           steps_per_dispatch=1)
     with LiveRLRunner(
             RunnerConfig(batch_size=4, group_size=2, mode="rollart",
                          tasks=("math", "game", "swe", "webshop"),
                          max_new_tokens=16, pd_disagg=True,
-                         pools={"H800": 2, "H20": 2}, affinity=True),
+                         pools={"H800": 2, "H20": 2}, affinity=True,
+                         steps_per_dispatch=1),
             proxy, state, jax.jit(make_grpo_train_step(model, opt)),
             ServerlessPlatform(), REWARD_FNS["format_bonus"],
             seq_len=256) as runner:

@@ -26,6 +26,7 @@ ALL = [
     "redundant_rollouts",  # Fig 14b
     "pd_disagg",        # Table 5
     "pd_disagg_live",   # Table 5 cross-check on the real engines
+    "decode_hotpath",   # device-resident decode: K-step dispatch + donation
     "kernels_bench",
     "roofline",         # §Roofline from the dry-run artifacts
 ]

@@ -50,7 +50,16 @@ class RebalancerConfig:
     proxy tracks the decode/prefill queue-depth ratio each pump; only after
     ``window`` consecutive pumps outside [low, high] — and at least
     ``cooldown`` pumps since the last switch — does an engine flip roles,
-    so transient bursts never thrash the placement."""
+    so transient bursts never thrash the placement.
+
+    The ratio itself is dispatch-invariant (request-denominated), but the
+    DYNAMICS are not: with ``steps_per_dispatch=K`` a decode engine drains
+    up to K tokens per slot per pump, so a backlog that K=1 would let
+    accumulate across ``window`` pumps may clear within one. That is the
+    intended effect of the macro-step — more decode throughput means less
+    need to switch — but deployments that want aggressive rebalancing on
+    small workloads should lower ``high``/``window`` (or the engines'
+    ``steps_per_dispatch``) accordingly."""
     high: float = 4.0        # decode backlog dominates: prefill -> decode
     low: float = 0.25        # prefill backlog dominates: decode -> prefill
     window: int = 4          # consecutive out-of-band pumps required
@@ -249,7 +258,11 @@ class LLMProxy:
     # ------------------------------------------------------------------
     def queue_depth_ratio(self) -> float:
         """Decode-side backlog over prefill-side backlog (+1 smoothing so
-        an idle side doesn't divide by zero)."""
+        an idle side doesn't divide by zero). Backlog is denominated in
+        queued + in-flight REQUESTS (``EngineHandle.load``), never in jit
+        dispatches, so the signal is invariant to the engines'
+        ``steps_per_dispatch`` macro-step batching — a K=8 decode engine
+        reports the same backlog as a K=1 engine serving the same work."""
         pre = sum(h.load() for h in self.prefill_handles)
         dec = sum(h.load() for h in self.decode_handles)
         return (dec + 1.0) / (pre + 1.0)
@@ -371,10 +384,13 @@ class LLMProxy:
 
     # ------------------------------------------------------------------
     def pump(self) -> int:
-        """Advance every engine by one step; returns active slot count.
-        In PD mode prefill engines step before decode engines so a fresh
-        handoff starts decoding in the same pump; afterwards the dynamic
-        rebalancer (if configured) checks the queue-depth ratio."""
+        """Advance every engine by one macro-step; returns the number of
+        decode tokens emitted across engines (token-denominated activity:
+        with ``steps_per_dispatch=K`` one pump can emit up to K tokens per
+        active slot from a single dispatch each). In PD mode prefill
+        engines step before decode engines so a fresh handoff starts
+        decoding in the same pump; afterwards the dynamic rebalancer (if
+        configured) checks the queue-depth ratio."""
         n = sum(h.engine.step() for h in self._pump_order)
         self._pumps += 1
         if self.rebalancer is not None and self.pd_disagg:
@@ -399,6 +415,8 @@ class LLMProxy:
                 {"pool": h.pool, "name": h.name, "role": h.role,
                  "steps": h.engine.steps,
                  "busy_steps": h.engine.busy_steps,
+                 "decode_dispatches": h.engine.decode_dispatches,
+                 "steps_per_dispatch": h.engine.steps_per_dispatch,
                  "prefill_tokens": h.engine.prefill_tokens,
                  "decode_tokens": h.engine.decode_tokens,
                  "handoffs_out": h.engine.handoffs_out,
@@ -434,7 +452,9 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
                    hw_affinity: Optional[Dict[str, str]] = None,
                    resource_manager: Optional[ResourceManager] = None,
                    devices_per_engine: int = 1,
-                   rebalancer: Optional[RebalancerConfig] = None) -> LLMProxy:
+                   rebalancer: Optional[RebalancerConfig] = None,
+                   steps_per_dispatch: int = 8,
+                   donate: bool = True) -> LLMProxy:
     """Build a PD-disaggregated proxy: ``n_prefill`` prefill-role engines on
     the compute pool and ``n_decode`` decode-role engines on the bandwidth
     pool (the live analogue of the simulator's ``gen_pools`` +
@@ -446,7 +466,12 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
     opportunistic fallback when the preferred class is exhausted — and the
     ``prefill_pool``/``decode_pool`` names are superseded by the bound
     pools. Pass a ``RebalancerConfig`` to enable the dynamic
-    prefill<->decode role switch (which releases/re-binds those groups)."""
+    prefill<->decode role switch (which releases/re-binds those groups).
+
+    ``steps_per_dispatch``/``donate`` configure the decode hot path of
+    every engine (K scanned decode steps per jit dispatch / in-place
+    donated KV caches; see ``InferenceEngine``). The shared ``params``
+    pytree is exactly why engines never donate their params argument."""
     handles = []
     bound = []
 
@@ -469,7 +494,9 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
         b = _bind(name, "prefill")
         eng = InferenceEngine(model, params, max_slots=max_slots,
                               max_len=max_len, seed=seed + i,
-                              role="prefill")
+                              role="prefill",
+                              steps_per_dispatch=steps_per_dispatch,
+                              donate=donate)
         handles.append(EngineHandle(eng, b.group.pool if b else prefill_pool,
                                     name, binding=b))
     for i in range(n_decode):
@@ -477,7 +504,9 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
         b = _bind(name, "decode")
         eng = InferenceEngine(model, params, max_slots=max_slots,
                               max_len=max_len, seed=seed + 1000 + i,
-                              role="decode")
+                              role="decode",
+                              steps_per_dispatch=steps_per_dispatch,
+                              donate=donate)
         handles.append(EngineHandle(eng, b.group.pool if b else decode_pool,
                                     name, binding=b))
     return LLMProxy(handles, hw_affinity=hw_affinity, pd_disagg=True,

@@ -97,6 +97,13 @@ class RunnerConfig:
     # dynamic prefill<->decode rebalancer.
     pools: Optional[Dict[str, int]] = None
     affinity: bool = False
+    # decode macro-step size: K scanned decode steps per jit dispatch
+    # (InferenceEngine.steps_per_dispatch; launchers build the proxy's
+    # engines with this). Commands drain between macro-steps, so the
+    # runner's ABORT-driven controls — per-tick staleness enforcement and
+    # redundancy cancellation — act within at most K decode tokens per
+    # slot; lower it when abort latency matters more than throughput.
+    steps_per_dispatch: int = 8
     max_new_tokens: int = 32
     temperature: float = 1.0
     reward_url: str = "fc://rollart/reward"
@@ -309,7 +316,10 @@ class LiveRLRunner:
     def _rollout_tick(self) -> int:
         """One rollout iteration: staleness enforcement, env-group top-up,
         one proxy pump, completion cascade, reward drain, surplus
-        cancellation. Returns an activity count (0 == idle tick)."""
+        cancellation. Returns an activity count (0 == idle tick; the pump
+        contribution is decode TOKENS, so the count — like every
+        token-denominated signal the runner reads — is invariant to the
+        engines' steps_per_dispatch batching)."""
         self._enforce_staleness()
         self._ensure_inflight()
         n = self.proxy.pump()

@@ -46,6 +46,14 @@ def main(argv=None):
                          "--pd-disagg and requires --pools")
     ap.add_argument("--n-prefill", type=int, default=1)
     ap.add_argument("--n-decode", type=int, default=1)
+    ap.add_argument("--steps-per-dispatch", type=int, default=8,
+                    metavar="K",
+                    help="decode macro-step size: K scanned decode steps "
+                         "per jit dispatch with on-device stop masking "
+                         "(amortizes dispatch overhead K-fold; ADD/ABORT "
+                         "latency is bounded by one macro-step, so lower "
+                         "K for latency-sensitive serving; 1 = legacy "
+                         "single-step dispatch)")
     ap.add_argument("--async-pump", action="store_true",
                     help="pump the engines from a background thread while "
                          "requests are submitted concurrently (the live "
@@ -68,13 +76,15 @@ def main(argv=None):
             model, params, max_slots=args.slots, max_len=1024,
             n_prefill=args.n_prefill, n_decode=args.n_decode,
             resource_manager=rm,
-            rebalancer=RebalancerConfig() if args.affinity else None)
+            rebalancer=RebalancerConfig() if args.affinity else None,
+            steps_per_dispatch=args.steps_per_dispatch)
         if args.affinity:
             for row in proxy.placement_report():
                 print("placement: " + format_placement_row(row))
     else:
         eng = InferenceEngine(model, params, max_slots=args.slots,
-                              max_len=1024)
+                              max_len=1024,
+                              steps_per_dispatch=args.steps_per_dispatch)
         proxy = LLMProxy([EngineHandle(eng, "local")])
 
     prompts = args.prompt or ["the agent moves ", "reward comes from "]

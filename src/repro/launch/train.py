@@ -67,6 +67,13 @@ def main(argv=None):
                          "(default 1; 2 with --affinity, so the "
                          "rebalancer has room to switch one)")
     ap.add_argument("--n-decode", type=int, default=1)
+    ap.add_argument("--steps-per-dispatch", type=int, default=8,
+                    metavar="K",
+                    help="decode macro-step size: K scanned decode steps "
+                         "per jit dispatch (device-resident decode; abort/"
+                         "staleness enforcement latency is bounded by one "
+                         "macro-step — lower K to tighten it, 1 = legacy "
+                         "single-step dispatch)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args(argv)
 
@@ -104,10 +111,12 @@ def main(argv=None):
                 model, state.params, max_slots=8, max_len=640,
                 n_prefill=n_prefill, n_decode=args.n_decode,
                 resource_manager=rm,
-                rebalancer=RebalancerConfig() if args.affinity else None)
+                rebalancer=RebalancerConfig() if args.affinity else None,
+                steps_per_dispatch=args.steps_per_dispatch)
         else:
             eng = InferenceEngine(model, state.params, max_slots=8,
-                                  max_len=640)
+                                  max_len=640,
+                                  steps_per_dispatch=args.steps_per_dispatch)
             proxy = LLMProxy([EngineHandle(eng, "H20")])
         weights = (tuple(float(w) for w in args.task_weights.split(","))
                    if args.task_weights else None)
@@ -117,7 +126,8 @@ def main(argv=None):
                              tasks=tuple(args.tasks.split(",")),
                              task_weights=weights,
                              pd_disagg=pd, pools=pools,
-                             affinity=args.affinity),
+                             affinity=args.affinity,
+                             steps_per_dispatch=args.steps_per_dispatch),
                 proxy, state, step, ServerlessPlatform(),
                 REWARD_FNS[args.reward], seq_len=640) as runner:
             if args.affinity:

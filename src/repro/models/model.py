@@ -328,6 +328,53 @@ class Model:
             h = L.mlp_fwd(bp["mlp"], cfg, h)
         return x + h, new_cache
 
+    def decode_block(self, params, tokens, cache, positions, keys,
+                     temperatures, stop_ids, budgets, sample_fn):
+        """K decode steps in one compiled call (``jax.lax.scan`` over the
+        stacked ``keys``): the device-resident decode loop. Host dispatch,
+        per-step Python overhead, and the token round-trip are amortized
+        K-fold; stop-token / length / already-finished masking happens on
+        device so a slot that finishes mid-block freezes (its token and
+        position stop advancing, making the remaining cache writes
+        idempotent re-writes of the same entry) without a host round-trip.
+
+        tokens: [B,1] last emitted token per slot; positions: [B] absolute
+        position of that token; keys: [K, ...] stacked PRNG keys, one per
+        inner step (same one-key-per-decode-step schedule as K single-step
+        dispatches, so sampled streams are reproducible across block
+        sizes); temperatures: [B]; stop_ids: [B,W] per-slot stop tokens
+        padded with -1; budgets: [B] int32 tokens each slot may still emit
+        (0 = frozen — inactive slots ride along exactly like the
+        single-step path's zero rows). ``sample_fn(key, logits,
+        temperatures) -> (toks [B], lps [B])`` runs inside the scanned
+        body (see ``repro.rl.sampling.sample_mixed``).
+
+        Returns (toks [K,B], lps [K,B], emitted [K,B] bool, cache). Each
+        slot's emitted column is a True-prefix: host code appends exactly
+        the emitted tokens and re-derives stop/length finishing from them.
+        """
+        def body(carry, key):
+            tok, pos, rem, done, cache = carry
+            logits, cache = self.decode_step(params, tok, cache, pos)
+            t, lp = sample_fn(key, logits, temperatures)
+            emit = ~done
+            # frozen rows re-feed their previous token at the same
+            # position: the attention cache write is idempotent and a
+            # recurrent state only advances in a slot that is finished
+            # (and therefore re-prefilled before reuse)
+            t = jnp.where(emit, t, tok[:, 0])
+            lp = jnp.where(emit, lp, 0.0)
+            rem = rem - emit.astype(rem.dtype)
+            hit_stop = jnp.any(t[:, None] == stop_ids, axis=1)
+            done = done | (emit & hit_stop) | (rem <= 0)
+            pos = pos + emit.astype(pos.dtype)
+            return (t[:, None], pos, rem, done, cache), (t, lp, emit)
+
+        carry0 = (tokens, positions, budgets, budgets <= 0, cache)
+        (_, _, _, _, cache), (toks, lps, emitted) = jax.lax.scan(
+            body, carry0, keys)
+        return toks, lps, emitted, cache
+
     def decode_step(self, params, tokens, cache, positions):
         """tokens: [B,1] int32; positions: [B] int32 (absolute positions).
 
@@ -370,11 +417,24 @@ class Model:
     # ------------------------------------------------------------------
     # prefill (fills KV/state caches, returns last-token logits)
     # ------------------------------------------------------------------
-    def prefill(self, params, tokens, cache, cond=None, last_pos=None):
+    def prefill(self, params, tokens, cache, cond=None, last_pos=None,
+                slot=None):
         """tokens: [B,S]. Fills cache positions [0,S) and returns
-        (logits [B,V] at position ``last_pos`` (default S-1), cache)."""
+        (logits [B,V] at position ``last_pos`` (default S-1), cache).
+
+        With ``slot`` given (int or traced scalar), ``tokens`` is batch-1
+        and ``cache`` is a FULL engine cache (leaves laid out
+        ``[num_periods, max_slots, ...]``): the prompt's cache entries are
+        written directly into that slot's batch row via
+        ``dynamic_update_slice``, so admission prefill needs no transient
+        batch-1 cache and — with the cache argument donated at the jit
+        boundary — no full-cache copy either. Without ``slot`` the batch
+        rows of ``tokens`` and ``cache`` correspond 1:1 (legacy mode,
+        requires ``B == cache batch``).
+        """
         cfg = self.cfg
         B, S = tokens.shape
+        slot0 = 0 if slot is None else slot
         positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
         x = jnp.take(params["embed"]["tokens"], tokens, axis=0)
         x = x.astype(L.dt(cfg))
@@ -399,15 +459,30 @@ class Model:
                     if self.window is not None and clen == self.window:
                         # ring layout: token t lives in slot t % window
                         sl = (jnp.arange(max(S - clen, 0), S) % clen)
-                        k_c = ccache["k"].at[:, :, sl, :].set(
-                            kw.astype(cdt))
-                        v_c = ccache["v"].at[:, :, sl, :].set(
-                            vw.astype(cdt))
+                        if slot is None:
+                            k_c = ccache["k"].at[:, :, sl, :].set(
+                                kw.astype(cdt))
+                            v_c = ccache["v"].at[:, :, sl, :].set(
+                                vw.astype(cdt))
+                        else:
+                            # slice the slot's batch row out first: mixing
+                            # the scalar `slot` with the advanced index
+                            # `sl` in one .at[] would move the advanced
+                            # dims to the front (transposed write)
+                            def ring_write(big, little):
+                                row = jax.lax.dynamic_slice_in_dim(
+                                    big, slot, 1, axis=0)
+                                row = row.at[:, :, sl, :].set(
+                                    little.astype(cdt))
+                                return jax.lax.dynamic_update_slice_in_dim(
+                                    big, row, slot, axis=0)
+                            k_c = ring_write(ccache["k"], kw)
+                            v_c = ring_write(ccache["v"], vw)
                     else:
                         k_c = jax.lax.dynamic_update_slice(
-                            ccache["k"], kw.astype(cdt), (0, 0, 0, 0))
+                            ccache["k"], kw.astype(cdt), (slot0, 0, 0, 0))
                         v_c = jax.lax.dynamic_update_slice(
-                            ccache["v"], vw.astype(cdt), (0, 0, 0, 0))
+                            ccache["v"], vw.astype(cdt), (slot0, 0, 0, 0))
                     out = L._attend_causal(q, k, v, cfg, self.window,
                                            q_chunk=self.q_chunk)
                     h = jnp.einsum("bnsh,nhd->bsd", out,
@@ -418,10 +493,22 @@ class Model:
                         bp["mamba"], cfg, h, return_state=True,
                         chunk=self.mamba_chunk)
                     nc = {"h": h_state, "conv": conv}
+                    if slot is not None:
+                        nc = jax.tree.map(
+                            lambda big, little:
+                            jax.lax.dynamic_update_slice_in_dim(
+                                big, little.astype(big.dtype), slot, axis=0),
+                            period_cache[p_idx], nc)
                 else:
                     h, prev_x, S_out = R.rwkv_fwd(bp["rwkv"], cfg, h,
                                                   return_state=True)
                     nc = {"prev_x": prev_x, "S": S_out}
+                    if slot is not None:
+                        nc = jax.tree.map(
+                            lambda big, little:
+                            jax.lax.dynamic_update_slice_in_dim(
+                                big, little.astype(big.dtype), slot, axis=0),
+                            period_cache[p_idx], nc)
                 x = x + h
                 h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
                 if ffn == "moe":

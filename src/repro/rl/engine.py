@@ -15,13 +15,25 @@ token, then packages the slot's KV cache as a :class:`KVHandoff` and emits
 it through ``on_handoff`` instead of decoding — or ``role="decode"``,
 which accepts handoffs via :meth:`inject` and runs the bandwidth-bound
 decode loop. ``LLMProxy(pd_disagg=True)`` routes between the two roles.
+
+The decode hot path is device-resident (§5.2/§6.3 make decode the
+bandwidth-bound phase worth optimizing): each engine step runs
+``steps_per_dispatch`` decode steps in ONE jit dispatch
+(``Model.decode_block``, a ``lax.scan`` with on-device stop/length
+masking and sampling inside the body), the KV-cache argument of every
+compiled entry point is donated so XLA updates it in place instead of
+copying ``[max_slots, max_len]`` worth of cache per step, and admission
+prefill pads prompts to power-of-two buckets while writing the slot's
+cache row directly (O(log max_len) compiled prefill shapes, no transient
+batch-1 cache). Commands still drain between macro-steps, so ADD/ABORT
+latency is bounded by one macro-step (K decode tokens per slot).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import threading
-import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -29,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.rl.sampling import sample_tokens
+from repro.rl.sampling import sample_mixed
 
 
 @dataclasses.dataclass
@@ -101,9 +113,26 @@ class InferenceEngine:
                  max_len: int = 512, seed: int = 0,
                  on_finish: Optional[Callable[[GenResult], None]] = None,
                  role: str = "colocated",
-                 on_handoff: Optional[Callable[[KVHandoff], None]] = None):
+                 on_handoff: Optional[Callable[[KVHandoff], None]] = None,
+                 steps_per_dispatch: int = 8, donate: bool = True,
+                 bucketed_prefill: Optional[bool] = None):
+        """``steps_per_dispatch`` (K) is the decode macro-step size: K
+        decode steps run per jit dispatch via ``Model.decode_block``.
+        Larger K amortizes dispatch + host round-trip overhead but bounds
+        command latency — an ABORT queued mid-macro-step takes effect up
+        to K tokens later — so latency-sensitive serving should lower it
+        (K=1 selects the legacy single-step dispatch). ``donate=False``
+        disables KV-cache buffer donation (the un-donated copy-per-step
+        baseline, kept for benchmarks/decode_hotpath.py).
+        ``bucketed_prefill`` force-disables (False) the power-of-two
+        prompt bucketing on stacks that support it — the
+        one-compile-per-prompt-length seed behavior, kept for the same
+        benchmark; None (default) enables it wherever valid."""
         if role not in ROLES:
             raise ValueError(f"role must be one of {ROLES}, got {role!r}")
+        if steps_per_dispatch < 1:
+            raise ValueError("steps_per_dispatch must be >= 1, got "
+                             f"{steps_per_dispatch}")
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -111,16 +140,24 @@ class InferenceEngine:
         self.on_finish = on_finish
         self.role = role
         self.on_handoff = on_handoff
-        # KV recompute (protocol step (5)) pads prefills to power-of-two
-        # buckets so XLA compiles O(log max_len) shapes instead of one per
-        # in-flight sequence length. Only valid for full-attention stacks:
-        # padded positions beyond last_pos are causally masked and later
-        # overwritten by decode, but a recurrent mixer (mamba/rwkv) would
-        # scan pad tokens into its state, and a ring-buffered sliding
-        # window could wrap them over live entries.
-        self._bucketed_reprefill = (
+        self.steps_per_dispatch = steps_per_dispatch
+        self.donate = donate
+        # Admission prefill and KV recompute (protocol step (5)) pad
+        # prompts to power-of-two buckets so XLA compiles O(log max_len)
+        # shapes instead of one per distinct prompt length. Only valid for
+        # full-attention stacks: padded positions beyond last_pos are
+        # causally masked and later overwritten by decode, but a recurrent
+        # mixer (mamba/rwkv) would scan pad tokens into its state, and a
+        # ring-buffered sliding window could wrap them over live entries.
+        supported = (
             model.window is None
             and all(mixer == "attn" for mixer, _ in model.cfg.block_pattern))
+        self._bucketed_prefill = (supported if bucketed_prefill is None
+                                  else bool(bucketed_prefill) and supported)
+        # width of the padded per-slot stop-token matrix fed to
+        # decode_block; grows (power of two -> bounded recompiles) if a
+        # request carries more stop tokens
+        self._stop_width = 4
         self.weight_version = 0
         self.suspended = False
         self._key = jax.random.PRNGKey(seed)
@@ -135,9 +172,14 @@ class InferenceEngine:
         self._step_lock = threading.Lock()
         self._results: Dict[str, GenResult] = {}
         self._cache = model.init_cache(max_slots, max_len)
-        # stats
+        # stats (steps/busy_steps count MACRO-steps, i.e. engine
+        # iterations; decode_dispatches counts decode jit calls — with
+        # K = steps_per_dispatch, dispatches/token converges to 1/K —
+        # while prefill/decode token counters stay in TOKENS, which is
+        # what proxy-level accounting and the rebalancer consume)
         self.steps = 0
         self.busy_steps = 0
+        self.decode_dispatches = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self.recomputes = 0           # in-flight KV rebuilds (protocol (5))
@@ -148,44 +190,58 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def _build_jit(self):
         model = self.model
+        # Donate the cache argument (index 2 in every entry point): the
+        # engine owns exactly one live cache reference (always rebound from
+        # the jit result under _step_lock), so XLA may alias input to
+        # output and update the [max_slots, max_len] cache in place
+        # instead of copying it per call. Params are NOT donated: the same
+        # param buffers are shared with the trainer, the weight store, and
+        # sibling engines (build_pd_proxy passes one pytree to all of
+        # them), so donating would invalidate them for everyone else.
+        donate = (2,) if self.donate else ()
 
-        def _sample(logits, key, temperature):
-            # temperature is scalar (prefill, batch 1) or per-row [B]
-            # (batched decode over slots with mixed sampling configs)
-            t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32),
-                                 logits.shape[:1])
-            scaled = logits / jnp.clip(t, 1e-6)[:, None]
-            toks, lps = sample_tokens(key, scaled, temperature=1.0)
-            toks_g = jnp.argmax(logits, axis=-1)
-            lp_g = jnp.take_along_axis(
-                jax.nn.log_softmax(logits, -1), toks_g[:, None], -1)[:, 0]
-            use_greedy = t <= 0.0
-            return (jnp.where(use_greedy, toks_g, toks),
-                    jnp.where(use_greedy, lp_g, lps))
-
-        @jax.jit
+        @functools.partial(jax.jit, donate_argnums=donate)
         def _decode(params, tokens, cache, positions, key, temperature):
             logits, cache = model.decode_step(params, tokens, cache,
                                               positions)
-            toks, lps = _sample(logits, key, temperature)
+            toks, lps = sample_mixed(key, logits, temperature)
+            return toks, lps, cache
+
+        K = self.steps_per_dispatch
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def _decode_block(params, tokens, cache, positions, key,
+                          temperatures, stop_ids, budgets):
+            # derive the K per-step keys ON DEVICE with the same
+            # sequential split chain _next_key walks host-side, so (a)
+            # sampled streams stay byte-identical across
+            # steps_per_dispatch settings and (b) the macro-step costs
+            # one dispatch total instead of K host-side splits plus one
+            def split_body(c, _):
+                c, sub = jax.random.split(c)
+                return c, sub
+            new_key, keys = jax.lax.scan(split_body, key, None, length=K)
+            toks, lps, emitted, cache = model.decode_block(
+                params, tokens, cache, positions, keys, temperatures,
+                stop_ids, budgets, sample_fn=sample_mixed)
+            return toks, lps, emitted, cache, new_key
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def _prefill_into_slot(params, tokens, cache, slot, last_pos, key,
+                               temperature):
+            """tokens: [1, S]; writes the slot's cache row IN PLACE
+            (Model.prefill slot mode — no transient batch-1 cache) and
+            samples the first generated token from the last prompt
+            position."""
+            logits, cache = model.prefill(params, tokens, cache,
+                                          last_pos=last_pos, slot=slot)
+            toks, lps = sample_mixed(key, logits, temperature)
             return toks, lps, cache
 
         self._decode_jit = _decode
-        self._sample = _sample
-
-        def _prefill_into_slot(params, tokens, cache, slot, last_pos, key,
-                               temperature):
-            """tokens: [1, S]; writes slot's cache entries; samples the
-            first generated token from the last prompt position."""
-            small = model.init_cache(1, self.max_len)
-            logits, small = model.prefill(params, tokens, small,
-                                          last_pos=last_pos)
-            cache = model.inject_cache_slot(cache, small, slot)
-            toks, lps = _sample(logits, key, temperature)
-            return toks, lps, cache
-
-        self._prefill_jit = jax.jit(_prefill_into_slot,
-                                    static_argnames=())
+        self._decode_block_jit = _decode_block
+        self._prefill_jit = _prefill_into_slot
+        self._sample = sample_mixed
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -272,17 +328,32 @@ class InferenceEngine:
             b <<= 1
         return min(b, self.max_len)
 
-    def _reprefill_slot(self, i: int):
+    def _prefill_slot(self, i: int, temperature: float):
+        """Fill slot ``i``'s cache row from its tokens[:pos] — shared by
+        first admission and the protocol-(5) KV recompute. On attention-
+        only stacks the prompt is padded to a power-of-two bucket (padded
+        positions beyond last_pos are causally masked and later overwritten
+        by decode), so XLA compiles O(log max_len) prefill shapes instead
+        of one per distinct prompt length. Returns the (token, logprob)
+        sampled at the true last prompt position."""
         s = self._slots[i]
         toks = s.tokens[: s.pos]
-        if self._bucketed_reprefill:
+        if self._bucketed_prefill:
             toks = toks + [0] * (self._bucket_len(len(toks)) - len(toks))
         tok_arr = jnp.asarray([toks], jnp.int32)
         last = jnp.asarray([s.pos - 1], jnp.int32)
-        _, _, self._cache = self._prefill_jit(
+        tok, lp, self._cache = self._prefill_jit(
             self.params, tok_arr, self._cache, i, last, self._next_key(),
-            jnp.float32(-1.0))
+            jnp.float32(temperature))
+        return tok, lp
+
+    def _reprefill_slot(self, i: int):
+        self._prefill_slot(i, -1.0)   # greedy: the sampled token is unused
         self.recomputes += 1
+
+    def _grow_stop_width(self, stop_tokens: Sequence[int]):
+        while len(stop_tokens) > self._stop_width:
+            self._stop_width *= 2
 
     # ------------------------------------------------------------------
     def _admit(self, req: GenRequest) -> bool:
@@ -297,12 +368,9 @@ class InferenceEngine:
         s.new_tokens, s.logprobs = [], []
         s.pos = len(req.prompt)
         s.start_version = self.weight_version
-        toks = jnp.asarray([s.tokens], jnp.int32)
-        last = jnp.asarray([s.pos - 1], jnp.int32)
-        tok, lp, self._cache = self._prefill_jit(
-            self.params, toks, self._cache, i, last, self._next_key(),
-            jnp.float32(req.temperature))
-        self.prefill_tokens += s.pos
+        self._grow_stop_width(req.stop_tokens)
+        tok, lp = self._prefill_slot(i, req.temperature)
+        self.prefill_tokens += s.pos      # real prompt tokens, not padding
         self._append_token(i, int(tok[0]), float(lp[0]))
         if self.role == "prefill" and s.active:
             # still generating after the first token: migrate the slot's
@@ -345,6 +413,7 @@ class InferenceEngine:
         s.logprobs = list(handoff.logprobs)
         s.pos = handoff.pos
         s.start_version = handoff.start_version
+        self._grow_stop_width(handoff.request.stop_tokens)
         if handoff.weight_version != self.weight_version:
             # the handoff sat in the command queue across a weight sync:
             # protocol step (5) only recomputes ACTIVE slots, so rebuild
@@ -403,13 +472,15 @@ class InferenceEngine:
                             weight_version=self.weight_version,
                             prefill_tokens=0, decode_tokens=0)
         else:
+            # the handoff carries already-sampled tokens: report them as
+            # decode_tokens so proxy/runner token accounting balances
             res = GenResult(request_id=payload.request.request_id,
                             tokens=list(payload.new_tokens),
                             logprobs=list(payload.logprobs),
                             finish_reason="aborted",
                             weight_version=self.weight_version,
                             prefill_tokens=len(payload.request.prompt),
-                            decode_tokens=0)
+                            decode_tokens=len(payload.new_tokens))
         with self._lock:
             self._results[res.request_id] = res
         if self.on_finish:
@@ -438,6 +509,11 @@ class InferenceEngine:
         INJECT (no free slot / suspended) defers itself and every later
         admission (FIFO preserved) but must not head-of-line-block
         cancellations queued behind it."""
+        # idle-pump fast path: reading the deque's emptiness is atomic
+        # under the GIL, so an empty queue costs O(1) with no lock
+        # acquisition or deque rebuild (the common case in every pump)
+        if not self._commands:
+            return
         with self._lock:
             pending = list(self._commands)
             self._commands.clear()
@@ -473,39 +549,85 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: drain commands, then one decode step for
-        all active slots. Returns number of active slots decoded.
-        Serialized against ``update_params`` so a weight sync never races
-        a decode step over the same slots/cache."""
+        """One engine iteration (macro-step): drain commands, then up to
+        ``steps_per_dispatch`` decode steps for all active slots in ONE
+        jit dispatch. Returns the number of decode tokens emitted (0 when
+        idle) — token-denominated so callers' activity/backlog signals are
+        invariant to the dispatch batching. Serialized against
+        ``update_params`` so a weight sync never races a decode step over
+        the same slots/cache."""
         with self._step_lock:
             return self._step_locked()
 
-    def _step_locked(self) -> int:
-        # 1) command processing between engine steps (non-blocking)
-        self._drain_commands()
-        # 2) one decode step over active slots
-        active = [i for i, s in enumerate(self._slots) if s.active]
-        self.steps += 1
-        if not active:
-            return 0
-        self.busy_steps += 1
-        last_tokens = np.zeros((self.max_slots, 1), np.int32)
-        positions = np.zeros((self.max_slots,), np.int32)
-        temps = np.ones((self.max_slots,), np.float32)
+    def _gather_slot_arrays(self):
+        """Per-slot device inputs for a decode dispatch. Inactive slots
+        ride along as zero rows (budget 0 freezes them on device)."""
+        B = self.max_slots
+        last_tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B,), np.int32)
+        temps = np.ones((B,), np.float32)
+        budgets = np.zeros((B,), np.int32)
+        stop_ids = np.full((B, self._stop_width), -1, np.int32)
         for i, s in enumerate(self._slots):
             if s.active:
                 last_tokens[i, 0] = s.tokens[-1]
                 positions[i] = s.pos - 1  # index of the token we feed
                 temps[i] = s.request.temperature
-        toks, lps, self._cache = self._decode_jit(
+                budgets[i] = min(
+                    s.request.max_new_tokens - len(s.new_tokens),
+                    self.max_len - s.pos)
+                st = list(s.request.stop_tokens)
+                stop_ids[i, : len(st)] = st
+        return last_tokens, positions, temps, budgets, stop_ids
+
+    def _step_locked(self) -> int:
+        # 1) command processing between engine steps (non-blocking)
+        self._drain_commands()
+        # 2) one decode macro-step over active slots
+        active = [i for i, s in enumerate(self._slots) if s.active]
+        self.steps += 1
+        if not active:
+            return 0
+        self.busy_steps += 1
+        K = self.steps_per_dispatch
+        last_tokens, positions, temps, budgets, stop_ids = \
+            self._gather_slot_arrays()
+        if K == 1:
+            # legacy single-step dispatch (stop/length handled host-side)
+            toks, lps, self._cache = self._decode_jit(
+                self.params, jnp.asarray(last_tokens), self._cache,
+                jnp.asarray(positions), self._next_key(),
+                jnp.asarray(temps))
+            self.decode_dispatches += 1
+            toks, lps = np.asarray(toks), np.asarray(lps)
+            for i in active:
+                if self._slots[i].active:
+                    self.decode_tokens += 1
+                    self._append_token(i, int(toks[i]), float(lps[i]))
+            return len(active)
+        # device-resident block: the jit consumes one key per inner step
+        # (the SAME split-chain schedule as K single-step dispatches, so
+        # sampled streams are reproducible across steps_per_dispatch
+        # settings) and hands back the advanced chain head
+        toks, lps, emitted, self._cache, self._key = self._decode_block_jit(
             self.params, jnp.asarray(last_tokens), self._cache,
-            jnp.asarray(positions), self._next_key(), jnp.asarray(temps))
-        toks, lps = np.asarray(toks), np.asarray(lps)
+            jnp.asarray(positions), self._key, jnp.asarray(temps),
+            jnp.asarray(stop_ids), jnp.asarray(budgets))
+        self.decode_dispatches += 1
+        toks = np.asarray(toks)          # [K, B]
+        lps = np.asarray(lps)
+        emitted = np.asarray(emitted)
+        n_emitted = 0
         for i in active:
-            if self._slots[i].active:
+            # each slot's emitted column is a True-prefix; _append_token
+            # re-derives the stop/length finish the device masked on
+            for k in range(K):
+                if not self._slots[i].active or not emitted[k, i]:
+                    break
                 self.decode_tokens += 1
-                self._append_token(i, int(toks[i]), float(lps[i]))
-        return len(active)
+                n_emitted += 1
+                self._append_token(i, int(toks[k, i]), float(lps[k, i]))
+        return n_emitted
 
     # ------------------------------------------------------------------
     def pop_result(self, request_id: str) -> Optional[GenResult]:

@@ -34,3 +34,27 @@ def sample_tokens(key, logits: jnp.ndarray, temperature: float = 1.0,
     lp = jax.nn.log_softmax(logits, axis=-1)
     tokens = jax.random.categorical(key, logits, axis=-1)
     return tokens, jnp.take_along_axis(lp, tokens[:, None], -1)[:, 0]
+
+
+def sample_mixed(key, logits: jnp.ndarray, temperatures):
+    """Slot-batched sampling with per-row temperature and greedy fallback.
+
+    logits: [B,V]; temperatures: scalar or [B] — rows with temperature <= 0
+    take the argmax (with the full-softmax logprob GRPO ratios need), the
+    rest sample at their own temperature. This is the sampler the engine's
+    decode paths run INSIDE jit — the single-step dispatch, the admission
+    prefill, and every iteration of the scanned multi-token decode body —
+    so it stays purely functional in (key, logits, temperatures).
+
+    Returns (tokens [B], logprobs [B]) w.r.t. the sampling distribution.
+    """
+    t = jnp.broadcast_to(jnp.asarray(temperatures, jnp.float32),
+                         logits.shape[:1])
+    scaled = logits / jnp.clip(t, 1e-6)[:, None]
+    toks, lps = sample_tokens(key, scaled, temperature=1.0)
+    toks_g = jnp.argmax(logits, axis=-1)
+    lp_g = jnp.take_along_axis(
+        jax.nn.log_softmax(logits, -1), toks_g[:, None], -1)[:, 0]
+    use_greedy = t <= 0.0
+    return (jnp.where(use_greedy, toks_g, toks),
+            jnp.where(use_greedy, lp_g, lps))

@@ -157,15 +157,18 @@ def test_envmanager_abort_completed_is_noop():
 # ---------------------------------------------------------------------------
 def test_update_params_version_match_is_noop(tiny_setup):
     cfg, model, params = tiny_setup
+    # max_new_tokens > 3 macro-steps * steps_per_dispatch so the request
+    # is still mid-flight when update_params fires
+    n_new = 30
     ref = InferenceEngine(model, params, max_slots=2, max_len=96)
     ref.add_request(GenRequest(request_id="r", prompt=[1, 5, 7],
-                               max_new_tokens=6, temperature=0.0))
+                               max_new_tokens=n_new, temperature=0.0))
     ref.run_until_idle()
     expect = ref.pop_result("r").tokens
 
     eng = InferenceEngine(model, params, max_slots=2, max_len=96)
     eng.add_request(GenRequest(request_id="r", prompt=[1, 5, 7],
-                               max_new_tokens=6, temperature=0.0))
+                               max_new_tokens=n_new, temperature=0.0))
     for _ in range(3):
         eng.step()
     eng.update_params(params, version=0)       # same version: must no-op
@@ -175,7 +178,7 @@ def test_update_params_version_match_is_noop(tiny_setup):
 
     params2 = model.init(jax.random.PRNGKey(7))
     eng.add_request(GenRequest(request_id="r2", prompt=[1, 5, 7],
-                               max_new_tokens=6, temperature=0.0))
+                               max_new_tokens=n_new, temperature=0.0))
     eng.step()
     eng.update_params(params2, version=1)      # real update: recomputes
     assert eng.weight_version == 1

@@ -81,10 +81,13 @@ def test_pd_suspend_update_resume_across_handoff(tiny_setup):
     cfg, model, params = tiny_setup
     proxy = build_pd_proxy(model, params, max_slots=2, max_len=96, seed=11)
     out = {}
+    # long enough that two macro-step pumps (default steps_per_dispatch=8)
+    # leave the request mid-flight when the weight sync fires
+    n_new = 24
     proxy.submit(GenRequest(request_id="x", prompt=[1, 4, 2],
-                            max_new_tokens=8, temperature=0.0),
+                            max_new_tokens=n_new, temperature=0.0),
                  callback=lambda r: out.__setitem__(r.request_id, r))
-    proxy.pump()           # prefill + handoff + first decode step
+    proxy.pump()           # prefill + handoff + first decode macro-step
     proxy.pump()
     proxy.suspend()
     proxy.update_all(params, version=1, recompute_caches=True)
@@ -94,7 +97,8 @@ def test_pd_suspend_update_resume_across_handoff(tiny_setup):
         proxy.pump()
         pumps += 1
         assert pumps < 200
-    assert out["x"].tokens == _greedy_colocated(model, params, [1, 4, 2], 8)
+    assert out["x"].tokens == _greedy_colocated(model, params, [1, 4, 2],
+                                                n_new)
     assert out["x"].weight_version == 1
 
 

@@ -296,9 +296,12 @@ def test_switch_role_migrates_inflight_kv_with_parity(tiny_setup):
                            n_prefill=1, n_decode=2)
     out = {}
     prompts = {f"m{i}": [1, 3 + i] for i in range(2)}
+    # long enough that 4 macro-step pumps (default steps_per_dispatch=8)
+    # leave both trajectories mid-decode when the role switch fires
+    n_new = 48
     for rid, p in prompts.items():
         proxy.submit(GenRequest(request_id=rid, prompt=p,
-                                max_new_tokens=16, temperature=0.0),
+                                max_new_tokens=n_new, temperature=0.0),
                      callback=lambda r: out.__setitem__(r.request_id, r))
     for _ in range(4):                          # mid-decode on both engines
         proxy.pump()
@@ -315,7 +318,7 @@ def test_switch_role_migrates_inflight_kv_with_parity(tiny_setup):
         pumps += 1
         assert pumps < 500
     for rid, p in prompts.items():
-        assert out[rid].tokens == _greedy_colocated(model, params, p, 16)
+        assert out[rid].tokens == _greedy_colocated(model, params, p, n_new)
     assert len(proxy.prefill_handles) == 2
     assert len(proxy.decode_handles) == 1
 
@@ -347,14 +350,19 @@ def test_live_runner_records_role_switch_in_stepmetrics(tiny_setup):
     opt = default_optimizer(1e-3)
     state = init_train_state(model, jax.random.PRNGKey(0), opt)
     rm = ResourceManager({"H800": 2, "H20": 2})
+    # steps_per_dispatch=1: the test targets the rebalancer's queue-depth
+    # dynamics, and the deliberately mis-split 1-decode backlog that
+    # triggers the switch builds up per single-token pump; at K=8 the
+    # decode side drains too fast to leave the hysteresis band
     proxy = build_pd_proxy(model, state.params, max_slots=4, max_len=256,
                            n_prefill=2, n_decode=1, resource_manager=rm,
-                           rebalancer=RebalancerConfig())
+                           rebalancer=RebalancerConfig(),
+                           steps_per_dispatch=1)
     with LiveRLRunner(
             RunnerConfig(batch_size=4, group_size=2, mode="sync",
                          tasks=("game",), max_new_tokens=12,
                          pd_disagg=True, pools={"H800": 2, "H20": 2},
-                         affinity=True),
+                         affinity=True, steps_per_dispatch=1),
             proxy, state, jax.jit(make_grpo_train_step(model, opt)),
             ServerlessPlatform(), format_bonus_reward,
             seq_len=256) as runner:
