@@ -27,6 +27,7 @@ ALL = [
     "pd_disagg",        # Table 5
     "pd_disagg_live",   # Table 5 cross-check on the real engines
     "decode_hotpath",   # device-resident decode: K-step dispatch + donation
+    "fault_tolerance",  # §8: rollout checkpoint/restore vs scratch restart
     "kernels_bench",
     "roofline",         # §Roofline from the dry-run artifacts
 ]

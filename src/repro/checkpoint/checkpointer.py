@@ -1,6 +1,19 @@
 """Versioned pytree checkpointing (npz + JSON treedef), used by the training
 worker for fault recovery ("training-worker failures restart from the latest
-checkpoint", paper §8)."""
+checkpoint", paper §8).
+
+Crash safety contract:
+- ``save`` stages into a ``.tmp_ckpt_*`` dir INSIDE ``path`` (created up
+  front) and publishes with one atomic ``os.replace``, so a crash mid-save
+  never clobbers the previous ``latest_step``;
+- ``latest_step`` ignores leftover ``.tmp_ckpt_*`` staging dirs from a
+  crashed save (and anything else that is not a ``step_*`` directory);
+- ``keep_last`` prunes old ``step_*`` dirs after a successful save (and
+  sweeps dead staging dirs), bounding disk growth across long runs;
+- a checkpoint whose ``arrays.npz``/``meta.json`` cannot be read raises
+  :class:`CorruptCheckpointError` — the FT supervisor catches it and falls
+  back to step N-1 (see ``repro.ft.supervisor``).
+"""
 from __future__ import annotations
 
 import json
@@ -8,10 +21,14 @@ import os
 import re
 import shutil
 import tempfile
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(ValueError):
+    """A checkpoint directory exists but its payload cannot be read."""
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -19,11 +36,18 @@ def _flatten(tree) -> Tuple[list, Any]:
     return leaves, treedef
 
 
-def save(path: str, tree, step: int = 0) -> str:
-    """Atomically save a pytree. Returns the checkpoint directory."""
+def save(path: str, tree, step: int = 0,
+         keep_last: Optional[int] = None) -> str:
+    """Atomically save a pytree. Returns the checkpoint directory.
+
+    The staging dir always lives inside ``path`` (created if missing), so
+    the final ``os.replace`` is same-directory atomic and a crashed save
+    never litters the caller's CWD. ``keep_last`` prunes all but the newest
+    N ``step_*`` dirs (plus any dead staging dirs) after publication.
+    """
+    os.makedirs(path, exist_ok=True)
     ckpt_dir = os.path.join(path, f"step_{step:08d}")
-    tmp = tempfile.mkdtemp(dir=path if os.path.isdir(path) else None,
-                           prefix=".tmp_ckpt_")
+    tmp = tempfile.mkdtemp(dir=path, prefix=".tmp_ckpt_")
     try:
         leaves, treedef = _flatten(tree)
         np.savez(os.path.join(tmp, "arrays.npz"),
@@ -37,31 +61,92 @@ def save(path: str, tree, step: int = 0) -> str:
     finally:
         if os.path.exists(tmp):
             shutil.rmtree(tmp, ignore_errors=True)
+    if keep_last is not None:
+        prune(path, keep_last)
     return ckpt_dir
 
 
-def latest_step(path: str) -> Optional[int]:
+def versioned_steps(path: str, prefix: str = "step_") -> List[int]:
+    """All published ``<prefix>NNNNNNNN`` dirs under ``path``, ascending.
+    Staging dirs and stray files never match. Shared with the rollout
+    snapshotter (``rollout_`` prefix) so both sides of a paired
+    checkpoint follow one directory-versioning contract."""
     if not os.path.isdir(path):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(path)
-             if (m := re.match(r"step_(\d+)$", d))]
-    return max(steps) if steps else None
+        return []
+    pat = re.compile(re.escape(prefix) + r"(\d+)$")
+    out = [int(m.group(1)) for d in os.listdir(path)
+           if (m := pat.match(d))
+           and os.path.isdir(os.path.join(path, d))]
+    return sorted(out)
+
+
+def prune_versioned(path: str, keep_last: int, prefix: str = "step_",
+                    tmp_prefix: str = ".tmp_ckpt_"):
+    """Delete all but the newest ``keep_last`` ``<prefix>*`` dirs, plus
+    any ``<tmp_prefix>*`` staging dirs a crashed save left behind."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    for s in versioned_steps(path, prefix)[:-keep_last]:
+        shutil.rmtree(os.path.join(path, f"{prefix}{s:08d}"),
+                      ignore_errors=True)
+    for d in os.listdir(path):
+        if d.startswith(tmp_prefix):
+            shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+
+
+def steps(path: str) -> List[int]:
+    """All published checkpoint steps under ``path``, ascending."""
+    return versioned_steps(path)
+
+
+def latest_step(path: str) -> Optional[int]:
+    all_steps = steps(path)
+    return all_steps[-1] if all_steps else None
+
+
+def prune(path: str, keep_last: int):
+    return prune_versioned(path, keep_last)
 
 
 def restore(path: str, like, step: Optional[int] = None):
-    """Restore into the structure of ``like`` (a pytree template)."""
+    """Restore into the structure of ``like`` (a pytree template).
+
+    Raises :class:`CorruptCheckpointError` when the checkpoint payload is
+    unreadable (truncated npz, malformed meta.json) and ``ValueError``
+    naming the step and both leaf counts on a template mismatch.
+    """
     if step is None:
         step = latest_step(path)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {path}")
     ckpt_dir = os.path.join(path, f"step_{step:08d}")
-    data = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+    try:
+        data = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+        with open(os.path.join(ckpt_dir, "meta.json")) as f:
+            meta = json.load(f)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"checkpoint step {step} under {path} is corrupt: {e}") from e
     leaves, treedef = _flatten(like)
-    if len(leaves) != len(data.files):
-        raise ValueError(f"leaf count mismatch: template {len(leaves)} vs "
-                         f"checkpoint {len(data.files)}")
-    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    n_ckpt = int(meta.get("num_leaves", len(data.files)))
+    if len(leaves) != n_ckpt or len(data.files) != n_ckpt:
+        raise ValueError(
+            f"checkpoint step {step}: leaf count mismatch — template has "
+            f"{len(leaves)} leaves, checkpoint recorded {n_ckpt} "
+            f"(npz holds {len(data.files)})")
+    if meta.get("treedef") is not None and meta["treedef"] != str(treedef):
+        raise ValueError(
+            f"checkpoint step {step}: treedef mismatch — the template's "
+            "pytree structure differs from the one saved "
+            f"({n_ckpt} leaves each); was the model config changed?")
+    try:
+        new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    except Exception as e:  # zip member truncated / missing
+        raise CorruptCheckpointError(
+            f"checkpoint step {step} under {path} is corrupt: {e}") from e
     for tpl, got in zip(leaves, new_leaves):
         if tuple(np.shape(tpl)) != tuple(got.shape):
-            raise ValueError(f"shape mismatch {np.shape(tpl)} vs {got.shape}")
+            raise ValueError(
+                f"checkpoint step {step}: shape mismatch "
+                f"{np.shape(tpl)} vs {got.shape}")
     return jax.tree.unflatten(treedef, new_leaves), step

@@ -12,12 +12,21 @@ Unlike AReaL, which bounds staleness only at trajectory *start*, RollArt
 re-checks the bound every iteration, so long-tail trajectories spanning
 multiple versions are aborted (the control plane also aborts their
 in-flight generation via LLMProxy).
+
+Fault tolerance (paper §8): the buffer tracks the ``traj_id`` of every
+consumed trajectory, and ``put`` drops replays of an already-consumed id
+(``total_deduped``). When the FT supervisor restores the rollout plane
+from a snapshot taken BEFORE the last few training steps, the replayed
+EnvManagers regenerate trajectories the trainer already consumed — the
+dedup filter guarantees no ``traj_id`` trains twice.
+``snapshot_state``/``restore_state`` serialize the buffer for
+rollout-level checkpointing (see ``repro.ft.snapshot``).
 """
 from __future__ import annotations
 
 import itertools
 import threading
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.data.pipeline import Trajectory
 
@@ -32,19 +41,31 @@ class SampleBuffer:
         self._cv = threading.Condition(self._lock)
         self.on_evict = on_evict
         self.current_version = 0
+        self._consumed: set = set()     # traj_ids handed to the trainer
+        self._buffered: set = set()     # traj_ids currently in _items
         # stats
         self.total_put = 0
         self.total_evicted = 0
         self.total_consumed = 0
+        self.total_deduped = 0
 
     # ------------------------------------------------------------------
     def put(self, traj: Trajectory):
         with self._cv:
+            if (traj.traj_id in self._consumed
+                    or traj.traj_id in self._buffered):
+                # replay of a trajectory already trained on — or already
+                # buffered awaiting training (a rollout-plane restore from
+                # a snapshot older than the completion that produced the
+                # first copy): either way it must not train twice
+                self.total_deduped += 1
+                return
             traj.seq = next(self._seq)
             if self._is_stale(traj, self.current_version):
                 self._evict(traj)
                 return
             self._items.append(traj)
+            self._buffered.add(traj.traj_id)
             self.total_put += 1
             self._cv.notify_all()
 
@@ -52,6 +73,7 @@ class SampleBuffer:
         return traj.start_version < version - self.alpha
 
     def _evict(self, traj: Trajectory):
+        self._buffered.discard(traj.traj_id)
         self.total_evicted += 1
         if self.on_evict:
             self.on_evict(traj)
@@ -86,6 +108,9 @@ class SampleBuffer:
             batch, self._items = (self._items[:batch_size],
                                   self._items[batch_size:])
             self.total_consumed += len(batch)
+            for t in batch:
+                self._buffered.discard(t.traj_id)
+                self._consumed.add(t.traj_id)
             return batch
 
     def _evict_stale_locked(self) -> List[Trajectory]:
@@ -112,4 +137,51 @@ class SampleBuffer:
             batch, self._items = (self._items[:batch_size],
                                   self._items[batch_size:])
             self.total_consumed += len(batch)
+            for t in batch:
+                self._buffered.discard(t.traj_id)
+                self._consumed.add(t.traj_id)
             return batch
+
+    # ------------------------------------------------------------------
+    # rollout-level checkpointing (repro.ft.snapshot)
+    # ------------------------------------------------------------------
+    def snapshot_state(self) -> Dict:
+        """Consistent copy of the buffer for a rollout snapshot. Item
+        ``seq`` numbers are preserved so FIFO ordering survives a
+        restore."""
+        with self._lock:
+            # peek-then-recreate: read the next seq value without
+            # perturbing the arrival ordering
+            nxt = next(self._seq)
+            self._seq = itertools.count(nxt)
+            return {"items": list(self._items), "seq": nxt,
+                    "version": self.current_version,
+                    "consumed": set(self._consumed),
+                    "total_put": self.total_put,
+                    "total_evicted": self.total_evicted,
+                    "total_consumed": self.total_consumed,
+                    "total_deduped": self.total_deduped}
+
+    def restore_state(self, state: Dict, keep_consumed: bool = False):
+        """Rebuild the buffer from ``snapshot_state`` output. With
+        ``keep_consumed`` the CURRENT consumed-id set is kept (unioned
+        with the snapshot's) — the live-recovery path, where training
+        advanced past the snapshot and replayed trajectories must dedup
+        against the newer training frontier."""
+        with self._cv:
+            consumed = set(state["consumed"])
+            if keep_consumed:
+                consumed |= self._consumed
+            self._consumed = consumed
+            self._items = [t for t in state["items"]
+                           if t.traj_id not in consumed]
+            self._buffered = {t.traj_id for t in self._items}
+            self.total_deduped += len(state["items"]) - len(self._items)
+            self._seq = itertools.count(max(
+                state["seq"], 1 + max((t.seq for t in self._items),
+                                      default=-1)))
+            self.current_version = state["version"]
+            self.total_put = state["total_put"]
+            self.total_evicted = state["total_evicted"]
+            self.total_consumed = state["total_consumed"]
+            self._cv.notify_all()

@@ -9,7 +9,7 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.proxy import LLMProxy
 from repro.data.pipeline import Trajectory
@@ -18,6 +18,25 @@ from repro.envs.base import EnvError, TextEnv
 from repro.rl.engine import GenRequest, GenResult
 
 _ids = itertools.count()
+
+
+def em_counter_value() -> int:
+    """Current value of the global EnvManager id counter (non-consuming;
+    peek-then-recreate). Captured into rollout snapshots so a restore in a
+    FRESH process can advance the counter past every snapshotted id —
+    otherwise new managers could reuse an already-consumed ``traj_id`` and
+    be wrongly dropped by the SampleBuffer dedup filter."""
+    global _ids
+    v = next(_ids)
+    _ids = itertools.count(v)
+    return v
+
+
+def ensure_em_counter(minimum: int):
+    """Advance the global id counter so future ids are >= ``minimum``."""
+    global _ids
+    v = next(_ids)
+    _ids = itertools.count(max(v, minimum))
 
 
 class EMState(Enum):
@@ -149,6 +168,81 @@ class EnvManager:
         self.state = EMState.ABORTED
         if self.on_complete:
             self.on_complete(self)
+
+    def fail(self, reason: str = "injected"):
+        """Mark this manager FAILED (environment crash, engine loss, or an
+        injected fault — paper §8: env failures ~1/10 iterations).
+        Idempotent like :meth:`abort`; an in-flight generation request is
+        cancelled through the proxy, and its eventual aborted-result
+        callback early-outs on the FAILED state."""
+        if self.state in (EMState.DONE, EMState.FAILED, EMState.ABORTED):
+            return
+        rid = self._active_req
+        self.state = EMState.FAILED
+        if rid is not None:
+            self.proxy.abort(rid)
+        if self.on_complete:
+            self.on_complete(self)
+
+    def retry(self):
+        """Re-issue the in-flight generation request after its engine was
+        lost and no snapshot covers it: the trajectory's token prefix is
+        intact on this side, so a fresh request (new id, re-prefill)
+        resumes it from the last completed turn."""
+        if self.state != EMState.GENERATING:
+            return
+        self._request_action()
+
+    # ------------------------------------------------------------------
+    # rollout-level checkpointing (repro.ft.snapshot)
+    # ------------------------------------------------------------------
+    def snapshot_state(self) -> Dict:
+        """Serializable record of this manager's full state machine: token
+        stream, env object (picklable: plain fields + ``random.Random``),
+        versions, request counter, and the id of the in-flight request (its
+        engine-side KV state is captured separately)."""
+        nxt = next(self._req_counter)       # peek-then-recreate: capture
+        self._req_counter = itertools.count(nxt)    # must not perturb ids
+        return {
+            "em_id": self.em_id, "tag": self.tag,
+            "group_id": self.group_id, "state": self.state.name,
+            "tokens": list(self.tokens), "loss_mask": list(self.loss_mask),
+            "logprobs": list(self.logprobs), "turns": self.turns,
+            "start_version": self.start_version,
+            "end_version": self.end_version,
+            "env_return": self.env_return,
+            "req_counter": nxt,
+            "active_req": self._active_req,
+            "env": self.env,
+        }
+
+    @classmethod
+    def restore_from(cls, rec: Dict, proxy: LLMProxy,
+                     tokenizer: Optional[ByteTokenizer] = None,
+                     policy: Optional[RolloutPolicy] = None,
+                     on_complete: Optional[Callable] = None,
+                     ) -> "EnvManager":
+        """Rebuild a manager from ``snapshot_state`` output. The restored
+        manager keeps its original ``em_id`` (so its trajectory dedups
+        against a pre-crash completion) and its request counter (so a
+        resumed request id matches the snapshotted engine-side state). The
+        caller resumes generation via the proxy (reinject / submit) —
+        ``restore_from`` itself issues no requests."""
+        em = cls(rec["env"], proxy, tokenizer=tokenizer, policy=policy,
+                 tag=rec["tag"], on_complete=on_complete,
+                 group_id=rec["group_id"])
+        em.em_id = rec["em_id"]
+        em.state = EMState[rec["state"]]
+        em.tokens = list(rec["tokens"])
+        em.loss_mask = list(rec["loss_mask"])
+        em.logprobs = list(rec["logprobs"])
+        em.turns = rec["turns"]
+        em.start_version = rec["start_version"]
+        em.end_version = rec["end_version"]
+        em.env_return = rec["env_return"]
+        em._req_counter = itertools.count(rec["req_counter"])
+        em._active_req = rec["active_req"]
+        return em
 
     def trajectory(self) -> Trajectory:
         return Trajectory(

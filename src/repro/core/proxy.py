@@ -115,6 +115,7 @@ class LLMProxy:
         self.requests = 0
         self.aborted = 0
         self.handoffs = 0
+        self.recoveries = 0            # snapshot re-injections (repro.ft)
         self.routed_by_pool: Dict[str, int] = {}
         # rebalancer state/stats
         self.role_switches = 0
@@ -229,6 +230,62 @@ class LLMProxy:
             if self.pd_disagg:
                 self._abort_requested.add(request_id)
         h.engine.abort(request_id)
+
+    # ------------------------------------------------------------------
+    # fault tolerance (repro.ft): recovery dispatch + route inspection
+    # ------------------------------------------------------------------
+    def requests_on(self, handle: EngineHandle) -> List[str]:
+        """Request ids currently routed to ``handle`` (in a slot, queued,
+        or mid-migration toward it) — the blast radius of losing that
+        engine."""
+        with self._lock:
+            return [rid for rid, h in self._route.items() if h is handle]
+
+    def routed(self, request_id: str) -> bool:
+        """True while the request is live somewhere in the plane."""
+        with self._lock:
+            return request_id in self._route
+
+    def pending_abort_ids(self) -> set:
+        """Request ids with an ABORT pending at the proxy level (the PD
+        migration guard). Engine-queued aborts are NOT included — snapshot
+        capture reads those from the per-engine command snapshots it takes
+        anyway, so the full in-flight-abort set costs one pass instead of
+        one engine-queue scan per request."""
+        with self._lock:
+            return set(self._abort_requested)
+
+    def drop_routes(self, request_ids: List[str]):
+        """Forget routes/callbacks for requests lost with a dead engine
+        and not recoverable from any snapshot (the callers re-issue them
+        as fresh requests, or fail the owning EnvManager)."""
+        with self._lock:
+            for rid in request_ids:
+                self._route.pop(rid, None)
+                self._callbacks.pop(rid, None)
+                self._abort_requested.discard(rid)
+
+    def reinject(self, handoff: KVHandoff,
+                 callback: Optional[Callable[[GenResult], None]] = None
+                 ) -> EngineHandle:
+        """Recovery dispatch: route a snapshotted KVHandoff to the
+        least-loaded decode-capable engine and inject it. Re-registers the
+        result callback when given (cold restore into a fresh proxy); a
+        live recovery keeps the existing registration. A weight-version
+        mismatch between the snapshot and the target engine re-prefills
+        the cache under the current weights at admission
+        (``InferenceEngine._admit_handoff``), so restoring an old snapshot
+        into a newer plane stays correct."""
+        cands = self.decode_handles if self.pd_disagg else self.handles
+        rid = handoff.request.request_id
+        with self._lock:
+            dst = min(cands, key=lambda h: h.load())
+            if callback is not None:
+                self._callbacks[rid] = callback
+            self._route[rid] = dst
+            self.recoveries += 1
+            dst.engine.inject(handoff)
+        return dst
 
     # ------------------------------------------------------------------
     # weight-sync protocol hooks (steps (2)-(4))
@@ -407,6 +464,7 @@ class LLMProxy:
             "aborted": self.aborted,
             "pd_disagg": self.pd_disagg,
             "handoffs": self.handoffs,
+            "recoveries": self.recoveries,
             "routed_by_pool": dict(self.routed_by_pool),
             "role_switches": self.role_switches,
             "switch_migrations": self.switch_migrations,

@@ -112,6 +112,10 @@ class RunnerConfig:
     # buffer already holds this many batches ahead of the trainer
     max_buffered_batches: int = 2
     batch_timeout_s: float = 300.0    # threaded-mode starvation guard
+    # fault tolerance: a reward invocation that dies (ServerlessError —
+    # container eviction or an injected fault) is re-submitted from its
+    # retained payload up to this many times before the error surfaces
+    reward_retry_limit: int = 2
     seed: int = 0
 
     def sampler_weights(self) -> Optional[List[float]]:
@@ -140,6 +144,9 @@ class StepMetrics:
     batch_max_version: int = 0       # newest start_version in the batch
     role_switches: int = 0           # dynamic prefill<->decode role
     #                                  switches during THIS step (delta)
+    deduped: int = 0                 # replayed trajectories dropped by the
+    #                                  buffer's traj_id dedup (delta; > 0
+    #                                  only after a rollout-plane restore)
 
 
 class LiveRLRunner:
@@ -193,8 +200,20 @@ class LiveRLRunner:
         self._pump_lock = threading.Lock()
         self._completed_lock = threading.Lock()
         self._completed_this_round: List[EnvManager] = []
-        # (trajectory, reward-future), drained in submission order
+        # [trajectory, payload, reward-future, attempts] entries, drained
+        # in submission order; the payload is retained so a lost
+        # invocation (ServerlessError) can be re-submitted, and so a
+        # rollout snapshot can re-issue pending rewards after a restore
         self._pending_rewards: collections.deque = collections.deque()
+        # fault-tolerance hook: called at the end of every suspend ->
+        # update -> resume barrier while the pump lock is still held (the
+        # rollout plane is quiescent there) — the FT supervisor installs
+        # its snapshot capture here (see repro.ft.supervisor)
+        self.barrier_hook: Optional[Callable[["LiveRLRunner", int], None]] \
+            = None
+        # traj_ids trained per step (dedup / parity audits)
+        self.trained_log: List[List[str]] = []
+        self.reward_retries = 0
         self._run_rollout = threading.Event()
         self._stop = threading.Event()
         self._rollout_thread: Optional[threading.Thread] = None
@@ -211,6 +230,7 @@ class LiveRLRunner:
         self._last_evicted = 0
         self._last_aborted = 0
         self._last_role_switches = 0
+        self._last_deduped = 0
         # publish v0 weights
         push_params(self.store, self.state.params, version=0)
 
@@ -253,7 +273,7 @@ class LiveRLRunner:
         }
         if self._use_async_reward:
             fut = self.serverless.invoke_async(self.cfg.reward_url, payload)
-            self._pending_rewards.append((traj, fut))
+            self._pending_rewards.append([traj, payload, fut, 0])
         else:
             traj.reward = float(self.serverless.invoke(self.cfg.reward_url,
                                                        payload))
@@ -263,13 +283,28 @@ class LiveRLRunner:
         """Move reward-scored trajectories into the buffer. Completed-
         PREFIX drain: trajectories are buffered in reward SUBMISSION order
         even when a later future resolves first, so batch composition does
-        not depend on serverless timing."""
+        not depend on serverless timing. A lost invocation (the platform
+        raises — e.g. an injected ``ServerlessError``) is re-submitted
+        from its retained payload up to ``reward_retry_limit`` times; only
+        then does the error surface to the caller."""
         n = 0
         while self._pending_rewards:
-            traj, fut = self._pending_rewards[0]
+            entry = self._pending_rewards[0]
+            traj, payload, fut, attempts = entry
             if not block and not fut.done():
                 break
-            traj.reward = float(fut.result())
+            try:
+                traj.reward = float(fut.result())
+            except Exception:
+                if attempts >= self.cfg.reward_retry_limit:
+                    raise
+                entry[2] = self.serverless.invoke_async(
+                    self.cfg.reward_url, payload)
+                entry[3] = attempts + 1
+                self.reward_retries += 1
+                if not block:
+                    break
+                continue
             self._pending_rewards.popleft()
             self.buffer.put(traj)
             n += 1
@@ -507,6 +542,11 @@ class LiveRLRunner:
                         self.proxy.update_all(params, v,
                                               recompute_caches=True)
                     self.proxy.resume()
+                    if self.barrier_hook is not None:
+                        # rollout snapshot point: the pump lock is held,
+                        # so every engine slot / env manager / pending
+                        # reward is quiescent and mutually consistent
+                        self.barrier_hook(self, step)
                 # (6) train_step, overlapped with the resumed rollout
                 batch = self._pack(batch_trajs)
                 d0 = self._decode_tokens_total()
@@ -530,6 +570,7 @@ class LiveRLRunner:
                 ev_total = self.buffer.total_evicted
                 ab_total = self.proxy.aborted
                 rs_total = self.proxy.role_switches
+                dd_total = self.buffer.total_deduped
                 sm = StepMetrics(
                     step=step, wall_s=time.monotonic() - t0,
                     loss=loss,
@@ -541,9 +582,12 @@ class LiveRLRunner:
                     batch_fetched_step=fetched_step,
                     batch_max_version=max(t.start_version
                                           for t in batch_trajs),
-                    role_switches=rs_total - self._last_role_switches)
+                    role_switches=rs_total - self._last_role_switches,
+                    deduped=dd_total - self._last_deduped)
                 self._last_evicted, self._last_aborted = ev_total, ab_total
                 self._last_role_switches = rs_total
+                self._last_deduped = dd_total
+                self.trained_log.append([t.traj_id for t in batch_trajs])
                 self.history.append(sm)
         finally:
             if self.threaded:

@@ -16,6 +16,12 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 
+class ServerlessError(RuntimeError):
+    """An invocation was lost (container eviction, network partition, an
+    injected fault). Callers holding the payload may retry — the live
+    runner's reward drain does (``LiveRLRunner._drain_rewards``)."""
+
+
 @dataclass
 class ServerlessStats:
     invocations: int = 0
@@ -25,6 +31,7 @@ class ServerlessStats:
     max_io_s: float = 0.0
     payload_bytes: int = 0
     peak_instances: int = 0
+    failures: int = 0              # lost invocations (incl. injected)
 
 
 @dataclass
@@ -83,6 +90,7 @@ class ServerlessPlatform:
         self._warm: Dict[str, float] = {}   # url -> last-used wall time
         self._active = 0
         self._rng = random.Random(seed)
+        self._poison: Dict[str, int] = {}   # url -> invocations to fail
         self.stats = ServerlessStats()
 
     def deploy(self, url: str, fn: Callable):
@@ -90,6 +98,13 @@ class ServerlessPlatform:
         if not url.startswith("fc://"):
             raise ValueError("serverless urls use the fc:// scheme")
         self._fns[url] = fn
+
+    def fail_next(self, url: str, n: int = 1):
+        """Failure injection (paper §8): the next ``n`` invocations of
+        ``url`` are lost — they raise :class:`ServerlessError` instead of
+        executing. Models a container eviction mid-call."""
+        with self._lock:
+            self._poison[url] = self._poison.get(url, 0) + n
 
     # ------------------------------------------------------------------
     def sample_io_s(self) -> float:
@@ -123,6 +138,11 @@ class ServerlessPlatform:
         # not serialize every concurrent invocation's admission
         nbytes = payload_nbytes(args) + payload_nbytes(kwargs)
         with self._cv:
+            if self._poison.get(url, 0) > 0:
+                self._poison[url] -= 1
+                self.stats.failures += 1
+                raise ServerlessError(f"invocation of {url} lost "
+                                      "(injected fault)")
             while self._active >= self.cfg.max_concurrency:
                 self._cv.wait()
             self.stats.invocations += 1

@@ -1,0 +1,11 @@
+"""Fault-tolerance plane (paper §8): rollout-level checkpoint/restore,
+failure injection, and the supervised-recovery loop above LiveRLRunner."""
+from repro.ft.failure import (DEFAULT_KINDS, FailureEvent, FailureInjector)
+from repro.ft.snapshot import RolloutSnapshot, RolloutSnapshotter
+from repro.ft.supervisor import FTConfig, FTSupervisor, restore_latest
+
+__all__ = [
+    "DEFAULT_KINDS", "FailureEvent", "FailureInjector",
+    "RolloutSnapshot", "RolloutSnapshotter",
+    "FTConfig", "FTSupervisor", "restore_latest",
+]

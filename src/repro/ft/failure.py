@@ -1,0 +1,167 @@
+"""Failure injection for the live data plane (paper §8).
+
+The paper's robustness claim rests on three observed failure classes:
+training-worker crashes (restart from checkpoint), environment failures
+(~1 per 10 iterations in production), and lost serverless invocations.
+``FailureInjector`` reproduces all of them against a running
+``LiveRLRunner`` — killing an env manager, an engine (all KV slots, queued
+commands, and results gone), a pending reward invocation, or the whole
+rollout plane — and reports how much in-flight work each fault destroyed,
+so the supervisor can account recovered vs lost tokens per event.
+
+Injection happens between runner steps, when the rollout worker is parked
+(``run_steps`` parks it on exit), so faults land on a quiescent plane the
+way a real crash lands on a process: state simply disappears.
+"""
+from __future__ import annotations
+
+import random
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.envmanager import EMState
+from repro.core.serverless import ServerlessError
+
+DEFAULT_KINDS = ("env", "engine", "reward")
+
+
+@dataclass
+class FailureEvent:
+    step: int
+    kind: str                     # env | engine | reward | rollout | trainer
+    target: str                   # em_id / engine name / url / "plane"
+    destroyed_tokens: int = 0     # in-flight decode tokens the fault killed
+    recovered_tokens: int = 0     # decode tokens resurrected from snapshot
+    recovery_s: float = 0.0
+    recovered: bool = False
+    lost_rids: List[str] = field(default_factory=list)
+    detail: str = ""
+
+    @property
+    def lost_tokens(self) -> int:
+        return max(0, self.destroyed_tokens - self.recovered_tokens)
+
+
+class FailureInjector:
+    """Schedule + execute fault injection.
+
+    ``rate`` is the per-iteration failure probability (paper default:
+    ~1/10 iterations). ``schedule`` maps step -> kind and overrides the
+    stochastic draw for deterministic benchmarks/tests; a scheduled run
+    fires exactly those faults and nothing else.
+    """
+
+    def __init__(self, rate: float = 0.1,
+                 kinds: Tuple[str, ...] = DEFAULT_KINDS, seed: int = 0,
+                 schedule: Optional[Dict[int, str]] = None):
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"failure rate must be in [0, 1], got {rate}")
+        self.rate = rate
+        self.kinds = tuple(kinds)
+        self.schedule = dict(schedule) if schedule else None
+        self._rng = random.Random(seed)
+
+    def draw(self, step: int) -> Optional[str]:
+        """Which fault (if any) fires after trainer step ``step``."""
+        if self.schedule is not None:
+            return self.schedule.get(step)
+        if self.rate > 0 and self._rng.random() < self.rate:
+            return self._rng.choice(self.kinds)
+        return None
+
+    # ------------------------------------------------------------------
+    # the faults
+    # ------------------------------------------------------------------
+    def kill_env(self, runner, step: int) -> Optional[FailureEvent]:
+        """Crash one in-flight environment: its manager FAILs, the whole
+        trajectory-so-far is destroyed, and its generation request is
+        cancelled (the cancellation is drained here so a later resume of
+        the same manager can never race a stale ABORT)."""
+        cands = [em for em in runner.active
+                 if em.state == EMState.GENERATING]
+        if not cands:
+            return None
+        em = self._rng.choice(cands)
+        rid = em._active_req
+        ev = FailureEvent(step=step, kind="env", target=em.em_id,
+                          destroyed_tokens=sum(em.loss_mask),
+                          lost_rids=[rid] if rid else [],
+                          detail=f"turns={em.turns}")
+        em.fail()
+        pumps = 0
+        while rid is not None and runner.proxy.routed(rid):
+            runner.proxy.pump()
+            pumps += 1
+            if pumps > runner.cfg.max_pump_steps:
+                raise RuntimeError(f"abort of {rid} did not drain")
+        return ev
+
+    def pick_engine(self, runner):
+        """A decode-capable engine handle (the one whose loss hurts)."""
+        handles = runner.proxy.handles
+        cands = [h for h in handles if h.role != "prefill"] or handles
+        return self._rng.choice(cands)
+
+    def kill_engine(self, runner, step: int,
+                    handle=None) -> FailureEvent:
+        """Crash one engine process: every KV slot, queued command, and
+        undelivered result it held is gone. Requests routed to it dangle
+        until the supervisor recovers them."""
+        handle = handle or self.pick_engine(runner)
+        eng = handle.engine
+        lost = runner.proxy.requests_on(handle)
+        ev = FailureEvent(step=step, kind="engine",
+                          target=handle.name or handle.pool,
+                          destroyed_tokens=eng.inflight_decode_tokens,
+                          lost_rids=lost,
+                          detail=f"slots={eng.num_active} "
+                                 f"queued={eng.queue_len}")
+        eng.crash()
+        return ev
+
+    def kill_reward(self, runner, step: int) -> Optional[FailureEvent]:
+        """Lose one pending serverless reward invocation: its future is
+        replaced with a ServerlessError. The runner's reward drain
+        re-submits from the retained payload (``reward_retry_limit``), so
+        recovery is intrinsic — no trajectory is destroyed."""
+        if not runner._pending_rewards:
+            runner.serverless.fail_next(runner.cfg.reward_url)
+            return FailureEvent(step=step, kind="reward",
+                                target=runner.cfg.reward_url,
+                                recovered=True,
+                                detail="poisoned next invocation")
+        entry = self._rng.choice(list(runner._pending_rewards))
+        dead: Future = Future()
+        dead.set_exception(ServerlessError(
+            "invocation lost mid-call (injected fault)"))
+        entry[2] = dead
+        return FailureEvent(step=step, kind="reward",
+                            target=entry[0].traj_id, recovered=True,
+                            detail="pending future poisoned; reward drain "
+                                   "re-submits from the retained payload")
+
+    def kill_rollout(self, runner, step: int) -> FailureEvent:
+        """Lose the whole rollout plane: every engine crashes, every env
+        manager and pending reward is gone. Trainer-side state (the
+        SampleBuffer with its consumed-id frontier) survives — restoring
+        the plane from an older snapshot therefore replays trajectories
+        the trainer already consumed, which the buffer dedups."""
+        proxy = runner.proxy
+        destroyed = sum(h.engine.inflight_decode_tokens
+                        for h in proxy.handles)
+        destroyed += sum(sum(em.loss_mask) for em in runner.active
+                         if em.state == EMState.GENERATING)
+        lost = [rid for h in proxy.handles for rid in proxy.requests_on(h)]
+        for h in proxy.handles:
+            h.engine.crash()
+        proxy.drop_routes(lost)
+        runner.active.clear()
+        with runner._completed_lock:
+            runner._completed_this_round.clear()
+        n_rewards = len(runner._pending_rewards)
+        runner._pending_rewards.clear()
+        return FailureEvent(step=step, kind="rollout", target="plane",
+                            destroyed_tokens=destroyed, lost_rids=lost,
+                            detail=f"engines={len(proxy.handles)} "
+                                   f"rewards={n_rewards}")

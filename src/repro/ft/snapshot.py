@@ -1,0 +1,437 @@
+"""Rollout-level checkpointing (paper §8): the RolloutSnapshotter.
+
+The train-state checkpointer (``repro.checkpoint``) covers the trainer;
+everything ELSE the disaggregated plane holds in flight — EnvManager state
+machines, engine KV-cache slots, buffered samples, pending serverless
+reward invocations — was lost on restart. The snapshotter serializes that
+rollout plane into versioned snapshots alongside the train-state
+checkpoint:
+
+- **capture** runs at the runner's suspend -> update -> resume barrier
+  (``LiveRLRunner.barrier_hook``), where the pump lock is held and the
+  plane is quiescent. It is cheap: host lists are copied, environments are
+  deep-copied, and KV slots are extracted through the existing
+  ``Model.extract_cache_slot`` path (fresh device arrays, safe against the
+  engines' donated dispatches). No disk I/O happens under the barrier.
+- **save** runs on a background writer thread (``save_async``), staging
+  into a ``.tmp_rollout_*`` dir and publishing with one atomic
+  ``os.replace`` — the same crash-safety contract as the checkpointer.
+  Cache leaves go to ``kv.npz``; everything picklable to ``state.pkl``.
+- **restore** rebuilds proxies/engines/env managers from a snapshot:
+  engine PRNG chains and weight versions are reset, KV slots are
+  re-injected through ``LLMProxy.reinject`` (a weight-version mismatch
+  re-prefills under the current weights, protocol step (5) semantics),
+  queued-but-unadmitted requests are re-submitted, pending rewards are
+  re-invoked from their retained payloads, and the SampleBuffer — seq
+  numbers, staleness version, and the consumed-``traj_id`` set — comes
+  back exactly, so replayed trajectories dedup instead of training twice.
+"""
+from __future__ import annotations
+
+import copy
+import itertools
+import os
+import pickle
+import shutil
+import tempfile
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer as CK
+from repro.checkpoint.checkpointer import CorruptCheckpointError
+from repro.core.envmanager import (EnvManager, RolloutPolicy,
+                                   em_counter_value, ensure_em_counter)
+from repro.core.weightstore import push_params
+from repro.rl.engine import KVHandoff
+
+
+@dataclass
+class RolloutSnapshot:
+    """In-memory image of the rollout plane at one barrier."""
+    step: int                      # trainer step the barrier belongs to
+    version: int                   # weight version the engines run (and
+    #                                the train-state checkpoint pairs with)
+    runner_version: int            # runner.version (trails by one: it
+    #                                advances after train_step)
+    mode: str                      # RunnerConfig.mode at capture
+    buffer: Dict                   # SampleBuffer.snapshot_state()
+    in_hand: List                  # the batch fetched but not yet trained
+    prev_fetched: int              # one_off previous-batch bookkeeping
+    pending_rewards: List          # (traj, payload, attempts)
+    ems: List[Dict]                # EnvManager.snapshot_state() records
+    engines: List[Dict]            # per-engine rng / version / slots / queue
+    sampler_rng: object            # TaskSampler RNG state
+    seed_counter: int
+    em_counter: int
+    meta: Dict = field(default_factory=dict)
+
+    def handoff_records(self) -> Dict[str, Dict]:
+        """request_id -> handoff record, across every engine's active
+        slots and queued INJECT commands."""
+        out = {}
+        for erec in self.engines:
+            for hrec in erec["slots"]:
+                out[hrec["request"].request_id] = hrec
+            for kind, payload in erec["queued"]:
+                if kind == "inject":
+                    out[payload["request"].request_id] = payload
+        return out
+
+    def queued_adds(self) -> Dict[str, object]:
+        """request_id -> GenRequest for dispatched-but-unadmitted ADDs."""
+        return {payload.request_id: payload
+                for erec in self.engines
+                for kind, payload in erec["queued"] if kind == "add"}
+
+
+def _handoff_record(hf: KVHandoff) -> Dict:
+    """KVHandoff -> serializable record; the cache pytree becomes a flat
+    leaf list (treedef is re-derived from the restoring engine)."""
+    return {"request": hf.request, "tokens": list(hf.tokens),
+            "new_tokens": list(hf.new_tokens),
+            "logprobs": list(hf.logprobs), "pos": hf.pos,
+            "start_version": hf.start_version,
+            "weight_version": hf.weight_version, "source": hf.source,
+            "cache_leaves": list(jax.tree.leaves(hf.cache))}
+
+
+class RolloutSnapshotter:
+    """Capture / persist / restore the rollout plane.
+
+    ``path=None`` keeps snapshots in memory only (the supervisor's live
+    env/engine recovery); with a path, ``save_async`` persists them next
+    to the train-state checkpoints without stalling the barrier.
+    """
+
+    def __init__(self, path: Optional[str] = None, keep_last: int = 3):
+        self.path = path
+        self.keep_last = keep_last
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="rollout-snap")
+        self._pending: List[Future] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # capture (under the runner barrier)
+    # ------------------------------------------------------------------
+    def capture(self, runner, step: int) -> RolloutSnapshot:
+        """Consistent image of the rollout plane. Caller must hold the
+        runner's pump lock (barrier hook) or otherwise guarantee the
+        worker is parked."""
+        runner._drain_completions()    # score stragglers first: the
+        #                                completed-EM list must be empty
+        proxy = runner.proxy
+        engines = []
+        for h in proxy.handles:
+            eng = h.engine
+            queued = []
+            for kind, payload in eng.snapshot_commands():
+                if kind == "inject":
+                    queued.append((kind, _handoff_record(payload)))
+                else:
+                    queued.append((kind, payload))
+            engines.append({
+                "name": h.name, "role": h.role,
+                "key": eng.snapshot_rng(),
+                "weight_version": eng.weight_version,
+                "slots": [_handoff_record(hf)
+                          for hf in eng.snapshot_slots()],
+                "queued": queued,
+            })
+        # requests whose cancellation is already in flight (proxy-level
+        # abort guard + engine-queued ABORTs, read once from the command
+        # snapshots above) — their managers are not worth resuming
+        aborting = proxy.pending_abort_ids()
+        aborting.update(payload for erec in engines
+                        for kind, payload in erec["queued"]
+                        if kind == "abort")
+        ems = []
+        for em in runner.active:
+            rec = em.snapshot_state()
+            # a live snapshot must not alias the running environment
+            rec["env"] = copy.deepcopy(rec["env"])
+            rec["aborting"] = rec["active_req"] in aborting
+            ems.append(rec)
+        in_hand = list(runner.last_batch)
+        buf = runner.buffer.snapshot_state()
+        # the in-hand batch has not trained yet: restore re-queues it, so
+        # its ids must not sit in the snapshot's consumed set
+        buf["consumed"] -= {t.traj_id for t in in_hand}
+        pending = [(traj, payload, attempts)
+                   for traj, payload, _fut, attempts
+                   in runner._pending_rewards]
+        seed_val = next(runner._seed_counter)      # peek-then-recreate
+        runner._seed_counter = itertools.count(seed_val)
+        return RolloutSnapshot(
+            step=step, version=int(runner.state.version),
+            runner_version=runner.version, mode=runner.cfg.mode,
+            buffer=buf, in_hand=in_hand,
+            prev_fetched=runner._prev_batch_fetched_step,
+            pending_rewards=pending, ems=ems, engines=engines,
+            sampler_rng=runner.sampler._rng.getstate(),
+            seed_counter=seed_val, em_counter=em_counter_value())
+
+    # ------------------------------------------------------------------
+    # persistence (writer thread)
+    # ------------------------------------------------------------------
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.path, f"rollout_{step:08d}")
+
+    def save(self, snap: RolloutSnapshot) -> str:
+        """Atomic synchronous write. Cache/PRNG arrays land in ``kv.npz``
+        (keyed by handoff index), the rest in ``state.pkl``."""
+        if self.path is None:
+            raise ValueError("RolloutSnapshotter was built without a path")
+        os.makedirs(self.path, exist_ok=True)
+        arrays: Dict[str, np.ndarray] = {}
+        picklable = self._strip_arrays(snap, arrays)
+        tmp = tempfile.mkdtemp(dir=self.path, prefix=".tmp_rollout_")
+        try:
+            np.savez(os.path.join(tmp, "kv.npz"), **arrays)
+            with open(os.path.join(tmp, "state.pkl"), "wb") as f:
+                pickle.dump(picklable, f)
+            final = self._dir(snap.step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+        finally:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
+        self.prune()
+        return final
+
+    def _strip_arrays(self, snap: RolloutSnapshot,
+                      arrays: Dict[str, np.ndarray]) -> RolloutSnapshot:
+        """Copy ``snap`` with every cache leaf / PRNG key moved into
+        ``arrays`` and replaced by an npz key reference."""
+        def strip_handoff(hrec: Dict, tag: str) -> Dict:
+            out = dict(hrec)
+            keys = []
+            for j, leaf in enumerate(hrec["cache_leaves"]):
+                k = f"{tag}_l{j}"
+                arrays[k] = np.asarray(leaf)
+                keys.append(k)
+            out["cache_leaves"] = ("__npz__", keys)
+            return out
+
+        engines = []
+        for i, erec in enumerate(snap.engines):
+            out = dict(erec)
+            arrays[f"e{i}_key"] = np.asarray(erec["key"])
+            out["key"] = ("__npz__", [f"e{i}_key"])
+            out["slots"] = [strip_handoff(h, f"e{i}_s{j}")
+                            for j, h in enumerate(erec["slots"])]
+            out["queued"] = [
+                (kind, strip_handoff(p, f"e{i}_q{j}")
+                 if kind == "inject" else p)
+                for j, (kind, p) in enumerate(erec["queued"])]
+            engines.append(out)
+        return RolloutSnapshot(
+            **{**snap.__dict__, "engines": engines})
+
+    def save_async(self, snap: RolloutSnapshot):
+        with self._lock:
+            self._pending.append(self._pool.submit(self.save, snap))
+
+    def save_train_state_async(self, state, step: int):
+        """Pair the rollout snapshot with a train-state checkpoint at the
+        same step, on the same writer thread (ordered after the rollout
+        write submitted before it)."""
+        with self._lock:
+            self._pending.append(self._pool.submit(
+                CK.save, self.path, state, step, self.keep_last))
+
+    def wait(self):
+        """Flush pending writes, surfacing writer errors."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for f in pending:
+            f.result()
+
+    def close(self):
+        self.wait()
+        self._pool.shutdown(wait=True)
+
+    def steps(self) -> List[int]:
+        if self.path is None:
+            return []
+        return CK.versioned_steps(self.path, prefix="rollout_")
+
+    def latest_step(self) -> Optional[int]:
+        all_steps = self.steps()
+        return all_steps[-1] if all_steps else None
+
+    def prune(self):
+        CK.prune_versioned(self.path, self.keep_last, prefix="rollout_",
+                           tmp_prefix=".tmp_rollout_")
+
+    def load(self, step: Optional[int] = None) -> RolloutSnapshot:
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no rollout snapshots under {self.path}")
+        d = self._dir(step)
+        try:
+            data = np.load(os.path.join(d, "kv.npz"))
+            with open(os.path.join(d, "state.pkl"), "rb") as f:
+                snap: RolloutSnapshot = pickle.load(f)
+        except (OSError, ValueError, pickle.UnpicklingError, EOFError) as e:
+            raise CorruptCheckpointError(
+                f"rollout snapshot step {step} under {self.path} is "
+                f"corrupt: {e}") from e
+
+        def rehydrate(hrec: Dict) -> Dict:
+            out = dict(hrec)
+            _, keys = hrec["cache_leaves"]
+            out["cache_leaves"] = [data[k] for k in keys]
+            return out
+
+        for erec in snap.engines:
+            _, (kkey,) = erec["key"]
+            erec["key"] = data[kkey]
+            erec["slots"] = [rehydrate(h) for h in erec["slots"]]
+            erec["queued"] = [(kind, rehydrate(p) if kind == "inject"
+                               else p) for kind, p in erec["queued"]]
+        return snap
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+    def _rebuild_handoff(self, hrec: Dict, treedef, tmpl_leaves
+                         ) -> KVHandoff:
+        leaves = hrec["cache_leaves"]
+        if len(leaves) != len(tmpl_leaves):
+            raise ValueError(
+                f"snapshot KV slot for {hrec['request'].request_id}: leaf "
+                f"count mismatch — engine cache has {len(tmpl_leaves)} "
+                f"leaves, snapshot holds {len(leaves)}")
+        for tpl, got in zip(tmpl_leaves, leaves):
+            if tuple(np.shape(tpl)) != tuple(np.shape(got)):
+                raise ValueError(
+                    f"snapshot KV slot for {hrec['request'].request_id}: "
+                    f"shape mismatch {np.shape(tpl)} vs {np.shape(got)}")
+        return KVHandoff(
+            request=hrec["request"], tokens=list(hrec["tokens"]),
+            new_tokens=list(hrec["new_tokens"]),
+            logprobs=list(hrec["logprobs"]), pos=hrec["pos"],
+            start_version=hrec["start_version"],
+            cache=jax.tree.unflatten(treedef, leaves),
+            weight_version=hrec["weight_version"],
+            source=hrec.get("source", "snapshot"))
+
+    def _policy(self, runner) -> RolloutPolicy:
+        return RolloutPolicy(max_new_tokens=runner.cfg.max_new_tokens,
+                             temperature=runner.cfg.temperature)
+
+    def _resume_em(self, runner, rec: Dict, handoffs: Dict,
+                   queued_adds: Dict, treedef, tmpl_leaves) -> int:
+        """Rebuild one EnvManager and resume its generation. Returns the
+        number of decode tokens resurrected without regeneration: the
+        manager's completed-turn prefix plus, when the snapshot holds the
+        in-flight KV slot, the partial generation it carries."""
+        recovered = sum(rec["loss_mask"])     # action tokens in the prefix
+        rec = dict(rec, env=copy.deepcopy(rec["env"]))
+        em = EnvManager.restore_from(
+            rec, runner.proxy, tokenizer=runner.tok,
+            policy=self._policy(runner),
+            on_complete=runner._on_em_complete)
+        runner.active.append(em)
+        if em.state.name != "GENERATING":
+            return recovered
+        rid = rec["active_req"]
+        hrec = handoffs.get(rid) if rid else None
+        if hrec is not None:
+            runner.proxy.reinject(
+                self._rebuild_handoff(hrec, treedef, tmpl_leaves),
+                callback=em.on_generation)
+            return recovered + len(hrec["new_tokens"])
+        if rid in queued_adds:
+            runner.proxy.submit(queued_adds[rid], em.on_generation)
+            return recovered
+        # dispatched state unrecoverable: re-request from the manager's
+        # token prefix (fresh id, re-prefill) — turns survive, the
+        # in-flight action regenerates
+        em._active_req = None
+        em.retry()
+        return recovered
+
+    def restore(self, runner, snap: RolloutSnapshot,
+                plane_only: bool = False) -> Dict:
+        """Rebuild the rollout plane of ``runner`` from ``snap``.
+
+        Cold restore (default): the runner was freshly constructed from
+        the PAIRED train-state checkpoint (``state.version`` must equal
+        ``snap.version``); buffer, sampler/seed RNGs, weight store, and
+        the in-hand batch come back along with the plane.
+
+        ``plane_only=True`` is the live-recovery path (a rollout-plane
+        loss while training kept going): only env managers, engine slots,
+        and pending rewards are resurrected; trainer-side state — the
+        buffer with its consumed-id frontier, version counters, RNGs —
+        stays live, so trajectories the trainer already consumed after
+        the snapshot are regenerated and then DEDUPED at ``put``.
+        """
+        proxy = runner.proxy
+        if len(snap.engines) != len(proxy.handles):
+            raise ValueError(
+                f"snapshot has {len(snap.engines)} engines, proxy has "
+                f"{len(proxy.handles)} — restore needs a matching plane")
+        if not plane_only and snap.mode != runner.cfg.mode:
+            raise ValueError(
+                f"snapshot was taken in mode {snap.mode!r}, runner is "
+                f"{runner.cfg.mode!r}")
+        if not plane_only and int(runner.state.version) != snap.version:
+            raise ValueError(
+                f"train state is version {int(runner.state.version)} but "
+                f"the rollout snapshot pairs with version {snap.version} "
+                "— restore the matching train-state checkpoint first")
+        eng0 = proxy.handles[0].engine
+        tmpl_leaves, treedef = jax.tree.flatten(
+            eng0.model.extract_cache_slot(eng0._cache, 0))
+        if not plane_only:
+            runner.version = snap.runner_version
+            # republish the restored weights at their version so the
+            # first barrier's pull/update is the usual no-op
+            push_params(runner.store, runner.state.params,
+                        version=snap.version)
+            buf = dict(snap.buffer)
+            if snap.mode == "one_off":
+                runner._prev_batch = (list(snap.in_hand)
+                                      if snap.in_hand else None)
+                runner._prev_batch_fetched_step = snap.prev_fetched
+            else:
+                # the fetched-but-untrained batch re-enters the buffer
+                # ahead of everything else (its seq numbers are oldest)
+                buf["items"] = list(snap.in_hand) + list(buf["items"])
+            runner.buffer.restore_state(buf)
+            runner.sampler._rng.setstate(snap.sampler_rng)
+            runner._seed_counter = itertools.count(snap.seed_counter)
+            for erec, h in zip(snap.engines, proxy.handles):
+                h.engine.restore_rng(erec["key"])
+                h.engine.weight_version = snap.version
+        ensure_em_counter(snap.em_counter)
+        handoffs = snap.handoff_records()
+        queued_adds = snap.queued_adds()
+        recovered_tokens = 0
+        resumed = 0
+        for rec in snap.ems:
+            if rec["aborting"] or rec["state"] in ("DONE", "FAILED",
+                                                   "ABORTED"):
+                continue
+            recovered_tokens += self._resume_em(
+                runner, rec, handoffs, queued_adds, treedef, tmpl_leaves)
+            resumed += 1
+        for traj, payload, attempts in snap.pending_rewards:
+            fut = runner.serverless.invoke_async(runner.cfg.reward_url,
+                                                 payload)
+            runner._pending_rewards.append([traj, payload, fut, attempts])
+        return {"resumed_ems": resumed,
+                "recovered_tokens": recovered_tokens,
+                "pending_rewards": len(snap.pending_rewards),
+                "buffered": 0 if plane_only else len(snap.buffer["items"])}

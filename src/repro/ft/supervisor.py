@@ -1,0 +1,268 @@
+"""FT supervisor: the control loop above ``LiveRLRunner`` that the paper
+says disaggregation makes mandatory (§8) — periodic paired checkpoints
+(train state + rollout plane) and supervised recovery from injected or
+real failures.
+
+Recovery policy by failure class:
+
+- **env / engine / rollout-plane failures** recover from the latest
+  rollout snapshot WITHOUT restarting training: env managers are rebuilt
+  at their snapshot state and resumed, engine KV slots are re-injected
+  through ``LLMProxy.reinject`` (re-prefilled if the weights moved on),
+  and replayed trajectories the trainer already consumed are deduped by
+  the SampleBuffer, so no ``traj_id`` trains twice.
+- **reward failures** are absorbed by the runner's reward drain itself
+  (re-submission from the retained payload).
+- **trainer failures** restart from the latest PAIRED checkpoint:
+  ``restore_latest`` walks steps newest-first, skipping any pair whose
+  train checkpoint or rollout snapshot is corrupt ("checkpoint corrupt,
+  falling back to step N-1") until one restores cleanly.
+
+With ``scratch_recovery=True`` the supervisor degrades to the
+restart-from-scratch baseline — failed trajectories are dropped and
+respawned from zero — which is what ``benchmarks/fault_tolerance.py``
+compares against.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+from repro.checkpoint import checkpointer as CK
+from repro.checkpoint.checkpointer import CorruptCheckpointError
+from repro.ft.failure import DEFAULT_KINDS, FailureEvent, FailureInjector
+from repro.ft.snapshot import RolloutSnapshot, RolloutSnapshotter
+
+
+@dataclass
+class FTConfig:
+    snapshot_every: int = 1        # barrier cadence (steps)
+    failure_rate: float = 0.0      # 0 = no injection; paper env rate ~0.1
+    kinds: Tuple[str, ...] = DEFAULT_KINDS
+    keep_last: int = 3             # retained snapshot/checkpoint pairs
+    scratch_recovery: bool = False  # baseline: drop instead of restore
+    seed: int = 0
+
+
+class FTSupervisor:
+    """Wraps one runner; drives snapshots, injection, and recovery."""
+
+    def __init__(self, runner, cfg: Optional[FTConfig] = None,
+                 ckpt_dir: Optional[str] = None,
+                 injector: Optional[FailureInjector] = None,
+                 snapshotter: Optional[RolloutSnapshotter] = None):
+        self.runner = runner
+        self.cfg = cfg or FTConfig()
+        self.snapshotter = snapshotter or RolloutSnapshotter(
+            ckpt_dir, keep_last=self.cfg.keep_last)
+        self.injector = injector
+        if injector is None and self.cfg.failure_rate > 0:
+            self.injector = FailureInjector(self.cfg.failure_rate,
+                                            kinds=self.cfg.kinds,
+                                            seed=self.cfg.seed)
+        self.events: List[FailureEvent] = []
+        self.log: List[str] = []
+        self.last_snapshot: Optional[RolloutSnapshot] = None
+        runner.barrier_hook = self._on_barrier
+
+    # ------------------------------------------------------------------
+    def _on_barrier(self, runner, step: int):
+        """Runs under the pump lock at every suspend->update->resume
+        barrier: capture is synchronous (cheap), persistence is not.
+        Pairs are labeled by WEIGHT VERSION, not the runner-local step
+        index, so snapshots taken after a restart continue the original
+        numbering instead of overwriting it."""
+        v = int(runner.state.version)
+        if self.cfg.snapshot_every <= 0 \
+                or v % self.cfg.snapshot_every != 0:
+            return
+        snap = self.snapshotter.capture(runner, v)
+        self.last_snapshot = snap
+        if self.snapshotter.path is not None:
+            self.snapshotter.save_async(snap)
+            self.snapshotter.save_train_state_async(runner.state, v)
+
+    # ------------------------------------------------------------------
+    def run_steps(self, num_steps: int):
+        """Drive the runner one trainer step at a time; after each step —
+        the rollout worker is parked there — maybe inject a fault and
+        recover it."""
+        for _ in range(num_steps):
+            self.runner.run_steps(1)
+            step = self.runner.history[-1].step
+            kind = self.injector.draw(step) if self.injector else None
+            if kind:
+                self.inject_and_recover(kind, step)
+        return self.runner.history
+
+    def close(self):
+        self.runner.barrier_hook = None
+        self.snapshotter.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------------------
+    # injection + recovery
+    # ------------------------------------------------------------------
+    def inject_and_recover(self, kind: str,
+                           step: int) -> Optional[FailureEvent]:
+        runner, inj = self.runner, self.injector
+        t0 = time.monotonic()
+        if kind == "env":
+            ev = inj.kill_env(runner, step)
+            if ev is not None and not self.cfg.scratch_recovery:
+                self._recover_env(ev)
+        elif kind == "engine":
+            handle = inj.pick_engine(runner)
+            ev = inj.kill_engine(runner, step, handle)
+            self._recover_engine(ev, handle)
+        elif kind == "reward":
+            ev = inj.kill_reward(runner, step)
+        elif kind == "rollout":
+            ev = inj.kill_rollout(runner, step)
+            if not self.cfg.scratch_recovery:
+                self._recover_rollout(ev)
+        else:
+            raise ValueError(f"unknown failure kind {kind!r}")
+        if ev is not None:
+            ev.recovery_s = time.monotonic() - t0
+            self.events.append(ev)
+            how = "snapshot" if ev.recovered else "scratch"
+            self.log.append(
+                f"step {step}: injected {kind} failure on {ev.target} — "
+                f"destroyed {ev.destroyed_tokens} tokens, recovered "
+                f"{ev.recovered_tokens} ({how})")
+        return ev
+
+    def _snap_maps(self):
+        snap = self.last_snapshot
+        if snap is None:
+            return None, {}, {}
+        return snap, snap.handoff_records(), snap.queued_adds()
+
+    def _slot_template(self):
+        import jax
+        eng = self.runner.proxy.handles[0].engine
+        tmpl = eng.model.extract_cache_slot(eng._cache, 0)
+        leaves, treedef = jax.tree.flatten(tmpl)
+        return treedef, leaves
+
+    def _recover_env(self, ev: FailureEvent):
+        """Resume the killed manager from its snapshot record: the env
+        object and token stream come back at snapshot state, and its
+        generation continues (re-injected KV when the snapshot holds the
+        slot, otherwise a fresh request over the restored prefix)."""
+        snap, handoffs, queued = self._snap_maps()
+        rec = None if snap is None else next(
+            (r for r in snap.ems if r["em_id"] == ev.target), None)
+        if rec is None or rec["aborting"]:
+            return        # fault predates coverage: runner respawns fresh
+        treedef, tmpl_leaves = self._slot_template()
+        ev.recovered_tokens = self.snapshotter._resume_em(
+            self.runner, rec, handoffs, queued, treedef, tmpl_leaves)
+        ev.recovered = True
+
+    def _recover_engine(self, ev: FailureEvent, handle):
+        """Re-home every request the dead engine held. Snapshot-covered
+        requests re-inject their KV slot on a surviving (or the reborn)
+        engine; uncovered ones retry from the manager's token prefix —
+        or, in the scratch baseline, fail outright and respawn."""
+        runner = self.runner
+        proxy = runner.proxy
+        snap, handoffs, queued = self._snap_maps()
+        treedef, tmpl_leaves = self._slot_template()
+        lost = set(ev.lost_rids)
+        rehomed = set()     # lost rids re-registered under the SAME id
+        for em in list(runner.active):
+            rid = em._active_req
+            if rid is None or rid not in lost \
+                    or em.state.name != "GENERATING":
+                continue
+            # the manager's completed-turn prefix is at risk too: the
+            # scratch baseline destroys it, supervised recovery keeps it
+            prefix = sum(em.loss_mask)
+            ev.destroyed_tokens += prefix
+            proxy.drop_routes([rid])
+            if self.cfg.scratch_recovery:
+                em.fail()
+                continue
+            hrec = handoffs.get(rid)
+            if hrec is not None:
+                proxy.reinject(
+                    self.snapshotter._rebuild_handoff(
+                        hrec, treedef, tmpl_leaves),
+                    callback=em.on_generation)
+                rehomed.add(rid)
+                ev.recovered_tokens += prefix + len(hrec["new_tokens"])
+            elif rid in queued:
+                proxy.submit(queued[rid], em.on_generation)
+                rehomed.add(rid)
+                ev.recovered_tokens += prefix
+            else:
+                em._active_req = None
+                em.retry()          # fresh id; the old route is gone
+                ev.recovered_tokens += prefix
+        # routes that belong to no live manager (raced completions) still
+        # point at the dead engine — but never the ones just re-homed
+        # above, which re-registered under their ORIGINAL request id
+        proxy.drop_routes([rid for rid in lost
+                           if rid not in rehomed and proxy.routed(rid)])
+        ev.recovered = not self.cfg.scratch_recovery
+
+    def _recover_rollout(self, ev: FailureEvent):
+        """Full plane restore from the latest snapshot while training
+        keeps its progress — the dedup-heavy path: trajectories consumed
+        since the snapshot replay and are dropped at ``put``."""
+        snap = self.last_snapshot
+        if snap is None:
+            return
+        report = self.snapshotter.restore(self.runner, snap,
+                                          plane_only=True)
+        ev.recovered_tokens = report["recovered_tokens"]
+        ev.recovered = True
+        ev.detail += (f" restored {report['resumed_ems']} ems, "
+                      f"{report['pending_rewards']} pending rewards")
+
+
+# ---------------------------------------------------------------------------
+# trainer-failure restart: restore the latest intact (train, rollout) pair
+# ---------------------------------------------------------------------------
+def restore_latest(ckpt_dir: str, like_state,
+                   make_runner: Callable,
+                   log: Optional[List[str]] = None):
+    """Restart path for a trainer failure: walk the paired checkpoints
+    newest-first; a step whose train checkpoint or rollout snapshot is
+    corrupt (truncated write, crashed save) is skipped with a
+    "checkpoint corrupt, falling back to step N-1" log line. Returns
+    ``(runner, step)`` with the rollout plane already restored.
+
+    ``make_runner(train_state)`` must build a fresh, un-started
+    ``LiveRLRunner`` whose engines hold ``train_state.params``.
+    """
+    snapper = RolloutSnapshotter(ckpt_dir)
+    paired = sorted(set(CK.steps(ckpt_dir)) & set(snapper.steps()))
+    if not paired:
+        raise FileNotFoundError(
+            f"no paired train+rollout checkpoints under {ckpt_dir}")
+    log = log if log is not None else []
+    for step in reversed(paired):
+        try:
+            state, _ = CK.restore(ckpt_dir, like_state, step=step)
+            snap = snapper.load(step)
+        except CorruptCheckpointError as e:
+            log.append(f"step {step}: checkpoint corrupt, falling back "
+                       f"to step N-1 ({e})")
+            continue
+        runner = make_runner(state)
+        snapper.restore(runner, snap)
+        log.append(f"restored paired checkpoint at step {step}")
+        return runner, step
+    raise CorruptCheckpointError(
+        f"every paired checkpoint under {ckpt_dir} is corrupt "
+        f"(tried steps {list(reversed(paired))}): " + "; ".join(log))

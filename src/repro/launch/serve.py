@@ -58,7 +58,16 @@ def main(argv=None):
                     help="pump the engines from a background thread while "
                          "requests are submitted concurrently (the live "
                          "runner's producer/consumer shape)")
+    ap.add_argument("--failure-rate", type=float, default=0.0, metavar="P",
+                    help="fault-tolerance demo (§8): crash the busiest "
+                         "engine after ~1/P pumps and recover its "
+                         "in-flight requests from the periodic KV-slot "
+                         "snapshot (snapshot-covered requests resume "
+                         "mid-decode; the rest re-prefill)")
     args = ap.parse_args(argv)
+    if args.failure_rate > 0 and args.async_pump:
+        ap.error("--failure-rate drives the synchronous pump loop; drop "
+                 "--async-pump")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -89,7 +98,51 @@ def main(argv=None):
 
     prompts = args.prompt or ["the agent moves ", "reward comes from "]
     results = []
-    if args.async_pump:
+    requests = {}
+    if args.failure_rate > 0:
+        # synchronous pump loop with one injected engine crash + recovery
+        for i, p in enumerate(prompts):
+            req = GenRequest(request_id=f"r{i}",
+                             prompt=TOKENIZER.encode(p, bos=True),
+                             max_new_tokens=args.max_new_tokens,
+                             temperature=args.temperature)
+            requests[req.request_id] = req
+            proxy.submit(req, callback=results.append)
+        kill_after = max(3, int(round(1.0 / args.failure_rate)))
+        snap_slots = {}
+        pumps, killed = 0, False
+        while proxy.busy:
+            if not killed and pumps % 2 == 0:
+                # periodic KV-slot snapshot (the serving-side analogue of
+                # the runner's barrier snapshot); requests the snapshot
+                # misses simply re-prefill at recovery
+                snap_slots = {hf.request.request_id: hf
+                              for h in proxy.handles
+                              for hf in h.engine.snapshot_slots()}
+            proxy.pump()
+            pumps += 1
+            if not killed and pumps >= kill_after:
+                victim = max(proxy.handles,
+                             key=lambda h: h.engine.inflight_decode_tokens)
+                lost = proxy.requests_on(victim)
+                victim.engine.crash()
+                resumed = resubmitted = 0
+                for rid in lost:
+                    hf = snap_slots.get(rid)
+                    if hf is not None:
+                        proxy.reinject(hf)     # callback still registered
+                        resumed += 1
+                    else:
+                        proxy.drop_routes([rid])
+                        proxy.submit(requests[rid],
+                                     callback=results.append)
+                        resubmitted += 1
+                print(f"ft: crashed engine {victim.name or victim.pool} "
+                      f"after {pumps} pumps — {len(lost)} in-flight lost, "
+                      f"{resumed} resumed from snapshot, "
+                      f"{resubmitted} re-prefilled")
+                killed = True
+    elif args.async_pump:
         # producer/consumer serving: a dedicated thread pumps while this
         # thread keeps submitting — the engine command queues and the
         # proxy route table absorb the concurrency
@@ -106,12 +159,13 @@ def main(argv=None):
 
         pump_thread = threading.Thread(target=pump_loop, daemon=True)
         pump_thread.start()
-    for i, p in enumerate(prompts):
-        proxy.submit(GenRequest(request_id=f"r{i}",
-                                prompt=TOKENIZER.encode(p, bos=True),
-                                max_new_tokens=args.max_new_tokens,
-                                temperature=args.temperature),
-                     callback=results.append)
+    if args.failure_rate <= 0:
+        for i, p in enumerate(prompts):
+            proxy.submit(GenRequest(request_id=f"r{i}",
+                                    prompt=TOKENIZER.encode(p, bos=True),
+                                    max_new_tokens=args.max_new_tokens,
+                                    temperature=args.temperature),
+                         callback=results.append)
     if args.async_pump:
         while len(results) < len(prompts):
             if pump_error:

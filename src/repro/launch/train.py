@@ -18,6 +18,7 @@ from repro.core import (DEFAULT_TASKS, EngineHandle, LiveRLRunner, LLMProxy,
                         RebalancerConfig, ResourceManager, RunnerConfig,
                         ServerlessPlatform, build_pd_proxy, parse_pools)
 from repro.core.proxy import format_placement_row, format_switch_event
+from repro.ft import FTConfig, FTSupervisor, restore_latest
 from repro.models import Model
 from repro.rewards.rule_based import REWARD_FNS
 from repro.rl.engine import InferenceEngine
@@ -75,7 +76,28 @@ def main(argv=None):
                          "macro-step — lower K to tighten it, 1 = legacy "
                          "single-step dispatch)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-rollouts", action="store_true",
+                    help="fault tolerance (§8): snapshot the FULL rollout "
+                         "plane (env managers, engine KV slots, buffered "
+                         "samples, pending rewards) alongside the train "
+                         "state at every weight-sync barrier; requires "
+                         "--ckpt")
+    ap.add_argument("--snapshot-every", type=int, default=1, metavar="N",
+                    help="barrier cadence of the rollout snapshots")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="retained checkpoint/snapshot pairs")
+    ap.add_argument("--failure-rate", type=float, default=0.0,
+                    metavar="P",
+                    help="inject a random env/engine/reward failure with "
+                         "probability P per iteration (paper §8 observes "
+                         "~0.1) and recover it under the FT supervisor")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume from the latest intact train+rollout "
+                         "checkpoint pair under --ckpt (trainer-failure "
+                         "restart; corrupt pairs fall back to step N-1)")
     args = ap.parse_args(argv)
+    if (args.ckpt_rollouts or args.restore) and not args.ckpt:
+        ap.error("--ckpt-rollouts/--restore need --ckpt DIR")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -104,23 +126,28 @@ def main(argv=None):
             ap.error("--pools only takes effect on the disaggregated "
                      "plane; add --pd-disagg or --affinity")
         pools = parse_pools(args.pools) if args.pools else None
-        rm = ResourceManager(pools) if pools else None
         n_prefill = args.n_prefill or (2 if args.affinity else 1)
-        if pd:
-            proxy = build_pd_proxy(
-                model, state.params, max_slots=8, max_len=640,
-                n_prefill=n_prefill, n_decode=args.n_decode,
-                resource_manager=rm,
-                rebalancer=RebalancerConfig() if args.affinity else None,
-                steps_per_dispatch=args.steps_per_dispatch)
-        else:
-            eng = InferenceEngine(model, state.params, max_slots=8,
-                                  max_len=640,
-                                  steps_per_dispatch=args.steps_per_dispatch)
-            proxy = LLMProxy([EngineHandle(eng, "H20")])
         weights = (tuple(float(w) for w in args.task_weights.split(","))
                    if args.task_weights else None)
-        with LiveRLRunner(
+
+        def build_runner(st):
+            """Fresh runner over ``st`` — also the trainer-restart hook
+            (``restore_latest`` rebuilds the plane through it)."""
+            rm = ResourceManager(pools) if pools else None
+            if pd:
+                proxy = build_pd_proxy(
+                    model, st.params, max_slots=8, max_len=640,
+                    n_prefill=n_prefill, n_decode=args.n_decode,
+                    resource_manager=rm,
+                    rebalancer=RebalancerConfig() if args.affinity
+                    else None,
+                    steps_per_dispatch=args.steps_per_dispatch)
+            else:
+                eng = InferenceEngine(
+                    model, st.params, max_slots=8, max_len=640,
+                    steps_per_dispatch=args.steps_per_dispatch)
+                proxy = LLMProxy([EngineHandle(eng, "H20")])
+            return LiveRLRunner(
                 RunnerConfig(batch_size=args.batch, group_size=args.group,
                              alpha=args.alpha, mode=args.mode,
                              tasks=tuple(args.tasks.split(",")),
@@ -128,23 +155,50 @@ def main(argv=None):
                              pd_disagg=pd, pools=pools,
                              affinity=args.affinity,
                              steps_per_dispatch=args.steps_per_dispatch),
-                proxy, state, step, ServerlessPlatform(),
-                REWARD_FNS[args.reward], seq_len=640) as runner:
+                proxy, st, step, ServerlessPlatform(),
+                REWARD_FNS[args.reward], seq_len=640)
+
+        if args.restore:
+            runner, start = restore_latest(args.ckpt, state, build_runner)
+            print(f"restored paired checkpoint at step {start}")
+        else:
+            runner = build_runner(state)
+        use_ft = args.ckpt_rollouts or args.failure_rate > 0
+        sup = None
+        with runner:
             if args.affinity:
                 for row in runner.placement_report():
                     print("placement: " + format_placement_row(row))
-            for h in runner.run_steps(args.steps):
+            if use_ft:
+                sup = FTSupervisor(
+                    runner,
+                    FTConfig(snapshot_every=args.snapshot_every,
+                             failure_rate=args.failure_rate,
+                             keep_last=args.keep_last),
+                    ckpt_dir=args.ckpt if args.ckpt_rollouts else None)
+                hist = sup.run_steps(args.steps)
+            else:
+                hist = runner.run_steps(args.steps)
+            for h in hist:
                 print(f"step {h.step} loss {h.loss:.4f} "
                       f"reward {h.reward_mean:.3f} wall {h.wall_s:.1f}s "
                       f"ovl_decode_toks {h.decode_during_train}"
                       + (f" role_switches {h.role_switches}"
-                         if args.affinity else ""))
+                         if args.affinity else "")
+                      + (f" deduped {h.deduped}" if h.deduped else ""))
             if args.affinity:
                 for ev in runner.proxy.switch_log:
                     print(format_switch_event(ev))
             state = runner.state
-        proxy.release_bindings()
-    if args.ckpt:
+        if sup is not None:
+            sup.close()
+            for line in sup.log:
+                print("ft: " + line)
+        runner.proxy.release_bindings()
+    if args.ckpt and not args.ckpt_rollouts:
+        # with --ckpt-rollouts the supervisor already persisted paired
+        # full-state checkpoints; a trailing params-only save would mix
+        # tree structures in the same directory
         print("saved:", CK.save(args.ckpt, state.params,
                                 step=int(state.version)))
 

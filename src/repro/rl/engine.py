@@ -185,6 +185,7 @@ class InferenceEngine:
         self.recomputes = 0           # in-flight KV rebuilds (protocol (5))
         self.handoffs_out = 0
         self.handoffs_in = 0
+        self.crashes = 0              # injected engine losses (repro.ft)
         self._build_jit()
 
     # ------------------------------------------------------------------
@@ -291,6 +292,47 @@ class InferenceEngine:
             return [self._package_handoff(i)
                     for i, s in enumerate(self._slots) if s.active]
 
+    # ------------------------------------------------------------------
+    # fault tolerance (repro.ft): snapshot + failure injection
+    # ------------------------------------------------------------------
+    def snapshot_slots(self) -> List[KVHandoff]:
+        """Non-destructive copy of every in-flight slot as a KVHandoff —
+        the engine half of a rollout snapshot. Unlike
+        ``drain_active_handoffs`` the slots stay live; the engine keeps
+        decoding after the snapshot returns."""
+        with self._step_lock:
+            return [self._peek_handoff(i)
+                    for i, s in enumerate(self._slots) if s.active]
+
+    def snapshot_commands(self) -> List:
+        """Copy of the queued-but-unprocessed commands (ADD / INJECT /
+        ABORT), for snapshotting requests that were dispatched but never
+        admitted."""
+        with self._lock:
+            return list(self._commands)
+
+    def snapshot_rng(self):
+        """The engine's PRNG chain head as a host array (snapshot)."""
+        return np.asarray(self._key)
+
+    def restore_rng(self, key):
+        self._key = jnp.asarray(key)
+
+    def crash(self):
+        """Simulate losing this engine's process: every in-flight slot,
+        queued command, undelivered result, and the whole KV cache are
+        gone (the engine object itself survives, standing in for a
+        restarted replacement bound to the same devices). The proxy route
+        table still points dangling requests here — recovery re-injects
+        them from the latest snapshot (see ``repro.ft.supervisor``)."""
+        with self._step_lock:
+            with self._lock:
+                self._commands.clear()
+                self._results.clear()
+            self._slots = [_Slot() for _ in range(self.max_slots)]
+            self._cache = self.model.init_cache(self.max_slots, self.max_len)
+            self.crashes += 1
+
     def suspend(self):
         """Stop admitting new requests; in-flight slots are preserved.
         A bare flag write (atomic under the GIL): the pump thread reads it
@@ -378,15 +420,23 @@ class InferenceEngine:
             self._emit_handoff(i)
         return True
 
-    def _package_handoff(self, i: int) -> KVHandoff:
-        """Freeze slot ``i`` into a KVHandoff and free the slot."""
+    def _peek_handoff(self, i: int) -> KVHandoff:
+        """Freeze slot ``i`` into a KVHandoff WITHOUT freeing the slot.
+        ``extract_cache_slot`` produces fresh arrays (a dynamic slice), so
+        the handoff stays valid even after later donated dispatches
+        invalidate the engine's own cache buffer."""
         s = self._slots[i]
-        handoff = KVHandoff(
+        return KVHandoff(
             request=s.request, tokens=list(s.tokens),
             new_tokens=list(s.new_tokens), logprobs=list(s.logprobs),
             pos=s.pos, start_version=s.start_version,
             cache=self.model.extract_cache_slot(self._cache, i),
             weight_version=self.weight_version)
+
+    def _package_handoff(self, i: int) -> KVHandoff:
+        """Freeze slot ``i`` into a KVHandoff and free the slot."""
+        s = self._slots[i]
+        handoff = self._peek_handoff(i)
         s.active = False
         s.request = None
         return handoff
@@ -637,6 +687,12 @@ class InferenceEngine:
     @property
     def num_active(self) -> int:
         return sum(s.active for s in self._slots)
+
+    @property
+    def inflight_decode_tokens(self) -> int:
+        """Decode tokens held by in-flight slots — the work destroyed if
+        this engine dies right now (fault-tolerance accounting)."""
+        return sum(len(s.new_tokens) for s in self._slots if s.active)
 
     @property
     def queue_len(self) -> int:

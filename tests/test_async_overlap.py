@@ -106,11 +106,11 @@ def test_async_reward_preserves_submission_order(tiny_setup):
         sls.deploy("fc://t/fast", lambda p: 2.0)
         t_slow, t_fast = _traj("slow"), _traj("fast")
         runner._pending_rewards.append(
-            (t_slow, sls.invoke_async("fc://t/slow", {})))
+            [t_slow, {}, sls.invoke_async("fc://t/slow", {}), 0])
         runner._pending_rewards.append(
-            (t_fast, sls.invoke_async("fc://t/fast", {})))
+            [t_fast, {}, sls.invoke_async("fc://t/fast", {}), 0])
         deadline = time.monotonic() + 5
-        while not runner._pending_rewards[1][1].done():
+        while not runner._pending_rewards[1][2].done():
             assert time.monotonic() < deadline
             time.sleep(0.005)
         # the LATER future resolved first, but the head gates the drain

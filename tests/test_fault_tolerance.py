@@ -1,0 +1,502 @@
+"""Fault-tolerance plane (paper §8): checkpointer crash-safety satellites,
+SampleBuffer traj_id dedup, rollout snapshot/restore roundtrips (byte-
+identical trajectories + KV slots across attention / rwkv / hybrid
+stacks), supervised failure recovery, and the trainer-restart path with
+corrupt-checkpoint fallback."""
+import os
+import pickle
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as CK
+from repro.checkpoint.checkpointer import CorruptCheckpointError
+from repro.configs import get_config
+from repro.core import (EngineHandle, LiveRLRunner, LLMProxy, RunnerConfig,
+                        ServerlessPlatform)
+from repro.core.buffer import SampleBuffer
+from repro.core.envmanager import EMState, EnvManager
+from repro.core.serverless import ServerlessError
+from repro.data.pipeline import Trajectory
+from repro.envs import make_env
+from repro.ft import (FTConfig, FTSupervisor, FailureInjector,
+                      RolloutSnapshot, RolloutSnapshotter, restore_latest)
+from repro.ft.snapshot import _handoff_record
+from repro.models import Model
+from repro.rewards.rule_based import REWARD_FNS
+from repro.rl.engine import GenRequest, InferenceEngine
+from repro.rl.trainer import (default_optimizer, init_train_state,
+                              make_grpo_train_step)
+
+
+# ---------------------------------------------------------------------------
+# checkpointer satellites
+# ---------------------------------------------------------------------------
+def _tree(x=0.0):
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3) + x,
+            "b": np.float32(x)}
+
+
+def test_save_creates_missing_path(tmp_path, monkeypatch):
+    """A nonexistent target dir is created up front and the staging dir
+    lives inside it — never in the CWD."""
+    monkeypatch.chdir(tmp_path)
+    target = tmp_path / "does" / "not" / "exist"
+    out = CK.save(str(target), _tree(), step=3)
+    assert os.path.isdir(out)
+    restored, step = CK.restore(str(target), _tree())
+    assert step == 3
+    np.testing.assert_array_equal(restored["w"], _tree()["w"])
+    stray = [d for d in os.listdir(tmp_path)
+             if d.startswith(".tmp_ckpt_")]
+    assert not stray, f"staging dirs leaked into CWD: {stray}"
+
+
+def test_keep_last_prunes_and_sweeps_tmp(tmp_path):
+    path = str(tmp_path)
+    for s in range(5):
+        CK.save(path, _tree(s), step=s)
+    os.makedirs(tmp_path / ".tmp_ckpt_dead")     # crashed-save leftover
+    CK.save(path, _tree(5), step=5, keep_last=2)
+    assert CK.steps(path) == [4, 5]
+    assert not any(d.startswith(".tmp_ckpt_") for d in os.listdir(path))
+
+
+def test_latest_step_ignores_stale_staging_dirs(tmp_path):
+    path = str(tmp_path)
+    CK.save(path, _tree(), step=7)
+    os.makedirs(tmp_path / ".tmp_ckpt_crashed")
+    (tmp_path / ".tmp_ckpt_crashed" / "arrays.npz").write_bytes(b"partial")
+    (tmp_path / "step_notanumber").mkdir()
+    assert CK.latest_step(path) == 7
+
+
+def test_crash_mid_save_leaves_previous_readable(tmp_path):
+    """A save that dies before the atomic replace must not disturb the
+    previous latest_step."""
+    path = str(tmp_path)
+    CK.save(path, _tree(1), step=1)
+    stage = tmp_path / ".tmp_ckpt_inflight"
+    stage.mkdir()
+    (stage / "arrays.npz").write_bytes(b"truncated half-written npz")
+    assert CK.latest_step(path) == 1
+    restored, step = CK.restore(str(path), _tree())
+    assert step == 1 and float(restored["b"]) == 1.0
+
+
+def test_restore_mismatch_names_step_and_counts(tmp_path):
+    path = str(tmp_path)
+    CK.save(path, _tree(), step=4)
+    with pytest.raises(ValueError, match=r"step 4.*template has 3.*2"):
+        CK.restore(path, {"w": np.zeros((2, 3), np.float32),
+                          "b": 0.0, "extra": 0.0})
+
+
+def test_restore_corrupt_npz_and_meta(tmp_path):
+    path = str(tmp_path)
+    d = CK.save(path, _tree(), step=2)
+    (tmp_path / "step_00000002" / "arrays.npz").write_bytes(b"garbage")
+    with pytest.raises(CorruptCheckpointError, match="step 2"):
+        CK.restore(path, _tree())
+    CK.save(path, _tree(), step=2)
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CorruptCheckpointError, match="step 2"):
+        CK.restore(path, _tree())
+
+
+# ---------------------------------------------------------------------------
+# SampleBuffer: dedup + snapshot/restore
+# ---------------------------------------------------------------------------
+def _traj(tid, sv=0):
+    return Trajectory(traj_id=tid, task="t", tokens=[1, 2], loss_mask=[0, 1],
+                      logprobs=[0.0, -0.5], reward=1.0, start_version=sv)
+
+
+def test_buffer_dedups_consumed_replays():
+    buf = SampleBuffer(alpha=4)
+    buf.put(_traj("a"))
+    buf.put(_traj("b"))
+    assert [t.traj_id for t in buf.get_batch(2)] == ["a", "b"]
+    buf.put(_traj("a"))            # replay after a plane restore
+    assert buf.size() == 0
+    assert buf.total_deduped == 1
+
+
+def test_buffer_dedups_buffered_duplicate():
+    """A replay of a trajectory still WAITING in the buffer must not
+    produce a second copy (first completion buffered, plane restored,
+    trajectory regenerated)."""
+    buf = SampleBuffer(alpha=4)
+    buf.put(_traj("a"))
+    buf.put(_traj("a"))
+    assert buf.size() == 1 and buf.total_deduped == 1
+    # after consumption the id moves to the consumed set
+    buf.get_batch(1)
+    buf.put(_traj("a"))
+    assert buf.size() == 0 and buf.total_deduped == 2
+
+
+def test_buffer_snapshot_restore_preserves_fifo_and_consumed():
+    buf = SampleBuffer(alpha=8)
+    for tid in ("a", "b", "c"):
+        buf.put(_traj(tid))
+    buf.get_batch(1)               # consume "a"
+    state = buf.snapshot_state()
+    buf2 = SampleBuffer(alpha=8)
+    buf2.restore_state(state)
+    assert [t.traj_id for t in buf2.get_batch(2)] == ["b", "c"]
+    buf2.put(_traj("a"))           # consumed frontier survived
+    assert buf2.total_deduped == 1
+    buf2.put(_traj("d"))           # seq counter advanced past the restore
+    assert buf2.get_batch(1)[0].seq > state["seq"] - 1
+
+
+# ---------------------------------------------------------------------------
+# serverless failure injection + EnvManager records
+# ---------------------------------------------------------------------------
+def test_serverless_fail_next():
+    sls = ServerlessPlatform()
+    sls.deploy("fc://t/r", lambda p: 1.0)
+    sls.fail_next("fc://t/r")
+    with pytest.raises(ServerlessError):
+        sls.invoke("fc://t/r", {})
+    assert sls.stats.failures == 1
+    assert sls.invoke("fc://t/r", {}) == 1.0
+
+
+class _StubProxy:
+    def __init__(self):
+        self.aborted = []
+        self.submitted = []
+
+    def abort(self, rid):
+        self.aborted.append(rid)
+
+    def submit(self, req, callback=None):
+        self.submitted.append(req)
+
+
+def test_envmanager_snapshot_restore_roundtrip():
+    env = make_env("game", seed=11)
+    proxy = _StubProxy()
+    em = EnvManager(env, proxy, tag="game", group_id="g0")
+    em.start(version=3, seed=11)
+    assert em.state.name == "GENERATING"
+    rec = em.snapshot_state()
+    rec = pickle.loads(pickle.dumps(rec))     # disk-shaped roundtrip
+    em2 = EnvManager.restore_from(rec, proxy)
+    assert em2.em_id == em.em_id
+    assert em2.tokens == em.tokens and em2.loss_mask == em.loss_mask
+    assert em2.logprobs == em.logprobs
+    assert em2.start_version == 3 and em2._active_req == em._active_req
+    assert em2.env.a == em.env.a and em2.env.b == em.env.b
+    # snapshotting twice must not perturb the request-id sequence
+    assert em.snapshot_state()["req_counter"] == rec["req_counter"]
+
+
+def test_envmanager_fail_is_idempotent_and_aborts():
+    env = make_env("game", seed=1)
+    proxy = _StubProxy()
+    done = []
+    em = EnvManager(env, proxy, tag="game", on_complete=done.append)
+    em.start(version=0, seed=1)
+    rid = em._active_req
+    em.fail()
+    em.fail()
+    assert em.state.name == "FAILED"
+    assert proxy.aborted == [rid]
+    assert done == [em]
+
+
+# ---------------------------------------------------------------------------
+# rollout snapshot roundtrip: byte-identical KV slots + resume parity
+# ---------------------------------------------------------------------------
+def _empty_buffer_state():
+    return {"items": [], "seq": 0, "version": 0, "consumed": set(),
+            "total_put": 0, "total_evicted": 0, "total_consumed": 0,
+            "total_deduped": 0}
+
+
+def _roundtrip_stack(cfg, tmp_path, max_new=20):
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = [1, 5, 7, 9]
+
+    ref_eng = InferenceEngine(model, params, max_slots=2, max_len=64,
+                              seed=5)
+    ref_eng.add_request(GenRequest("r", list(prompt),
+                                   max_new_tokens=max_new,
+                                   temperature=0.0))
+    ref_eng.run_until_idle()
+    ref = ref_eng.pop_result("r")
+
+    eng = InferenceEngine(model, params, max_slots=2, max_len=64, seed=5)
+    eng.add_request(GenRequest("r", list(prompt), max_new_tokens=max_new,
+                               temperature=0.0))
+    eng.step()                     # partial generation (one macro-step)
+    [hf] = eng.snapshot_slots()
+    rec = _handoff_record(hf)
+    traj = _traj("byte-roundtrip")
+    snap = RolloutSnapshot(
+        step=0, version=0, runner_version=0, mode="sync",
+        buffer=_empty_buffer_state(), in_hand=[traj], prev_fetched=-1,
+        pending_rewards=[], ems=[],
+        engines=[{"name": "e0", "role": "colocated",
+                  "key": eng.snapshot_rng(), "weight_version": 0,
+                  "slots": [rec], "queued": []}],
+        sampler_rng=random.Random(0).getstate(), seed_counter=0,
+        em_counter=0)
+    snapper = RolloutSnapshotter(str(tmp_path), keep_last=2)
+    snapper.save(snap)
+    loaded = snapper.load()
+
+    # byte-identical KV slot + trajectory across the disk roundtrip
+    lrec = loaded.engines[0]["slots"][0]
+    assert len(lrec["cache_leaves"]) == len(rec["cache_leaves"])
+    for a, b in zip(rec["cache_leaves"], lrec["cache_leaves"]):
+        a = np.asarray(a)
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+    assert lrec["tokens"] == rec["tokens"]
+    assert lrec["new_tokens"] == rec["new_tokens"]
+    assert lrec["logprobs"] == rec["logprobs"]
+    lt = loaded.in_hand[0]
+    assert (lt.tokens, lt.loss_mask, lt.logprobs, lt.reward) == \
+        (traj.tokens, traj.loss_mask, traj.logprobs, traj.reward)
+
+    # resume on a fresh engine: the completed stream matches the
+    # uninterrupted reference exactly (greedy)
+    eng2 = InferenceEngine(model, params, max_slots=2, max_len=64, seed=5)
+    tmpl_leaves, treedef = jax.tree.flatten(
+        model.extract_cache_slot(eng2._cache, 0))
+    out = []
+    eng2.on_finish = out.append
+    eng2.inject(snapper._rebuild_handoff(lrec, treedef, tmpl_leaves))
+    eng2.run_until_idle()
+    assert out[0].tokens == ref.tokens
+    assert out[0].logprobs[len(lrec["new_tokens"]):] == \
+        ref.logprobs[len(lrec["new_tokens"]):]
+
+
+def test_snapshot_roundtrip_attention(tmp_path):
+    _roundtrip_stack(get_config("tiny"), tmp_path)
+
+
+@pytest.mark.slow
+def test_snapshot_roundtrip_rwkv(tmp_path):
+    _roundtrip_stack(get_config("rwkv6-7b").reduced(), tmp_path,
+                     max_new=10)
+
+
+@pytest.mark.slow
+def test_snapshot_roundtrip_hybrid(tmp_path):
+    _roundtrip_stack(get_config("jamba-v0.1-52b").reduced(), tmp_path,
+                     max_new=10)
+
+
+def test_rebuild_handoff_leaf_count_mismatch(tmp_path):
+    cfg = get_config("tiny")
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = InferenceEngine(model, params, max_slots=2, max_len=64, seed=5)
+    eng.add_request(GenRequest("r", [1, 5], max_new_tokens=20,
+                               temperature=0.0))
+    eng.step()                     # one macro-step: still in flight
+    [hf] = eng.snapshot_slots()
+    rec = _handoff_record(hf)
+    rec["cache_leaves"] = rec["cache_leaves"][:-1]
+    snapper = RolloutSnapshotter()
+    tmpl_leaves, treedef = jax.tree.flatten(
+        model.extract_cache_slot(eng._cache, 0))
+    with pytest.raises(ValueError, match="leaf count mismatch"):
+        snapper._rebuild_handoff(rec, treedef, tmpl_leaves)
+
+
+# ---------------------------------------------------------------------------
+# live supervisor: runner-scale scenarios
+# ---------------------------------------------------------------------------
+def _fresh_state():
+    cfg = get_config("tiny")
+    model = Model(cfg, remat=False)
+    return init_train_state(model, jax.random.PRNGKey(0),
+                            default_optimizer(1e-3))
+
+
+def _make_runner_factory(mode="sync", tasks=("game",), max_new=16,
+                         max_len=320):
+    def make(state):
+        cfg = get_config("tiny")
+        model = Model(cfg, remat=False)
+        opt = default_optimizer(1e-3)
+        eng = InferenceEngine(model, state.params, max_slots=8,
+                              max_len=max_len, seed=3)
+        proxy = LLMProxy([EngineHandle(eng, "local")])
+        return LiveRLRunner(
+            RunnerConfig(batch_size=4, group_size=2, alpha=2, mode=mode,
+                         tasks=tasks, max_new_tokens=max_new,
+                         temperature=0.0),
+            proxy, state, jax.jit(make_grpo_train_step(model, opt)),
+            ServerlessPlatform(), REWARD_FNS["format_bonus"],
+            seq_len=max_len)
+    return make
+
+
+@pytest.mark.slow
+def test_trainer_restart_parity_and_dedup(tmp_path):
+    """Kill-and-restore greedy parity: the restored run trains the same
+    trajectory streams as an uninterrupted reference, and no traj_id
+    trains twice across the surviving lineage."""
+    make = _make_runner_factory("sync")
+    S, KILL = 4, 2
+
+    def tap(runner):
+        runner._stream = []
+        orig = runner._pack
+        runner._pack = lambda t: (runner._stream.append(
+            [(tuple(x.tokens), round(float(x.reward), 6)) for x in t])
+            or orig(t))
+
+    ref = make(_fresh_state())
+    tap(ref)
+    with ref:
+        ref.run_steps(S)
+
+    victim = make(_fresh_state())
+    sup = FTSupervisor(victim, FTConfig(snapshot_every=1, keep_last=4),
+                       ckpt_dir=str(tmp_path))
+    sup.run_steps(KILL)
+    sup.snapshotter.wait()
+    victim.close()
+    sup.close()
+
+    restored, start = restore_latest(str(tmp_path), _fresh_state(), make)
+    tap(restored)
+    with restored:
+        restored.run_steps(S - start)
+    assert restored._stream == ref._stream[start:]
+    lineage = [i for b in victim.trained_log[:start] for i in b] + \
+        [i for b in restored.trained_log for i in b]
+    assert len(lineage) == len(set(lineage))
+    assert restored.buffer.total_deduped == 0     # cold restore: nothing
+    #                                               replays past the frontier
+
+
+@pytest.mark.slow
+def test_restore_latest_corrupt_pair_falls_back(tmp_path):
+    make = _make_runner_factory("sync")
+    victim = make(_fresh_state())
+    sup = FTSupervisor(victim, FTConfig(snapshot_every=1, keep_last=5),
+                       ckpt_dir=str(tmp_path))
+    sup.run_steps(3)
+    sup.snapshotter.wait()
+    victim.close()
+    sup.close()
+    latest = CK.latest_step(str(tmp_path))
+    (tmp_path / f"step_{latest:08d}" / "arrays.npz").write_bytes(b"bad")
+    log = []
+    restored, step = restore_latest(str(tmp_path), _fresh_state(), make,
+                                    log=log)
+    assert step == latest - 1
+    assert any("checkpoint corrupt, falling back" in line for line in log)
+    restored.close()
+
+
+@pytest.mark.slow
+def test_engine_failure_supervised_recovery():
+    make = _make_runner_factory("rollart", tasks=("math",), max_new=24,
+                                max_len=512)
+    runner = make(_fresh_state())
+    sup = FTSupervisor(runner, FTConfig(snapshot_every=1),
+                       injector=FailureInjector(schedule={1: "engine"},
+                                                seed=3))
+    with runner:
+        sup.run_steps(3)
+    sup.close()
+    assert len(runner.history) == 3
+    [ev] = sup.events
+    assert ev.kind == "engine" and ev.recovered
+    assert runner.proxy.handles[0].engine.crashes == 1
+    ids = [i for b in runner.trained_log for i in b]
+    assert len(ids) == len(set(ids))
+
+
+@pytest.mark.slow
+def test_engine_failure_reinjects_snapshot_kv():
+    """Deterministic reinject-path coverage (regression: recovery once
+    dropped the routes it had just re-registered, wedging every
+    snapshot-covered request): capture a barrier snapshot while requests
+    are mid-flight, advance, crash the engine, recover — the SAME request
+    ids must re-home via KV reinjection and then run to completion."""
+    make = _make_runner_factory("sync", tasks=("math",), max_new=64,
+                                max_len=640)
+    runner = make(_fresh_state())
+    sup = FTSupervisor(runner, FTConfig(snapshot_every=1),
+                       injector=FailureInjector(seed=3))
+    try:
+        runner._ensure_inflight()
+        for _ in range(2):
+            runner.proxy.pump()              # mid-generation (64-token
+            #                                  actions, K=8 per pump)
+        sup.last_snapshot = sup.snapshotter.capture(runner, 0)
+        covered = {r["active_req"] for r in sup.last_snapshot.ems
+                   if r["active_req"]}
+        assert covered, "no request was in flight at the snapshot"
+        for _ in range(2):
+            runner.proxy.pump()              # work advances PAST it
+        ev = sup.inject_and_recover("engine", 0)
+        assert runner.proxy.recoveries >= 1, "reinject path not exercised"
+        assert ev.recovered and ev.recovered_tokens > 0
+        # the re-homed requests must still be routed AND complete
+        for rid in ev.lost_rids:
+            if rid in covered:
+                assert runner.proxy.routed(rid)
+        for _ in range(runner.cfg.max_pump_steps):
+            if not any(em.state == EMState.GENERATING
+                       for em in runner.active):
+                break
+            runner.proxy.pump()
+            runner._drain_completions()
+            runner._drain_rewards()
+        assert not any(em.state == EMState.GENERATING
+                       for em in runner.active), \
+            "a recovered request never completed (lost route/callback)"
+    finally:
+        runner.close()
+        sup.close()
+
+
+@pytest.mark.slow
+def test_rollout_plane_loss_recovery_dedups():
+    make = _make_runner_factory("rollart", tasks=("math",), max_new=24,
+                                max_len=512)
+    runner = make(_fresh_state())
+    sup = FTSupervisor(runner, FTConfig(snapshot_every=1),
+                       injector=FailureInjector(schedule={1: "rollout"},
+                                                seed=3))
+    with runner:
+        sup.run_steps(4)
+    sup.close()
+    [ev] = sup.events
+    assert ev.kind == "rollout" and ev.recovered
+    ids = [i for b in runner.trained_log for i in b]
+    assert len(ids) == len(set(ids)), "a replayed trajectory trained twice"
+
+
+@pytest.mark.slow
+def test_reward_failure_retried_by_drain():
+    make = _make_runner_factory("rollart", tasks=("math",), max_new=24,
+                                max_len=512)
+    runner = make(_fresh_state())
+    sup = FTSupervisor(runner, FTConfig(snapshot_every=1),
+                       injector=FailureInjector(schedule={0: "reward",
+                                                          1: "reward"},
+                                                seed=3))
+    with runner:
+        sup.run_steps(4)
+    sup.close()
+    assert len(runner.history) == 4
+    assert runner.reward_retries >= 1
+    assert all(e.recovered for e in sup.events)
