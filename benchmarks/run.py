@@ -27,6 +27,7 @@ ALL = [
     "pd_disagg",        # Table 5
     "pd_disagg_live",   # Table 5 cross-check on the real engines
     "decode_hotpath",   # device-resident decode: K-step dispatch + donation
+    "async_overlap",    # async rollout/train overlap on the live plane
     "fault_tolerance",  # §8: rollout checkpoint/restore vs scratch restart
     "kernels_bench",
     "roofline",         # §Roofline from the dry-run artifacts
@@ -40,7 +41,22 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="skip the slowest sweeps")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registry (name,fast) and exit; fails "
+                         "if any registered benchmark does not resolve")
     args = ap.parse_args(argv)
+    if args.list:
+        bad = 0
+        for name in ALL:
+            try:
+                mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+                ok = callable(getattr(mod, "run", None))
+            except Exception:  # noqa: BLE001
+                ok = False
+            bad += not ok
+            tag = "fast-skip" if name in FAST_SKIP else "fast"
+            print(f"{name},{tag}" + ("" if ok else ",UNRESOLVED"))
+        return 1 if bad else 0
     names = args.only or [n for n in ALL
                           if not (args.fast and n in FAST_SKIP)]
     header()

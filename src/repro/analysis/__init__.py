@@ -1,0 +1,11 @@
+"""Concurrency & donation static-analysis plane.
+
+Run ``python -m repro.analysis src tests`` (see README "Static
+analysis"). Programmatic API: :func:`analyze_source` for in-memory
+snippets (used by the test fixtures) and :func:`analyze_paths` for
+trees; both return :class:`repro.analysis.findings.Finding` lists.
+"""
+from repro.analysis.findings import RULES, Finding
+from repro.analysis.runner import analyze_paths, analyze_source, main
+
+__all__ = ["RULES", "Finding", "analyze_paths", "analyze_source", "main"]

@@ -1,0 +1,106 @@
+"""Annotation grammar of the analysis plane, parsed from real comment
+tokens (``tokenize``), never from raw line scans — so annotation-shaped
+text inside string literals (e.g. the fixture snippets in
+``tests/test_analysis.py``) is not misread as an annotation.
+
+Grammar (each marker must START the comment):
+
+- ``# guarded by: <lock>`` — trailing on the assignment that introduces a
+  shared attribute: every read/write of that attribute must happen under
+  ``with self.<lock>:`` (or inside a method annotated as requiring it).
+- ``# requires: <lock>[, <lock>...]`` — on a ``def`` line (or the pure
+  comment line directly above it): the method is caller-locked; callers
+  must already hold the named locks.
+- ``# analysis: ignore[<rule-id>[, <rule-id>...]] <justification>`` —
+  suppress findings of the listed rules on this line (trailing comment)
+  or on the next line (pure comment line). A justification is expected;
+  the bracket list is validated against the rule registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, List, Set
+
+from repro.analysis.findings import RULES, Finding
+
+_GUARD_RE = re.compile(r"^guarded\s+by:\s*([A-Za-z_]\w*)\s*$")
+_REQ_RE = re.compile(r"^requires:\s*([A-Za-z_]\w*(?:\s*,\s*[A-Za-z_]\w*)*)")
+_IGN_RE = re.compile(r"^analysis:\s*ignore\[([^\]]*)\]")
+
+
+@dataclasses.dataclass
+class Annotations:
+    """Per-file annotation map, keyed by physical (1-indexed) line."""
+    guards: Dict[int, str] = dataclasses.field(default_factory=dict)
+    requires: Dict[int, List[str]] = dataclasses.field(default_factory=dict)
+    ignores: Dict[int, Set[str]] = dataclasses.field(default_factory=dict)
+    # lines whose ignore/requires comment stands alone (applies downward)
+    pure: Set[int] = dataclasses.field(default_factory=set)
+    errors: List[Finding] = dataclasses.field(default_factory=list)
+
+    def is_ignored(self, line: int, rule: str) -> bool:
+        """True when ``rule`` is suppressed at ``line``: by a trailing
+        comment on the line itself, or an ignore comment anywhere in the
+        contiguous pure-comment block directly above it (so a suppression
+        can carry a multi-line justification)."""
+        rules = self.ignores.get(line)
+        if rules is not None and ("*" in rules or rule in rules):
+            return True
+        cand = line - 1
+        while cand in self.pure:
+            rules = self.ignores.get(cand)
+            if rules is not None:
+                return "*" in rules or rule in rules
+            cand -= 1
+        return False
+
+    def requires_for_def(self, def_line: int) -> List[str]:
+        """Locks a ``def`` at ``def_line`` declares via ``requires:`` —
+        trailing on the def line, or a pure comment directly above."""
+        out = list(self.requires.get(def_line, []))
+        if not out and (def_line - 1) in self.pure:
+            out = list(self.requires.get(def_line - 1, []))
+        return out
+
+
+def parse_annotations(source: str, filename: str) -> Annotations:
+    ann = Annotations()
+    lines = source.splitlines()
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return ann   # the AST pass reports the parse error
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        text = tok.string.lstrip("#").strip()
+        line, col = tok.start
+        if col == 0 or lines[line - 1][:col].strip() == "":
+            ann.pure.add(line)
+        m = _GUARD_RE.match(text)
+        if m:
+            ann.guards[line] = m.group(1)
+            continue
+        m = _REQ_RE.match(text)
+        if m:
+            ann.requires[line] = [s.strip()
+                                  for s in m.group(1).split(",") if s.strip()]
+            continue
+        m = _IGN_RE.match(text)
+        if m:
+            rules = {s.strip() for s in m.group(1).split(",") if s.strip()}
+            if not rules:
+                rules = {"*"}
+            for r in rules:
+                if r != "*" and r not in RULES:
+                    ann.errors.append(Finding(
+                        rule="bad-annotation", file=filename, line=line,
+                        context="<module>", symbol=r,
+                        message=f"unknown rule id {r!r} in analysis: "
+                                f"ignore[...] (known: {sorted(RULES)})",
+                        hint="fix the rule id typo or drop the suppression"))
+            ann.ignores[line] = rules
+    return ann

@@ -1,0 +1,75 @@
+"""Shrink-only baseline for the analysis plane.
+
+``results/analysis_baseline.json`` absorbs legacy findings so the
+checker could land green on a tree with pre-existing debt, while CI
+still fails the moment anything NEW appears or the debt grows:
+
+- a finding whose key ``(file, rule, context, symbol)`` is absent from
+  the baseline -> failure (new finding);
+- a key whose live count exceeds its baselined count -> failure (an old
+  problem got worse);
+- a baselined key with no live finding -> the runner prints it as a
+  resolved entry to DELETE from the file (exit 0, but the nag is loud).
+
+Keys are line-insensitive so unrelated code motion never churns the
+file. ``--update-baseline`` rewrites the file from the live findings
+but refuses to grow it — debt can only be paid down.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Tuple
+
+from repro.analysis.findings import Finding
+
+Key = Tuple[str, str, str, str]
+_FIELDS = ("file", "rule", "context", "symbol")
+
+
+def counts_of(findings: List[Finding]) -> Dict[Key, int]:
+    out: Dict[Key, int] = {}
+    for f in findings:
+        out[f.key()] = out.get(f.key(), 0) + 1
+    return out
+
+
+def load_baseline(path: str) -> Dict[Key, int]:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as fh:
+        data = json.load(fh)
+    out: Dict[Key, int] = {}
+    for e in data.get("entries", []):
+        key = tuple(e[f] for f in _FIELDS)
+        out[key] = out.get(key, 0) + int(e.get("count", 1))
+    return out
+
+
+def save_baseline(path: str, counts: Dict[Key, int]) -> None:
+    entries = [dict(zip(_FIELDS, key), count=n)
+               for key, n in sorted(counts.items())]
+    with open(path, "w") as fh:
+        json.dump({"entries": entries}, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def compare(live: Dict[Key, int],
+            base: Dict[Key, int]) -> Tuple[List[str], List[str]]:
+    """(failures, resolved-entry nags) from live findings vs baseline."""
+    failures: List[str] = []
+    for key, n in sorted(live.items()):
+        b = base.get(key, 0)
+        if b == 0:
+            failures.append(
+                "new finding (not in baseline): "
+                f"{key[0]} [{key[1]}] {key[2]}: {key[3]} (x{n})")
+        elif n > b:
+            failures.append(
+                f"baseline growth: {key[0]} [{key[1]}] {key[2]}: "
+                f"{key[3]} went {b} -> {n}")
+    resolved = [
+        f"resolved (delete from baseline): {key[0]} [{key[1]}] "
+        f"{key[2]}: {key[3]} (was x{n})"
+        for key, n in sorted(base.items()) if key not in live]
+    return failures, resolved

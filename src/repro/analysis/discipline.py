@@ -1,0 +1,72 @@
+"""Lock-discipline checker (rules ``guarded-attr`` and ``caller-locked``).
+
+For every class with a lock model (see :mod:`repro.analysis.model`):
+
+- every read/write of a ``# guarded by: <lock>`` attribute must happen
+  with the canonical lock held — via an enclosing ``with self.<lock>:``
+  or because the enclosing method is ``# requires: <lock>``;
+- every ``self.<method>()`` call of a ``# requires:``-annotated method
+  must happen with that method's required locks already held.
+
+``__init__`` bodies are exempt (object not yet shared), as are the
+guarded assignment lines themselves inside ``__init__``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from repro.analysis.annotations import Annotations
+from repro.analysis.findings import Finding
+from repro.analysis.model import ClassModel, HeldWalker, real_locks
+
+
+class _DisciplineWalker(HeldWalker):
+    def __init__(self, cm: ClassModel, ann: Annotations):
+        super().__init__(cm, ann)
+        self.in_init = False
+
+    def on_attr(self, node: ast.Attribute, held):
+        if self.in_init:
+            return
+        lock = self.cm.guards.get(node.attr)
+        if lock is None:
+            return
+        canon = self.cm.canon(lock)
+        if canon in real_locks(held):
+            return
+        self.emit(
+            rule="guarded-attr", line=node.lineno, symbol=node.attr,
+            message=f"access of self.{node.attr} (guarded by "
+                    f"{lock!r}) without holding it",
+            hint=f"wrap in `with self.{lock}:`, or annotate the enclosing "
+                 f"method `# requires: {lock}` if callers hold it")
+
+    def on_call(self, node: ast.Call, held):
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "self"):
+            return
+        req = self.cm.requires.get(fn.attr)
+        if not req:
+            return
+        missing = sorted(self.cm.canon_set(req) - real_locks(held))
+        if not missing:
+            return
+        self.emit(
+            rule="caller-locked", line=node.lineno, symbol=fn.attr,
+            message=f"call of caller-locked self.{fn.attr}() without "
+                    f"holding {', '.join(missing)}",
+            hint=f"acquire `with self.{missing[0]}:` before the call (the "
+                 f"callee is annotated `# requires:` and does not lock)")
+
+
+def check_discipline(cm: ClassModel, ann: Annotations) -> List[Finding]:
+    if not cm.guards and not cm.requires:
+        return []
+    w = _DisciplineWalker(cm, ann)
+    for fn in cm.methods:
+        w.in_init = fn.name == "__init__"
+        w.walk_method(fn)
+    return w.findings

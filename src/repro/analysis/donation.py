@@ -1,0 +1,361 @@
+"""Use-after-donate checker (rules ``use-after-donate`` and
+``donated-params``).
+
+JAX buffer donation (``donate_argnums``) invalidates the caller's Python
+reference: after ``new_cache, logits = self._decode_jit(params, tok,
+cache)`` the old ``cache`` array is deleted on device and any later read
+raises (or silently aliases garbage under some backends). The engine's
+decode/prefill family relies on immediate rebinding; this checker makes
+that contract machine-verified.
+
+Detection:
+
+- **donated defs** — ``@functools.partial(jax.jit, donate_argnums=...)``
+  decorators and ``x = jax.jit(fn, donate_argnums=...)`` assignments.
+  ``donate_argnums`` may be a literal int/tuple or a local name whose
+  assignments are unioned (handles ``donate = (2,) if self.donate else
+  ()`` — analysis assumes donation may happen).
+- **donated callables** — ``self._decode_jit = _decode`` style aliases
+  (attribute or plain name) of donated defs are tracked module-wide, so
+  call sites in other methods are checked.
+- **use-after-donate** — at each call of a donated callable, the
+  positional args at donated indices are captured; a linear (source
+  order) scan of the rest of the enclosing function flags any read of
+  that expression before it is rebound. The jit-call's own assignment
+  targets count as a rebind (``self._cache, out = self._decode_jit(...,
+  self._cache)`` is clean).
+- **donated-params** — at the jit definition, a donated position whose
+  parameter is named ``params`` (or ``*_params``) is flagged
+  unconditionally: params are shared with the trainer and sibling
+  engines, so donation invalidates every other holder.
+
+Known limitation (documented, not silent): the post-call scan is linear
+in source order — a donated reference re-read via a loop back-edge is
+missed. Keep donated dispatches straight-line, as the engine does.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.annotations import Annotations
+from repro.analysis.findings import Finding
+
+
+# --------------------------------------------------------------------------
+# expression identity
+
+
+def expr_key(node: ast.AST):
+    """Structural identity for Name/Attribute chains, ctx-insensitive.
+    Returns None for anything else (calls, subscripts, literals)."""
+    if isinstance(node, ast.Name):
+        return ("name", node.id)
+    if isinstance(node, ast.Attribute):
+        base = expr_key(node.value)
+        if base is None:
+            return None
+        return ("attr", base, node.attr)
+    return None
+
+
+# --------------------------------------------------------------------------
+# donate_argnums resolution
+
+
+def _int_consts(node: ast.AST) -> Set[int]:
+    return {n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, int)
+            and not isinstance(n.value, bool)}
+
+
+def _resolve_donate(kw_value: ast.AST,
+                    scope: Optional[ast.AST]) -> Set[int]:
+    """Union of all ints the donate_argnums expression can take."""
+    if isinstance(kw_value, ast.Name) and scope is not None:
+        out: Set[int] = set()
+        for stmt in ast.walk(scope):
+            if isinstance(stmt, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == kw_value.id
+                    for t in stmt.targets):
+                out |= _int_consts(stmt.value)
+        return out
+    return _int_consts(kw_value)
+
+
+def _is_jit(node: ast.AST) -> bool:
+    """Matches ``jax.jit`` / ``jit``."""
+    return ((isinstance(node, ast.Attribute) and node.attr == "jit")
+            or (isinstance(node, ast.Name) and node.id == "jit"))
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return ((isinstance(node, ast.Attribute) and node.attr == "partial")
+            or (isinstance(node, ast.Name) and node.id == "partial"))
+
+
+def _donate_from_call(call: ast.Call,
+                      scope: Optional[ast.AST]) -> Optional[Set[int]]:
+    """Donate set when ``call`` is a jit compilation with donation:
+    ``jax.jit(..., donate_argnums=D)`` or
+    ``functools.partial(jax.jit, donate_argnums=D)``. None otherwise."""
+    is_jit_call = _is_jit(call.func)
+    is_partial_jit = (_is_partial(call.func) and call.args
+                      and _is_jit(call.args[0]))
+    if not (is_jit_call or is_partial_jit):
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            return _resolve_donate(kw.value, scope)
+    return None
+
+
+# --------------------------------------------------------------------------
+# module-wide donated-callable registry
+
+
+class DonationRegistry:
+    def __init__(self):
+        # def name -> (donate indices, positional param names, def line)
+        self.defs: Dict[str, Tuple[Set[int], List[str], int]] = {}
+        # self.<attr> / bare-name aliases of donated defs -> donate set
+        self.attrs: Dict[str, Set[int]] = {}
+        self.names: Dict[str, Set[int]] = {}
+
+    def donate_for_call(self, func: ast.AST) -> Optional[Set[int]]:
+        if isinstance(func, ast.Name):
+            if func.id in self.names:
+                return self.names[func.id]
+            if func.id in self.defs:
+                return self.defs[func.id][0]
+        if (isinstance(func, ast.Attribute)
+                and isinstance(func.value, ast.Name)
+                and func.value.id == "self"
+                and func.attr in self.attrs):
+            return self.attrs[func.attr]
+        return None
+
+
+def build_registry(tree: ast.Module) -> DonationRegistry:
+    reg = DonationRegistry()
+
+    # donated defs: decorator form (scope for name resolution = the
+    # function enclosing the def, if any)
+    parents: Dict[ast.AST, ast.AST] = {}
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            parents[child] = parent
+
+    def enclosing_func(node: ast.AST) -> Optional[ast.AST]:
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = parents.get(cur)
+        return None
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                donate = _donate_from_call(dec, enclosing_func(node))
+                if donate:
+                    params = ([a.arg for a in node.args.posonlyargs]
+                              + [a.arg for a in node.args.args])
+                    reg.defs[node.name] = (donate, params, node.lineno)
+
+    # donated assignment forms: x = jax.jit(fn, donate_argnums=...),
+    # self._decode_jit = _decode, x = _decode
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        donate: Optional[Set[int]] = None
+        if isinstance(node.value, ast.Call):
+            donate = _donate_from_call(node.value, enclosing_func(node))
+        elif isinstance(node.value, ast.Name) \
+                and node.value.id in reg.defs:
+            donate = reg.defs[node.value.id][0]
+        if not donate:
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                reg.names[tgt.id] = donate
+            elif (isinstance(tgt, ast.Attribute)
+                  and isinstance(tgt.value, ast.Name)
+                  and tgt.value.id == "self"):
+                reg.attrs[tgt.attr] = donate
+    return reg
+
+
+# --------------------------------------------------------------------------
+# checks
+
+
+def _check_donated_params(reg: DonationRegistry, filename: str,
+                          ann: Annotations) -> List[Finding]:
+    out: List[Finding] = []
+    for name, (donate, params, line) in sorted(reg.defs.items()):
+        for i in sorted(donate):
+            if i < len(params) and (params[i] == "params"
+                                    or params[i].endswith("_params")):
+                f = Finding(
+                    rule="donated-params", file=filename, line=line,
+                    context=name, symbol=params[i],
+                    message=f"donate_argnums includes position {i} "
+                            f"({params[i]!r}) of jit {name!r}: params are "
+                            f"shared with the trainer and sibling engines",
+                    hint="donate only engine-private buffers (KV caches); "
+                         "drop the params index from donate_argnums")
+                if not ann.is_ignored(line, f.rule):
+                    out.append(f)
+    return out
+
+
+def _flat_stmts(fn: ast.AST) -> List[ast.stmt]:
+    """Statements of ``fn`` in source order, excluding nested function
+    bodies (their timelines are independent)."""
+    out: List[ast.stmt] = []
+
+    def rec(stmts):
+        for s in stmts:
+            out.append(s)
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                rec(getattr(s, field, []) or [])
+            for h in getattr(s, "handlers", []) or []:
+                rec(h.body)
+            for c in getattr(s, "cases", []) or []:
+                rec(c.body)
+    rec(fn.body)
+    return out
+
+
+def _writes_in(stmt: ast.stmt) -> List:
+    keys = []
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    for t in targets:
+        for n in ast.walk(t):
+            k = expr_key(n)
+            if k is not None:
+                keys.append(k)
+    return keys
+
+
+def _reads_in(stmt: ast.stmt, skip: ast.AST = None) -> List[Tuple[object, int]]:
+    """(key, line) for every Name/Attribute read in ``stmt``, excluding
+    pure Store contexts and the subtree ``skip``."""
+    skip_nodes = set(ast.walk(skip)) if skip is not None else set()
+    out = []
+    if isinstance(stmt, ast.AugAssign):
+        # `x += 1` reads x even though the target ctx is Store
+        k = expr_key(stmt.target)
+        if k is not None:
+            out.append((k, stmt.target.lineno))
+    for n in ast.walk(stmt):
+        if n in skip_nodes:
+            continue
+        if isinstance(n, (ast.Name, ast.Attribute)) \
+                and isinstance(getattr(n, "ctx", None), ast.Load):
+            k = expr_key(n)
+            if k is not None:
+                out.append((k, n.lineno))
+    return out
+
+
+def _own_exprs(stmt: ast.stmt) -> List[ast.AST]:
+    """Expression subtrees owned by ``stmt`` itself (not by a nested
+    statement) — where a donated call in this statement can live."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.target, stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        out: List[ast.AST] = []
+        for item in stmt.items:
+            out.append(item.context_expr)
+            if item.optional_vars is not None:
+                out.append(item.optional_vars)
+        return out
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef, ast.Try)):
+        return []
+    if hasattr(ast, "Match") and isinstance(stmt, ast.Match):
+        return [stmt.subject]
+    return [stmt]
+
+
+def _render_key(k) -> str:
+    if k[0] == "name":
+        return k[1]
+    return f"{_render_key(k[1])}.{k[2]}"
+
+
+def check_donation(tree: ast.Module, ann: Annotations,
+                   filename: str) -> List[Finding]:
+    reg = build_registry(tree)
+    findings = _check_donated_params(reg, filename, ann)
+    if not (reg.defs or reg.names or reg.attrs):
+        return findings
+
+    # enclosing-context names for findings
+    contexts: List[Tuple[ast.AST, str]] = []
+
+    def collect(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name = f"{prefix}{child.name}"
+                contexts.append((child, name))
+                collect(child, f"{name}.")
+            elif isinstance(child, ast.ClassDef):
+                collect(child, f"{prefix}{child.name}.")
+            else:
+                collect(child, prefix)
+    collect(tree, "")
+
+    for fn, ctx in contexts:
+        stmts = _flat_stmts(fn)
+        for idx, stmt in enumerate(stmts):
+            calls = [n for expr in _own_exprs(stmt)
+                     for n in ast.walk(expr) if isinstance(n, ast.Call)]
+            for call in calls:
+                donate = reg.donate_for_call(call.func)
+                if donate is None:
+                    continue
+                rebound = set(_writes_in(stmt))
+                for i in sorted(donate):
+                    if i >= len(call.args):
+                        continue
+                    k = expr_key(call.args[i])
+                    if k is None or k in rebound:
+                        continue
+                    # linear read-before-rebind scan of the rest of fn
+                    for later in stmts[idx + 1:]:
+                        hit = next((ln for kk, ln in _reads_in(later)
+                                    if kk == k), None)
+                        if hit is not None:
+                            f = Finding(
+                                rule="use-after-donate", file=filename,
+                                line=hit, context=ctx,
+                                symbol=_render_key(k),
+                                message=f"read of {_render_key(k)} after "
+                                        f"it was donated to a jit at line "
+                                        f"{call.lineno} (buffer is "
+                                        f"invalidated by donation)",
+                                hint="rebind the reference from the jit's "
+                                     "return value before any further "
+                                     "use, as the engine decode path does")
+                            if not ann.is_ignored(hit, f.rule):
+                                findings.append(f)
+                            break
+                        if k in _writes_in(later):
+                            break   # rebound before any read: clean
+    return findings

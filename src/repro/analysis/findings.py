@@ -1,0 +1,60 @@
+"""Finding model + rule registry for the concurrency/donation analysis
+plane (``python -m repro.analysis``).
+
+Every checker emits :class:`Finding` records carrying a rule id, a
+location, a stable identity key (used by the shrink-only baseline — line
+numbers are display-only so findings survive unrelated code motion), and
+a fix hint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# rule id -> one-line description (also what ``--list-rules`` prints and
+# what `# analysis: ignore[rule-id]` comments are validated against)
+RULES = {
+    "guarded-attr": (
+        "read/write of a `# guarded by:` attribute outside a `with "
+        "self.<lock>:` block (and outside a `# requires:` method)"),
+    "caller-locked": (
+        "call of a `# requires: <lock>` method without holding that lock"),
+    "lock-order": (
+        "inconsistent lock-acquisition order (a cycle in the inferred "
+        "lock DAG, including re-acquiring a held non-reentrant lock)"),
+    "blocking-under-lock": (
+        "blocking call (sleep / file I/O / block_until_ready / "
+        "ServerlessPlatform.invoke* / Thread.join) inside a lock region"),
+    "use-after-donate": (
+        "read of a buffer passed at a donate_argnums position after the "
+        "donated jit call, without rebinding it from the jit's result"),
+    "donated-params": (
+        "a `params` argument appears in a donate_argnums set (params are "
+        "shared with the trainer and sibling engines; donating "
+        "invalidates them for every other holder)"),
+    "bad-annotation": (
+        "malformed analysis annotation: unknown lock in `guarded by:` / "
+        "`requires:`, or unknown rule id in `analysis: ignore[...]`"),
+    "parse-error": "file could not be parsed (syntax error)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    file: str          # path as given to the runner (repo-relative in CI)
+    line: int          # 1-indexed; display only, NOT part of the identity
+    context: str       # "Class.method", "Class", or module-level function
+    symbol: str        # attribute / lock-cycle / blocked call / arg name
+    message: str
+    hint: str = ""
+
+    def key(self) -> Tuple[str, str, str, str]:
+        """Stable identity for baseline matching (line-insensitive)."""
+        return (self.file, self.rule, self.context, self.symbol)
+
+    def render(self) -> str:
+        out = f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out

@@ -1,0 +1,284 @@
+"""Per-class lock model + the held-lock AST walker shared by the
+lock-discipline and lock-order/blocking checkers.
+
+The model is built from the class body itself:
+
+- **locks**: attributes assigned ``threading.Lock()`` / ``RLock()`` /
+  ``Condition(...)`` anywhere in the class (normally ``__init__``).
+- **aliases**: ``self._cv = threading.Condition(self._lock)`` makes
+  ``_cv`` an alias of ``_lock`` — entering ``with self._cv:`` holds the
+  SAME underlying lock, and the checkers canonicalize both names.
+- **guards**: ``attr -> lock`` from ``# guarded by:`` comments on the
+  assignment lines that introduce the attribute.
+- **requires**: ``method -> {locks}`` from ``# requires:`` annotations —
+  the method body is analyzed as if those locks were already held, and
+  calling it without them is a ``caller-locked`` finding.
+
+Scope (documented limitation): the walker tracks ``self.<attr>``
+accesses and ``self.<lock>`` acquisitions only — cross-object accesses
+(``runner._pending_rewards`` from the failure injector, proxy reads of
+engine counters) are outside the per-class model and must be protected
+by design (e.g. the runner's quiescent-barrier contract).
+
+``__init__`` is exempt from guard checking: the object is not shared
+before construction completes.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.annotations import Annotations
+from repro.analysis.findings import Finding
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition"}
+# with-items that LOOK like locks on foreign objects (``with
+# runner._completed_lock:``): tracked as anonymous held regions for the
+# blocking-under-lock rule, but never satisfy a guard.
+_FOREIGN_LOCK_RE = re.compile(r"(_lock$|_cv$|^lock$)")
+
+
+def _ctor_name(call: ast.AST) -> Optional[str]:
+    """'Lock'/'RLock'/'Condition' when ``call`` constructs one."""
+    if not isinstance(call, ast.Call):
+        return None
+    fn = call.func
+    if isinstance(fn, ast.Name) and fn.id in _LOCK_CTORS:
+        return fn.id
+    if isinstance(fn, ast.Attribute) and fn.attr in _LOCK_CTORS:
+        return fn.attr
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+@dataclasses.dataclass
+class ClassModel:
+    name: str
+    node: ast.ClassDef
+    filename: str
+    locks: Set[str] = dataclasses.field(default_factory=set)
+    aliases: Dict[str, str] = dataclasses.field(default_factory=dict)
+    guards: Dict[str, str] = dataclasses.field(default_factory=dict)
+    guard_lines: Dict[str, int] = dataclasses.field(default_factory=dict)
+    requires: Dict[str, Set[str]] = dataclasses.field(default_factory=dict)
+    methods: List[ast.FunctionDef] = dataclasses.field(default_factory=list)
+    errors: List[Finding] = dataclasses.field(default_factory=list)
+
+    def canon(self, lock: str) -> str:
+        return self.aliases.get(lock, lock)
+
+    def canon_set(self, locks) -> Set[str]:
+        return {self.canon(x) for x in locks}
+
+
+def build_class_model(node: ast.ClassDef, ann: Annotations,
+                      filename: str) -> ClassModel:
+    cm = ClassModel(name=node.name, node=node, filename=filename)
+    for fn in node.body:
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            cm.methods.append(fn)
+
+    # pass 1: lock declarations + aliases (anywhere in the class body)
+    for stmt in ast.walk(node):
+        if not isinstance(stmt, ast.Assign):
+            continue
+        ctor = _ctor_name(stmt.value)
+        if ctor is None:
+            continue
+        for tgt in stmt.targets:
+            attr = _self_attr(tgt)
+            if attr is None:
+                continue
+            cm.locks.add(attr)
+            if ctor == "Condition" and stmt.value.args:
+                base = _self_attr(stmt.value.args[0])
+                if base is not None:
+                    cm.aliases[attr] = base
+                    cm.locks.add(base)
+
+    # pass 2: guarded-attribute annotations on assignment lines
+    for stmt in ast.walk(node):
+        if not isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            continue
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        end = getattr(stmt, "end_lineno", stmt.lineno) or stmt.lineno
+        lock = next((ann.guards[ln]
+                     for ln in range(stmt.lineno, end + 1)
+                     if ln in ann.guards), None)
+        if lock is None:
+            continue
+        for tgt in targets:
+            attr = _self_attr(tgt)
+            if attr is None:
+                continue
+            if lock not in cm.locks and lock not in cm.aliases:
+                cm.errors.append(Finding(
+                    rule="bad-annotation", file=filename, line=stmt.lineno,
+                    context=cm.name, symbol=attr,
+                    message=f"attribute {attr!r} is `guarded by: {lock}` "
+                            f"but {cm.name} declares no lock named "
+                            f"{lock!r} (known: {sorted(cm.locks)})",
+                    hint="name a threading.Lock/RLock/Condition attribute "
+                         "assigned in this class"))
+                continue
+            cm.guards[attr] = lock
+            cm.guard_lines[attr] = stmt.lineno
+
+    # pass 3: method-level `requires:` annotations (the marker may sit on
+    # the def line, the pure comment above it, or — for multi-line
+    # signatures — any signature line before the body starts)
+    for fn in cm.methods:
+        req = ann.requires_for_def(fn.lineno)
+        if not req and fn.body:
+            req = next((list(ann.requires[ln])
+                        for ln in range(fn.lineno + 1, fn.body[0].lineno)
+                        if ln in ann.requires), [])
+        if not req:
+            continue
+        unknown = [x for x in req
+                   if x not in cm.locks and x not in cm.aliases]
+        for x in unknown:
+            cm.errors.append(Finding(
+                rule="bad-annotation", file=filename, line=fn.lineno,
+                context=f"{cm.name}.{fn.name}", symbol=x,
+                message=f"method requires unknown lock {x!r} "
+                        f"(known: {sorted(cm.locks)})",
+                hint="name a lock attribute declared in this class"))
+        cm.requires[fn.name] = {x for x in req if x not in unknown}
+    return cm
+
+
+class HeldWalker:
+    """Statement-level traversal of one method, tracking the set of locks
+    held at every point. Subclasses hook ``on_attr`` / ``on_call`` /
+    ``on_acquire``.
+
+    Held-set semantics:
+    - entering ``with self.<lock>:`` adds the canonical lock name for the
+      body (and fires ``on_acquire`` with the held-set BEFORE the add);
+    - a nested ``def`` / ``lambda`` body inherits the held set at its
+      definition point (right for the condition-predicate closures in
+      ``SampleBuffer.get_batch``; a closure stashed and called later
+      escapes this approximation — keep such closures lock-free);
+    - ``with`` on a foreign lock-looking attribute (``runner._lock``)
+      adds an anonymous ``?``-prefixed marker: it never satisfies a
+      guard but still arms the blocking-under-lock rule.
+    """
+
+    def __init__(self, cm: ClassModel, ann: Annotations):
+        self.cm = cm
+        self.ann = ann
+        self.fn: Optional[ast.FunctionDef] = None
+        self.findings: List[Finding] = []
+
+    # hooks -------------------------------------------------------------
+    def on_attr(self, node: ast.Attribute, held: Tuple[str, ...]):
+        pass
+
+    def on_call(self, node: ast.Call, held: Tuple[str, ...]):
+        pass
+
+    def on_acquire(self, lock: str, held: Tuple[str, ...], node: ast.AST):
+        pass
+
+    # traversal ---------------------------------------------------------
+    def walk_method(self, fn: ast.FunctionDef):
+        self.fn = fn
+        base = tuple(sorted(
+            self.cm.canon_set(self.cm.requires.get(fn.name, set()))))
+        self._block(fn.body, base)
+
+    def context(self) -> str:
+        return f"{self.cm.name}.{self.fn.name}" if self.fn else self.cm.name
+
+    def emit(self, **kw):
+        f = Finding(file=self.cm.filename, context=self.context(), **kw)
+        if not self.ann.is_ignored(f.line, f.rule):
+            self.findings.append(f)
+
+    def _acquired_name(self, expr: ast.AST) -> Tuple[Optional[str], bool]:
+        """(canonical lock name or anonymous marker, is_own_lock)."""
+        attr = _self_attr(expr)
+        if attr is not None and (attr in self.cm.locks
+                                 or attr in self.cm.aliases):
+            return self.cm.canon(attr), True
+        if isinstance(expr, ast.Attribute) \
+                and _FOREIGN_LOCK_RE.search(expr.attr):
+            return f"?{expr.attr}", False
+        return None, False
+
+    def _block(self, stmts, held: Tuple[str, ...]):
+        for s in stmts:
+            self._stmt(s, held)
+
+    def _stmt(self, s: ast.stmt, held: Tuple[str, ...]):
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            inner = list(held)
+            for item in s.items:
+                self._expr(item.context_expr, tuple(inner))
+                if item.optional_vars is not None:
+                    self._expr(item.optional_vars, tuple(inner))
+                name, own = self._acquired_name(item.context_expr)
+                if name is not None:
+                    if own:
+                        self.on_acquire(name, tuple(inner),
+                                        item.context_expr)
+                    inner.append(name)
+            self._block(s.body, tuple(inner))
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in s.decorator_list:
+                self._expr(dec, held)
+            self._block(s.body, held)        # closure: def-site held set
+        elif isinstance(s, ast.ClassDef):
+            self._block(s.body, held)
+        elif isinstance(s, ast.If):
+            self._expr(s.test, held)
+            self._block(s.body, held)
+            self._block(s.orelse, held)
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            self._expr(s.target, held)
+            self._expr(s.iter, held)
+            self._block(s.body, held)
+            self._block(s.orelse, held)
+        elif isinstance(s, ast.While):
+            self._expr(s.test, held)
+            self._block(s.body, held)
+            self._block(s.orelse, held)
+        elif isinstance(s, ast.Try):
+            self._block(s.body, held)
+            for h in s.handlers:
+                if h.type is not None:
+                    self._expr(h.type, held)
+                self._block(h.body, held)
+            self._block(s.orelse, held)
+            self._block(s.finalbody, held)
+        elif hasattr(ast, "Match") and isinstance(s, ast.Match):
+            self._expr(s.subject, held)
+            for case in s.cases:
+                if case.guard is not None:
+                    self._expr(case.guard, held)
+                self._block(case.body, held)
+        else:
+            self._expr(s, held)
+
+    def _expr(self, node: ast.AST, held: Tuple[str, ...]):
+        for n in ast.walk(node):
+            if isinstance(n, ast.Attribute) and _self_attr(n) is not None:
+                self.on_attr(n, held)
+            elif isinstance(n, ast.Call):
+                self.on_call(n, held)
+
+
+def real_locks(held) -> Set[str]:
+    """Drop the anonymous foreign-lock markers from a held set."""
+    return {h for h in held if not h.startswith("?")}

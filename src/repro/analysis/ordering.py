@@ -1,0 +1,190 @@
+"""Lock-order + blocking-under-lock checker.
+
+**lock-order** — per class, build the acquisition graph: an edge
+``A -> B`` means some code path acquires B while already holding A.
+Edges come from three places:
+
+- syntactically nested ``with self.A: ... with self.B:`` blocks;
+- a method annotated ``# requires: A`` that acquires B in its body;
+- interprocedural self-calls: if ``m()`` holds A when it calls
+  ``self.n()``, every lock n() can acquire (computed to fixed point over
+  the self-call graph) is ordered after A.
+
+Any cycle — including the self-loop of re-acquiring a held
+``threading.Lock`` (non-reentrant: instant deadlock) — is a finding.
+The graph is per-class; cross-class cycles (e.g. engine vs proxy) are
+out of scope and must be handled by design (documented in the engine
+module docstring).
+
+**blocking-under-lock** — flag calls from a blocklist made while any
+lock (own or foreign-looking) is held:
+
+- ``time.sleep``, ``open(...)``, ``np.savez``/``np.savez_compressed``/
+  ``np.load``, ``pickle.dump``/``pickle.load``, ``shutil.rmtree``,
+  ``os.replace`` — file I/O and sleeps serialize every sibling thread;
+- ``.block_until_ready()`` — synchronizes the device stream;
+- ``.invoke()`` / ``.invoke_async()`` — ServerlessPlatform entry points
+  (cold starts can take seconds);
+- ``.join()`` with no positional args — Thread.join (``str.join`` /
+  ``os.path.join`` always take one, so they pass);
+- ``.get_batch()`` — blocks on the buffer condition until data arrives.
+
+``.wait()`` / ``.wait_for()`` are deliberately allowed: a Condition
+releases its lock while waiting — that is the correct idiom.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.annotations import Annotations
+from repro.analysis.findings import Finding
+from repro.analysis.model import ClassModel, HeldWalker
+
+_BLOCKING_FUNCS = {
+    ("time", "sleep"), ("np", "savez"), ("np", "savez_compressed"),
+    ("np", "load"), ("numpy", "savez"), ("numpy", "savez_compressed"),
+    ("numpy", "load"), ("pickle", "dump"), ("pickle", "load"),
+    ("shutil", "rmtree"), ("os", "replace"),
+}
+_BLOCKING_METHODS = {"block_until_ready", "invoke", "invoke_async",
+                     "get_batch"}
+
+
+def _blocking_name(call: ast.Call):
+    """Human-readable name when ``call`` is on the blocklist, else None."""
+    fn = call.func
+    if isinstance(fn, ast.Name) and fn.id == "open":
+        return "open"
+    if isinstance(fn, ast.Attribute):
+        if isinstance(fn.value, ast.Name) \
+                and (fn.value.id, fn.attr) in _BLOCKING_FUNCS:
+            return f"{fn.value.id}.{fn.attr}"
+        if fn.attr in _BLOCKING_METHODS:
+            return f".{fn.attr}"
+        if fn.attr == "join" and not call.args:
+            # Thread.join() / Thread.join(timeout=...); str.join and
+            # os.path.join always pass a positional iterable/component.
+            return ".join"
+    return None
+
+
+class _OrderWalker(HeldWalker):
+    """Records acquisition edges + self-call sites, flags blocking calls
+    and same-lock re-acquisition as it walks."""
+
+    def __init__(self, cm: ClassModel, ann: Annotations):
+        super().__init__(cm, ann)
+        # edges[(A, B)] = first (line, method) where B acquired under A
+        self.edges: Dict[Tuple[str, str], Tuple[int, str]] = {}
+        # method -> set of locks it acquires directly
+        self.direct: Dict[str, Set[str]] = {}
+        # (caller, callee, held-at-call-site, line)
+        self.calls: List[Tuple[str, str, Tuple[str, ...], int]] = []
+
+    def walk_method(self, fn):
+        self.direct.setdefault(fn.name, set())
+        super().walk_method(fn)
+
+    def on_acquire(self, lock, held, node):
+        self.direct[self.fn.name].add(lock)
+        if lock in held:
+            self.emit(
+                rule="lock-order", line=node.lineno, symbol=lock,
+                message=f"re-acquisition of already-held {lock!r} "
+                        f"(non-reentrant Lock: self-deadlock)",
+                hint="hoist the inner `with`, or split the method with a "
+                     "`# requires:`-annotated locked helper")
+        for h in held:
+            if not h.startswith("?") and h != lock:
+                self.edges.setdefault((h, lock),
+                                      (node.lineno, self.fn.name))
+
+    def on_call(self, node: ast.Call, held):
+        name = _blocking_name(node)
+        if name is not None and held:
+            self.emit(
+                rule="blocking-under-lock", line=node.lineno, symbol=name,
+                message=f"blocking call {name}(...) while holding "
+                        f"{', '.join(h.lstrip('?') for h in held)}",
+                hint="stage the data under the lock, release it, then "
+                     "block (see RolloutSnapshotter.save for the idiom)")
+        fn = node.func
+        if (isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "self"):
+            self.calls.append((self.fn.name, fn.attr, held, node.lineno))
+
+
+def _closure(direct: Dict[str, Set[str]],
+             callgraph: Dict[str, Set[str]]) -> Dict[str, Set[str]]:
+    """A(m) = direct(m) ∪ ⋃ A(self-callees of m), to fixed point."""
+    acq = {m: set(s) for m, s in direct.items()}
+    changed = True
+    while changed:
+        changed = False
+        for m, callees in callgraph.items():
+            for c in callees:
+                extra = acq.get(c, set()) - acq.setdefault(m, set())
+                if extra:
+                    acq[m] |= extra
+                    changed = True
+    return acq
+
+
+def check_ordering(cm: ClassModel, ann: Annotations) -> List[Finding]:
+    # Always walk: a class with no locks of its OWN can still block under
+    # a foreign lock region (``with runner._lock: np.savez(...)``).
+    w = _OrderWalker(cm, ann)
+    for fn in cm.methods:
+        w.walk_method(fn)
+    findings = list(w.findings)
+
+    # interprocedural edges: held locks at a self-call site precede
+    # everything the callee (transitively) acquires
+    callgraph: Dict[str, Set[str]] = {}
+    for caller, callee, _held, _line in w.calls:
+        callgraph.setdefault(caller, set()).add(callee)
+    acq = _closure(w.direct, callgraph)
+    for caller, callee, held, line in w.calls:
+        for h in held:
+            if h.startswith("?"):
+                continue
+            for b in acq.get(callee, set()):
+                if b != h:
+                    w.edges.setdefault((h, b), (line, caller))
+
+    # cycle detection over the two-or-more-lock edges (self-loops were
+    # already flagged at the acquisition site)
+    graph: Dict[str, Set[str]] = {}
+    for (a, b) in w.edges:
+        graph.setdefault(a, set()).add(b)
+
+    reported: Set[frozenset] = set()
+
+    def dfs(start: str, node: str, path: List[str], seen: Set[str]):
+        for nxt in sorted(graph.get(node, ())):
+            if nxt == start and len(path) > 1:
+                cyc = frozenset(path)
+                if cyc in reported:
+                    continue
+                reported.add(cyc)
+                line, meth = w.edges[(path[-1], start)]
+                order = " -> ".join(path + [start])
+                f = Finding(
+                    rule="lock-order", file=cm.filename, line=line,
+                    context=f"{cm.name}.{meth}",
+                    symbol="<->".join(sorted(cyc)),
+                    message=f"inconsistent lock order: cycle {order} in "
+                            f"the acquisition graph of {cm.name}",
+                    hint="pick one canonical order and restructure the "
+                         "minority path (document it in the module "
+                         "docstring)")
+                if not ann.is_ignored(f.line, f.rule):
+                    findings.append(f)
+            elif nxt not in seen:
+                dfs(start, nxt, path + [nxt], seen | {nxt})
+
+    for start in sorted(graph):
+        dfs(start, start, [start], {start})
+    return findings

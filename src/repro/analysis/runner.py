@@ -1,0 +1,140 @@
+"""Entry point of the analysis plane: ``python -m repro.analysis``.
+
+Usage::
+
+    python -m repro.analysis src tests            # CI gate (with baseline)
+    python -m repro.analysis --no-baseline src    # raw findings
+    python -m repro.analysis --update-baseline src tests
+    python -m repro.analysis --list-rules
+
+Exit status: 0 when every finding is absorbed by the (shrink-only)
+baseline; 1 on any new finding, baseline growth, or parse error.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from typing import List
+
+from repro.analysis.annotations import parse_annotations
+from repro.analysis.baseline import (compare, counts_of, load_baseline,
+                                     save_baseline)
+from repro.analysis.discipline import check_discipline
+from repro.analysis.donation import check_donation
+from repro.analysis.findings import RULES, Finding
+from repro.analysis.model import build_class_model
+from repro.analysis.ordering import check_ordering
+
+DEFAULT_BASELINE = os.path.join("results", "analysis_baseline.json")
+
+
+def analyze_source(source: str, filename: str = "<memory>") -> List[Finding]:
+    """Run all rule families over one source string (the API the test
+    fixtures use)."""
+    ann = parse_annotations(source, filename)
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as exc:
+        return [Finding(
+            rule="parse-error", file=filename, line=exc.lineno or 0,
+            context="<module>", symbol="syntax",
+            message=f"could not parse: {exc.msg}", hint="fix the syntax")]
+    findings: List[Finding] = list(ann.errors)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        cm = build_class_model(node, ann, filename)
+        findings.extend(cm.errors)
+        findings.extend(check_discipline(cm, ann))
+        findings.extend(check_ordering(cm, ann))
+    findings.extend(check_donation(tree, ann, filename))
+    return sorted(findings, key=lambda f: (f.file, f.line, f.rule))
+
+
+def iter_py_files(paths: List[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in ("__pycache__", ".git"))
+            out.extend(os.path.join(root, f)
+                       for f in sorted(files) if f.endswith(".py"))
+    return out
+
+
+def analyze_paths(paths: List[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_py_files(paths):
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+        findings.extend(analyze_source(source, path))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="concurrency & donation static analysis")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories to analyze")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline; any finding fails")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from live findings "
+                         "(refuses to grow it)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule:22s} {desc}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (try: python -m repro.analysis src tests)")
+
+    findings = analyze_paths(args.paths)
+    for f in findings:
+        print(f.render())
+    live = counts_of(findings)
+
+    if args.no_baseline:
+        print(f"{len(findings)} finding(s), no baseline")
+        return 1 if findings else 0
+
+    base = load_baseline(args.baseline)
+
+    if args.update_baseline:
+        grow = [k for k, n in live.items() if n > base.get(k, 0)]
+        if base and grow:
+            print("refusing to grow the baseline (it is shrink-only); "
+                  "fix or `# analysis: ignore[...]` these instead:")
+            for k in sorted(grow):
+                print(f"  {k[0]} [{k[1]}] {k[2]}: {k[3]}")
+            return 1
+        save_baseline(args.baseline, live)
+        print(f"baseline written: {args.baseline} ({len(live)} entries)")
+        return 0
+
+    failures, resolved = compare(live, base)
+    for line in failures:
+        print(line)
+    for line in resolved:
+        print(line)
+    n = len(findings)
+    if failures:
+        print(f"FAIL: {len(failures)} violation(s) "
+              f"({n} finding(s) total, baseline {len(base)} entries)")
+        return 1
+    print(f"OK: {n} finding(s), all absorbed by baseline "
+          f"({len(base)} entries"
+          + (f", {len(resolved)} resolved — shrink the file" if resolved
+             else "") + ")")
+    return 0

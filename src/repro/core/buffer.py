@@ -35,19 +35,21 @@ class SampleBuffer:
     def __init__(self, alpha: int = 1,
                  on_evict: Optional[Callable[[Trajectory], None]] = None):
         self.alpha = alpha
-        self._seq = itertools.count()   # arrival order (deterministic FIFO)
-        self._items: List[Trajectory] = []
+        self._seq = itertools.count()              # guarded by: _lock
+        self._items: List[Trajectory] = []         # guarded by: _lock
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self.on_evict = on_evict
-        self.current_version = 0
-        self._consumed: set = set()     # traj_ids handed to the trainer
-        self._buffered: set = set()     # traj_ids currently in _items
+        self.current_version = 0                   # guarded by: _lock
+        # traj_ids handed to the trainer
+        self._consumed: set = set()                # guarded by: _lock
+        # traj_ids currently in _items
+        self._buffered: set = set()                # guarded by: _lock
         # stats
-        self.total_put = 0
-        self.total_evicted = 0
-        self.total_consumed = 0
-        self.total_deduped = 0
+        self.total_put = 0                         # guarded by: _lock
+        self.total_evicted = 0                     # guarded by: _lock
+        self.total_consumed = 0                    # guarded by: _lock
+        self.total_deduped = 0                     # guarded by: _lock
 
     # ------------------------------------------------------------------
     def put(self, traj: Trajectory):
@@ -72,7 +74,7 @@ class SampleBuffer:
     def _is_stale(self, traj: Trajectory, version: int) -> bool:
         return traj.start_version < version - self.alpha
 
-    def _evict(self, traj: Trajectory):
+    def _evict(self, traj: Trajectory):   # requires: _lock
         self._buffered.discard(traj.traj_id)
         self.total_evicted += 1
         if self.on_evict:
@@ -113,7 +115,7 @@ class SampleBuffer:
                 self._consumed.add(t.traj_id)
             return batch
 
-    def _evict_stale_locked(self) -> List[Trajectory]:
+    def _evict_stale_locked(self) -> List[Trajectory]:   # requires: _lock
         keep = []
         for t in self._items:
             if self._is_stale(t, self.current_version):

@@ -104,19 +104,21 @@ class LLMProxy:
                         else handles[0].pool)
         self.hw_affinity = dict(hw_affinity or {"default": default_pool})
         self.hw_affinity.setdefault("default", default_pool)
-        self._route: Dict[str, EngineHandle] = {}
-        self._callbacks: Dict[str, Callable[[GenResult], None]] = {}
-        self._abort_requested: set = set()
+        self._route: Dict[str, EngineHandle] = {}        # guarded by: _lock
+        self._callbacks: Dict[str, Callable[[GenResult], None]] = {}  # guarded by: _lock
+        self._abort_requested: set = set()               # guarded by: _lock
         self._lock = threading.Lock()
-        self.suspended = False
+        self.suspended = False      # bare flag, atomic under the GIL
         for h in handles:
             h.engine.on_finish = self._make_finish_hook(h)
-        # stats
-        self.requests = 0
-        self.aborted = 0
-        self.handoffs = 0
-        self.recoveries = 0            # snapshot re-injections (repro.ft)
-        self.routed_by_pool: Dict[str, int] = {}
+        # stats (engine hooks bump these from engine threads, so they
+        # share the routing lock; rebalancer state below does not — it is
+        # touched only by the single pump/control thread)
+        self.requests = 0                                # guarded by: _lock
+        self.aborted = 0                                 # guarded by: _lock
+        self.handoffs = 0                                # guarded by: _lock
+        self.recoveries = 0                              # guarded by: _lock
+        self.routed_by_pool: Dict[str, int] = {}         # guarded by: _lock
         # rebalancer state/stats
         self.role_switches = 0
         self.switch_migrations = 0     # in-flight KV moved by role switches
@@ -192,7 +194,10 @@ class LLMProxy:
             # summing to `requests` in both modes
             if self._route_handoff(handoff, src.pool,
                                    src.engine.weight_version):
-                self.handoffs += 1
+                # under the lock: several prefill engines can emit
+                # handoffs concurrently, and `+=` outside it loses counts
+                with self._lock:
+                    self.handoffs += 1
         return hook
 
     def _select(self, tag: str) -> EngineHandle:
@@ -459,28 +464,30 @@ class LLMProxy:
         return any(h.engine.has_pending for h in self.handles)
 
     def stats(self) -> Dict:
-        return {
-            "requests": self.requests,
-            "aborted": self.aborted,
-            "pd_disagg": self.pd_disagg,
-            "handoffs": self.handoffs,
-            "recoveries": self.recoveries,
-            "routed_by_pool": dict(self.routed_by_pool),
-            "role_switches": self.role_switches,
-            "switch_migrations": self.switch_migrations,
-            "switch_log": list(self.switch_log),
-            "engines": [
-                {"pool": h.pool, "name": h.name, "role": h.role,
-                 "steps": h.engine.steps,
-                 "busy_steps": h.engine.busy_steps,
-                 "decode_dispatches": h.engine.decode_dispatches,
-                 "steps_per_dispatch": h.engine.steps_per_dispatch,
-                 "prefill_tokens": h.engine.prefill_tokens,
-                 "decode_tokens": h.engine.decode_tokens,
-                 "handoffs_out": h.engine.handoffs_out,
-                 "handoffs_in": h.engine.handoffs_in}
-                for h in self.handles],
-        }
+        # Engine counters are collected FIRST, outside the routing lock:
+        # InferenceEngine.stats() takes its _step_lock, and engines call
+        # our finish/handoff hooks (which take _lock) while holding
+        # _step_lock — taking _step_lock under _lock here would complete
+        # that cycle into a deadlock (see the engine module docstring).
+        engines = []
+        for h in self.handles:
+            row = {"pool": h.pool, "name": h.name, "role": h.role,
+                   "steps_per_dispatch": h.engine.steps_per_dispatch}
+            row.update(h.engine.stats())
+            engines.append(row)
+        with self._lock:
+            return {
+                "requests": self.requests,
+                "aborted": self.aborted,
+                "pd_disagg": self.pd_disagg,
+                "handoffs": self.handoffs,
+                "recoveries": self.recoveries,
+                "routed_by_pool": dict(self.routed_by_pool),
+                "role_switches": self.role_switches,
+                "switch_migrations": self.switch_migrations,
+                "switch_log": list(self.switch_log),
+                "engines": engines,
+            }
 
 
 def format_placement_row(row: Dict) -> str:

@@ -57,9 +57,11 @@ class ResourceManager:
             if name not in REGISTRY:
                 raise KeyError(f"unknown hardware {name!r}")
         self._lock = threading.Lock()
+        # guarded by: _lock
         self._free: Dict[str, List[int]] = {
             name: list(range(n)) for name, n in pools.items()}
-        self._meta: Dict[str, Binding] = {}   # the "Redis" metadata store
+        # the "Redis" metadata store
+        self._meta: Dict[str, Binding] = {}           # guarded by: _lock
         self.pools = dict(pools)
 
     def spec(self, pool: str) -> HardwareSpec:
@@ -71,7 +73,7 @@ class ResourceManager:
 
     # ------------------------------------------------------------------
     def _bind_locked(self, worker_id: str, role: str, candidates,
-                     n_devices: int) -> Optional[Binding]:
+                     n_devices: int) -> Optional[Binding]:   # requires: _lock
         """Try (pool, is_fallback) candidates in order; caller holds lock."""
         for pool, is_fb in candidates:
             free = self._free.get(pool, [])
@@ -85,7 +87,7 @@ class ResourceManager:
                 return b
         return None
 
-    def _affine_candidates(self, role: str, n_devices: int):
+    def _affine_candidates(self, role: str, n_devices: int):   # requires: _lock
         """Preference order for a role: pools whose hardware class matches
         the role's affinity (most free devices first, so load spreads), then
         the remaining pools as fallbacks. Caller holds lock."""

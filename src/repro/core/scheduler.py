@@ -183,13 +183,14 @@ class LiveRLRunner:
         self.store = store or MooncakeStore(bucket_mb=1)
         self.buffer = SampleBuffer(alpha=cfg.alpha)
         self.tok = ByteTokenizer()
+        # guarded by: _pump_lock
         self.sampler = TaskSampler(list(cfg.tasks), seed=cfg.seed,
                                    weights=cfg.sampler_weights())
         self.seq_len = seq_len
         self.version = 0
         self.profiler = AffinityProfiler() if cfg.online_affinity else None
-        self.active: List[EnvManager] = []
-        self._seed_counter = itertools.count(cfg.seed * 1000)
+        self.active: List[EnvManager] = []         # guarded by: _pump_lock
+        self._seed_counter = itertools.count(cfg.seed * 1000)  # guarded by: _pump_lock
         self.history: List[StepMetrics] = []
         self.threaded = cfg.mode in THREADED_MODES
         # async modes score rewards through invoke_async + a pending-
@@ -199,12 +200,12 @@ class LiveRLRunner:
         # the trainer holds it across suspend -> update -> resume
         self._pump_lock = threading.Lock()
         self._completed_lock = threading.Lock()
-        self._completed_this_round: List[EnvManager] = []
+        self._completed_this_round: List[EnvManager] = []  # guarded by: _completed_lock
         # [trajectory, payload, reward-future, attempts] entries, drained
         # in submission order; the payload is retained so a lost
         # invocation (ServerlessError) can be re-submitted, and so a
         # rollout snapshot can re-issue pending rewards after a restore
-        self._pending_rewards: collections.deque = collections.deque()
+        self._pending_rewards: collections.deque = collections.deque()  # guarded by: _pump_lock
         # fault-tolerance hook: called at the end of every suspend ->
         # update -> resume barrier while the pump lock is still held (the
         # rollout plane is quiescent there) — the FT supervisor installs
@@ -213,7 +214,7 @@ class LiveRLRunner:
             = None
         # traj_ids trained per step (dedup / parity audits)
         self.trained_log: List[List[str]] = []
-        self.reward_retries = 0
+        self.reward_retries = 0                    # guarded by: _pump_lock
         self._run_rollout = threading.Event()
         self._stop = threading.Event()
         self._rollout_thread: Optional[threading.Thread] = None
@@ -237,7 +238,7 @@ class LiveRLRunner:
     # ------------------------------------------------------------------
     # rollout side (worker thread in threaded modes, cooperative in sync)
     # ------------------------------------------------------------------
-    def _spawn_group(self, task: str, group_id: str, n: int):
+    def _spawn_group(self, task: str, group_id: str, n: int):   # requires: _pump_lock
         for _ in range(n):
             env = make_env(task, seed=next(self._seed_counter))
             em = EnvManager(
@@ -253,7 +254,7 @@ class LiveRLRunner:
         with self._completed_lock:
             self._completed_this_round.append(em)
 
-    def _score_and_buffer(self, em: EnvManager):
+    def _score_and_buffer(self, em: EnvManager):   # requires: _pump_lock
         """Reward stage. Async modes submit the serverless call and return
         immediately — the trajectory enters the buffer when its future
         resolves (``_drain_rewards``), not inline in the pump."""
@@ -272,14 +273,20 @@ class LiveRLRunner:
             "text": self.tok.decode(traj.tokens),
         }
         if self._use_async_reward:
+            # analysis: ignore[blocking-under-lock] pool.submit only: the
+            # call executes on the serverless pool thread, not here
             fut = self.serverless.invoke_async(self.cfg.reward_url, payload)
             self._pending_rewards.append([traj, payload, fut, 0])
         else:
+            # analysis: ignore[blocking-under-lock] sync baseline BY
+            # DESIGN: "sync" mode scores rewards inline in the tick (the
+            # pump lock is the worker-vs-barrier mutex and sync modes
+            # have no worker thread, so nothing is serialized behind it)
             traj.reward = float(self.serverless.invoke(self.cfg.reward_url,
                                                        payload))
             self.buffer.put(traj)
 
-    def _drain_rewards(self, block: bool = False) -> int:
+    def _drain_rewards(self, block: bool = False) -> int:   # requires: _pump_lock
         """Move reward-scored trajectories into the buffer. Completed-
         PREFIX drain: trajectories are buffered in reward SUBMISSION order
         even when a later future resolves first, so batch composition does
@@ -298,6 +305,7 @@ class LiveRLRunner:
             except Exception:
                 if attempts >= self.cfg.reward_retry_limit:
                     raise
+                # analysis: ignore[blocking-under-lock] pool.submit only
                 entry[2] = self.serverless.invoke_async(
                     self.cfg.reward_url, payload)
                 entry[3] = attempts + 1
@@ -310,7 +318,7 @@ class LiveRLRunner:
             n += 1
         return n
 
-    def _drain_completions(self) -> int:
+    def _drain_completions(self) -> int:   # requires: _pump_lock
         with self._completed_lock:
             done = self._completed_this_round
             self._completed_this_round = []
@@ -320,7 +328,7 @@ class LiveRLRunner:
                 self.active.remove(em)
         return len(done)
 
-    def _enforce_staleness(self):
+    def _enforce_staleness(self):   # requires: _pump_lock
         """RollArt: per-tick trajectory-level staleness control."""
         if self.cfg.mode == "areal":
             return   # AReaL bounds staleness at trajectory start only
@@ -329,7 +337,7 @@ class LiveRLRunner:
             if em.state == EMState.GENERATING and em.start_version < bound:
                 em.abort()
 
-    def _ensure_inflight(self):
+    def _ensure_inflight(self):   # requires: _pump_lock
         """Keep enough environment groups running to feed the buffer —
         unless it is already ``max_buffered_batches`` ahead of the trainer
         (backpressure: the worker must not produce unboundedly). The
@@ -348,7 +356,7 @@ class LiveRLRunner:
             gid = f"v{self.version}.g{g}.{task}.{next(self._seed_counter)}"
             self._spawn_group(task, gid, self.cfg.group_size)
 
-    def _rollout_tick(self) -> int:
+    def _rollout_tick(self) -> int:   # requires: _pump_lock
         """One rollout iteration: staleness enforcement, env-group top-up,
         one proxy pump, completion cascade, reward drain, surplus
         cancellation. Returns an activity count (0 == idle tick; the pump
@@ -367,7 +375,7 @@ class LiveRLRunner:
             self._cancel_surplus()
         return n
 
-    def _cancel_surplus(self):
+    def _cancel_surplus(self):   # requires: _pump_lock
         """Abort only the surplus beyond ``batch_size * redundancy``
         in-flight trajectories (the headroom the next iteration launches
         with), slowest first — matching the simulator's per-iteration
@@ -460,7 +468,11 @@ class LiveRLRunner:
             batch = self.buffer.try_get_batch(self.cfg.batch_size)
             if batch is not None:
                 return batch
-            self._rollout_tick()
+            # sync modes have no worker thread, so the pump lock is
+            # uncontended here — taken anyway so every _rollout_tick call
+            # site satisfies the same documented discipline
+            with self._pump_lock:
+                self._rollout_tick()
             pumps += 1
             if pumps > self.cfg.max_pump_steps:
                 raise RuntimeError("rollout starved: no batch collected")
@@ -469,19 +481,22 @@ class LiveRLRunner:
         """Synchronous baselines: rollout and training strictly alternate,
         so — like the simulator's sync mode — leftover in-flight rollouts
         are CANCELLED after the batch, not completed into the next one
-        (each iteration trains on freshly generated trajectories)."""
-        for em in list(self.active):
-            em.abort()
-        pumps = 0
-        while self.proxy.busy:
-            self.proxy.pump()
+        (each iteration trains on freshly generated trajectories). The
+        pump lock is uncontended in sync modes (no worker thread) but
+        taken anyway: the rollout state keeps one documented guard."""
+        with self._pump_lock:
+            for em in list(self.active):
+                em.abort()
+            pumps = 0
+            while self.proxy.busy:
+                self.proxy.pump()
+                self._drain_completions()
+                self._drain_rewards()
+                pumps += 1
+                if pumps > self.cfg.max_pump_steps:
+                    raise RuntimeError("rollout did not drain")
             self._drain_completions()
-            self._drain_rewards()
-            pumps += 1
-            if pumps > self.cfg.max_pump_steps:
-                raise RuntimeError("rollout did not drain")
-        self._drain_completions()
-        self._drain_rewards(block=True)
+            self._drain_rewards(block=True)
 
     def _push_async(self):
         """Publish the new weights off-thread; the transfer overlaps the

@@ -83,21 +83,26 @@ class ServerlessPlatform:
     def __init__(self, config: Optional[ServerlessConfig] = None,
                  seed: int = 0):
         self.cfg = config or ServerlessConfig()
-        self._fns: Dict[str, Callable] = {}
+        self._fns: Dict[str, Callable] = {}        # guarded by: _lock
         self._pool = ThreadPoolExecutor(max_workers=32)
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._warm: Dict[str, float] = {}   # url -> last-used wall time
-        self._active = 0
-        self._rng = random.Random(seed)
-        self._poison: Dict[str, int] = {}   # url -> invocations to fail
-        self.stats = ServerlessStats()
+        # url -> last-used wall time
+        self._warm: Dict[str, float] = {}          # guarded by: _lock
+        self._active = 0                           # guarded by: _lock
+        self._rng = random.Random(seed)            # guarded by: _lock
+        # url -> invocations to fail
+        self._poison: Dict[str, int] = {}          # guarded by: _lock
+        self.stats = ServerlessStats()             # guarded by: _lock
 
     def deploy(self, url: str, fn: Callable):
         """Register a function behind a serverless URL."""
         if not url.startswith("fc://"):
             raise ValueError("serverless urls use the fc:// scheme")
-        self._fns[url] = fn
+        # under the lock: a deploy racing an invoke's registry lookup is
+        # a real hazard once rollout-as-a-service endpoints deploy late
+        with self._lock:
+            self._fns[url] = fn
 
     def fail_next(self, url: str, n: int = 1):
         """Failure injection (paper §8): the next ``n`` invocations of
@@ -114,12 +119,12 @@ class ServerlessPlatform:
             return max(0.0, self._rng.gauss(self.cfg.io_mean_s,
                                             self.cfg.io_mean_s / 2))
 
-    def is_cold(self, url: str, now: Optional[float] = None) -> bool:
+    def is_cold(self, url: str, now: Optional[float] = None) -> bool:   # requires: _lock
         now = time.monotonic() if now is None else now
         last = self._warm.get(url)
         return last is None or (now - last) > self.cfg.keep_alive_s
 
-    def _touch(self, url: str, now: Optional[float] = None):
+    def _touch(self, url: str, now: Optional[float] = None):   # requires: _lock
         self._warm[url] = time.monotonic() if now is None else now
 
     # ------------------------------------------------------------------
@@ -131,7 +136,8 @@ class ServerlessPlatform:
         mode (tiny-model runs should stay fast); sim mode models them in
         virtual time via ``sim_latency``. Blocks while ``max_concurrency``
         instances are already executing."""
-        fn = self._fns.get(url)
+        with self._lock:
+            fn = self._fns.get(url)
         if fn is None:
             raise KeyError(f"no function deployed at {url}")
         # O(payload) walk outside the lock: MB-scale reward payloads must

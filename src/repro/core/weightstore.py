@@ -40,9 +40,9 @@ class MooncakeStore:
     def __init__(self, bucket_mb: int = 1024):
         self.bucket_bytes = bucket_mb * 2 ** 20
         self._lock = threading.Lock()
-        self._buckets: Dict[int, List[Bucket]] = {}
-        self._latest: int = -1
-        self.log = TransferLog()
+        self._buckets: Dict[int, List[Bucket]] = {}   # guarded by: _lock
+        self._latest: int = -1                        # guarded by: _lock
+        self.log = TransferLog()                      # guarded by: _lock
 
     # ------------------------------------------------------------------
     @property

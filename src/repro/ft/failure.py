@@ -12,6 +12,14 @@ so the supervisor can account recovered vs lost tokens per event.
 Injection happens between runner steps, when the rollout worker is parked
 (``run_steps`` parks it on exit), so faults land on a quiescent plane the
 way a real crash lands on a process: state simply disappears.
+
+Concurrency contract: the injector owns no locks and is single-threaded
+by design — every entry point assumes the quiescent barrier above. The
+cross-object mutations it performs (``runner._pending_rewards``, engine
+teardown, ``runner._completed_this_round`` under the runner's
+``_completed_lock``) are outside the per-class static-analysis model
+(see ``repro.analysis.model``) and are protected by that barrier, not by
+locks of this class.
 """
 from __future__ import annotations
 

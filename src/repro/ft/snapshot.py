@@ -113,7 +113,7 @@ class RolloutSnapshotter:
         self.keep_last = keep_last
         self._pool = ThreadPoolExecutor(max_workers=1,
                                         thread_name_prefix="rollout-snap")
-        self._pending: List[Future] = []
+        self._pending: List[Future] = []   # guarded by: _lock
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------

@@ -27,6 +27,26 @@ prefill pads prompts to power-of-two buckets while writing the slot's
 cache row directly (O(log max_len) compiled prefill shapes, no transient
 batch-1 cache). Commands still drain between macro-steps, so ADD/ABORT
 latency is bounded by one macro-step (K decode tokens per slot).
+
+Locking (machine-checked by ``python -m repro.analysis``; see the
+``# guarded by:`` / ``# requires:`` annotations):
+
+- ``_lock`` guards the command queue and result map (``_commands``,
+  ``_results``): the cheap, contended producer/consumer state.
+- ``_step_lock`` guards the slot/cache/param state and the stat counters:
+  the expensive, step-granular state.
+- **Canonical order: ``_step_lock`` -> ``_lock``** — the step path holds
+  ``_step_lock`` and briefly takes ``_lock`` to drain commands or post
+  results (``crash`` nests them the same way). Nothing may take
+  ``_step_lock`` while holding ``_lock``.
+- Cross-class: the proxy calls ``inject``/``add_request`` (which take
+  only ``_lock``) while holding its own routing lock, and the engine
+  calls ``on_finish``/``on_handoff`` hooks (which take the proxy's lock)
+  while holding ``_step_lock``. That is only deadlock-free because no
+  engine path takes ``_step_lock`` under the proxy's lock — which is why
+  ``num_active``/``inflight_decode_tokens`` (read by the proxy under its
+  lock) are deliberately lock-free racy reads, not ``_step_lock``
+  acquisitions. Use :meth:`stats` for a consistent counter snapshot.
 """
 from __future__ import annotations
 
@@ -134,11 +154,11 @@ class InferenceEngine:
             raise ValueError("steps_per_dispatch must be >= 1, got "
                              f"{steps_per_dispatch}")
         self.model = model
-        self.params = params
+        self.params = params                       # guarded by: _step_lock
         self.max_slots = max_slots
         self.max_len = max_len
         self.on_finish = on_finish
-        self.role = role
+        self.role = role                           # guarded by: _step_lock
         self.on_handoff = on_handoff
         self.steps_per_dispatch = steps_per_dispatch
         self.donate = donate
@@ -157,35 +177,38 @@ class InferenceEngine:
         # width of the padded per-slot stop-token matrix fed to
         # decode_block; grows (power of two -> bounded recompiles) if a
         # request carries more stop tokens
-        self._stop_width = 4
-        self.weight_version = 0
+        self._stop_width = 4                       # guarded by: _step_lock
+        self.weight_version = 0                    # guarded by: _step_lock
+        # bare flag, atomic under the GIL — see suspend() for the contract
         self.suspended = False
-        self._key = jax.random.PRNGKey(seed)
-        self._slots = [_Slot() for _ in range(max_slots)]
+        self._key = jax.random.PRNGKey(seed)       # guarded by: _step_lock
+        self._slots = [_Slot() for _ in range(max_slots)]  # guarded by: _step_lock
         # ("add", req) | ("abort", id) | ("inject", KVHandoff)
-        self._commands = collections.deque()
+        self._commands = collections.deque()       # guarded by: _lock
         self._lock = threading.Lock()
         # serializes the mutators of _slots/_cache/params: step() (the pump
         # thread) vs update_params() (the control thread's weight sync).
         # The command queue has its own lock so add/abort/inject never
         # block on an in-flight decode step.
         self._step_lock = threading.Lock()
-        self._results: Dict[str, GenResult] = {}
-        self._cache = model.init_cache(max_slots, max_len)
+        self._results: Dict[str, GenResult] = {}   # guarded by: _lock
+        self._cache = model.init_cache(max_slots, max_len)  # guarded by: _step_lock
         # stats (steps/busy_steps count MACRO-steps, i.e. engine
         # iterations; decode_dispatches counts decode jit calls — with
         # K = steps_per_dispatch, dispatches/token converges to 1/K —
         # while prefill/decode token counters stay in TOKENS, which is
-        # what proxy-level accounting and the rebalancer consume)
-        self.steps = 0
-        self.busy_steps = 0
-        self.decode_dispatches = 0
-        self.prefill_tokens = 0
-        self.decode_tokens = 0
-        self.recomputes = 0           # in-flight KV rebuilds (protocol (5))
-        self.handoffs_out = 0
-        self.handoffs_in = 0
-        self.crashes = 0              # injected engine losses (repro.ft)
+        # what proxy-level accounting and the rebalancer consume;
+        # recomputes counts in-flight KV rebuilds (protocol (5)) and
+        # crashes counts injected engine losses (repro.ft))
+        self.steps = 0                             # guarded by: _step_lock
+        self.busy_steps = 0                        # guarded by: _step_lock
+        self.decode_dispatches = 0                 # guarded by: _step_lock
+        self.prefill_tokens = 0                    # guarded by: _step_lock
+        self.decode_tokens = 0                     # guarded by: _step_lock
+        self.recomputes = 0                        # guarded by: _step_lock
+        self.handoffs_out = 0                      # guarded by: _step_lock
+        self.handoffs_in = 0                       # guarded by: _step_lock
+        self.crashes = 0                           # guarded by: _step_lock
         self._build_jit()
 
     # ------------------------------------------------------------------
@@ -244,7 +267,7 @@ class InferenceEngine:
         self._prefill_jit = _prefill_into_slot
         self._sample = sample_mixed
 
-    def _next_key(self):
+    def _next_key(self):   # requires: _step_lock
         self._key, k = jax.random.split(self._key)
         return k
 
@@ -312,11 +335,15 @@ class InferenceEngine:
             return list(self._commands)
 
     def snapshot_rng(self):
-        """The engine's PRNG chain head as a host array (snapshot)."""
-        return np.asarray(self._key)
+        """The engine's PRNG chain head as a host array (snapshot).
+        Serialized against the step loop: half-advanced key reads would
+        make a restored snapshot replay a different sample stream."""
+        with self._step_lock:
+            return np.asarray(self._key)
 
     def restore_rng(self, key):
-        self._key = jnp.asarray(key)
+        with self._step_lock:
+            self._key = jnp.asarray(key)
 
     def crash(self):
         """Simulate losing this engine's process: every in-flight slot,
@@ -353,10 +380,13 @@ class InferenceEngine:
         (e.g. iteration 0, where the store still holds the weights the
         engine was built with): re-prefilling every in-flight cache under
         identical weights would burn a full prefill per slot for nothing.
+        The version check happens under ``_step_lock``: checked outside,
+        two concurrent syncs could interleave check-then-swap and leave
+        params and weight_version from different versions.
         """
-        if version == self.weight_version:
-            return
         with self._step_lock:
+            if version == self.weight_version:
+                return
             self.params = params
             self.weight_version = version
             if recompute_caches:
@@ -370,7 +400,7 @@ class InferenceEngine:
             b <<= 1
         return min(b, self.max_len)
 
-    def _prefill_slot(self, i: int, temperature: float):
+    def _prefill_slot(self, i: int, temperature: float):   # requires: _step_lock
         """Fill slot ``i``'s cache row from its tokens[:pos] — shared by
         first admission and the protocol-(5) KV recompute. On attention-
         only stacks the prompt is padded to a power-of-two bucket (padded
@@ -389,16 +419,16 @@ class InferenceEngine:
             jnp.float32(temperature))
         return tok, lp
 
-    def _reprefill_slot(self, i: int):
+    def _reprefill_slot(self, i: int):   # requires: _step_lock
         self._prefill_slot(i, -1.0)   # greedy: the sampled token is unused
         self.recomputes += 1
 
-    def _grow_stop_width(self, stop_tokens: Sequence[int]):
+    def _grow_stop_width(self, stop_tokens: Sequence[int]):   # requires: _step_lock
         while len(stop_tokens) > self._stop_width:
             self._stop_width *= 2
 
     # ------------------------------------------------------------------
-    def _admit(self, req: GenRequest) -> bool:
+    def _admit(self, req: GenRequest) -> bool:   # requires: _step_lock
         free = [i for i, s in enumerate(self._slots) if not s.active]
         if not free or len(req.prompt) + req.max_new_tokens > self.max_len:
             return False
@@ -420,7 +450,7 @@ class InferenceEngine:
             self._emit_handoff(i)
         return True
 
-    def _peek_handoff(self, i: int) -> KVHandoff:
+    def _peek_handoff(self, i: int) -> KVHandoff:   # requires: _step_lock
         """Freeze slot ``i`` into a KVHandoff WITHOUT freeing the slot.
         ``extract_cache_slot`` produces fresh arrays (a dynamic slice), so
         the handoff stays valid even after later donated dispatches
@@ -433,7 +463,7 @@ class InferenceEngine:
             cache=self.model.extract_cache_slot(self._cache, i),
             weight_version=self.weight_version)
 
-    def _package_handoff(self, i: int) -> KVHandoff:
+    def _package_handoff(self, i: int) -> KVHandoff:   # requires: _step_lock
         """Freeze slot ``i`` into a KVHandoff and free the slot."""
         s = self._slots[i]
         handoff = self._peek_handoff(i)
@@ -441,7 +471,7 @@ class InferenceEngine:
         s.request = None
         return handoff
 
-    def _emit_handoff(self, i: int):
+    def _emit_handoff(self, i: int):   # requires: _step_lock
         if self.on_handoff is None:
             raise RuntimeError(
                 "prefill-role engine needs an on_handoff hook "
@@ -450,7 +480,7 @@ class InferenceEngine:
         self.handoffs_out += 1
         self.on_handoff(handoff)
 
-    def _admit_handoff(self, handoff: KVHandoff) -> bool:
+    def _admit_handoff(self, handoff: KVHandoff) -> bool:   # requires: _step_lock
         free = [i for i, s in enumerate(self._slots) if not s.active]
         if not free:
             return False
@@ -476,7 +506,7 @@ class InferenceEngine:
         self.handoffs_in += 1
         return True
 
-    def _append_token(self, i: int, tok: int, lp: float):
+    def _append_token(self, i: int, tok: int, lp: float):   # requires: _step_lock
         s = self._slots[i]
         s.tokens.append(tok)
         s.new_tokens.append(tok)
@@ -488,7 +518,7 @@ class InferenceEngine:
         elif len(s.new_tokens) >= req.max_new_tokens or s.pos >= self.max_len:
             self._finish(i, "length")
 
-    def _finish(self, i: int, reason: str):
+    def _finish(self, i: int, reason: str):   # requires: _step_lock
         s = self._slots[i]
         res = GenResult(
             request_id=s.request.request_id,
@@ -512,7 +542,7 @@ class InferenceEngine:
             return payload.request.request_id
         return None
 
-    def _emit_aborted_pending(self, cmd):
+    def _emit_aborted_pending(self, cmd):   # requires: _step_lock
         """A never-admitted ADD/INJECT was aborted: still emit a result so
         the proxy/EnvManager callback chain observes the cancellation."""
         kind, payload = cmd
@@ -536,7 +566,7 @@ class InferenceEngine:
         if self.on_finish:
             self.on_finish(res)
 
-    def _abort(self, request_id: str):
+    def _abort(self, request_id: str):   # requires: _step_lock
         for i, s in enumerate(self._slots):
             if s.active and s.request.request_id == request_id:
                 self._finish(i, "aborted")
@@ -554,14 +584,16 @@ class InferenceEngine:
         if dropped is not None:
             self._emit_aborted_pending(dropped)
 
-    def _drain_commands(self):
+    def _drain_commands(self):   # requires: _step_lock
         """Process queued commands. ABORTs always drain — a blocked ADD or
         INJECT (no free slot / suspended) defers itself and every later
         admission (FIFO preserved) but must not head-of-line-block
         cancellations queued behind it."""
         # idle-pump fast path: reading the deque's emptiness is atomic
         # under the GIL, so an empty queue costs O(1) with no lock
-        # acquisition or deque rebuild (the common case in every pump)
+        # acquisition or deque rebuild (the common case in every pump); a
+        # command enqueued concurrently is seen by the next pump at worst
+        # analysis: ignore[guarded-attr] deliberate lock-free probe
         if not self._commands:
             return
         with self._lock:
@@ -609,7 +641,7 @@ class InferenceEngine:
         with self._step_lock:
             return self._step_locked()
 
-    def _gather_slot_arrays(self):
+    def _gather_slot_arrays(self):   # requires: _step_lock
         """Per-slot device inputs for a decode dispatch. Inactive slots
         ride along as zero rows (budget 0 freezes them on device)."""
         B = self.max_slots
@@ -630,7 +662,7 @@ class InferenceEngine:
                 stop_ids[i, : len(st)] = st
         return last_tokens, positions, temps, budgets, stop_ids
 
-    def _step_locked(self) -> int:
+    def _step_locked(self) -> int:   # requires: _step_lock
         # 1) command processing between engine steps (non-blocking)
         self._drain_commands()
         # 2) one decode macro-step over active slots
@@ -680,18 +712,44 @@ class InferenceEngine:
         return n_emitted
 
     # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        """Consistent snapshot of the step-granular counters. Callers
+        must NOT hold any proxy/runner lock here (it takes ``_step_lock``,
+        and the engine calls back into those holders' locks from under
+        it — see the module docstring's cross-class ordering note)."""
+        with self._step_lock:
+            return {
+                "steps": self.steps,
+                "busy_steps": self.busy_steps,
+                "decode_dispatches": self.decode_dispatches,
+                "prefill_tokens": self.prefill_tokens,
+                "decode_tokens": self.decode_tokens,
+                "recomputes": self.recomputes,
+                "handoffs_out": self.handoffs_out,
+                "handoffs_in": self.handoffs_in,
+                "crashes": self.crashes,
+                "weight_version": self.weight_version,
+            }
+
     def pop_result(self, request_id: str) -> Optional[GenResult]:
         with self._lock:
             return self._results.pop(request_id, None)
 
     @property
     def num_active(self) -> int:
+        """Racy by design: the proxy reads this under ITS lock, and
+        taking ``_step_lock`` here would close the cross-class deadlock
+        cycle described in the module docstring. Occupancy is advisory
+        (load balancing) so a stale read is harmless."""
+        # analysis: ignore[guarded-attr] lock-free read, see docstring
         return sum(s.active for s in self._slots)
 
     @property
     def inflight_decode_tokens(self) -> int:
         """Decode tokens held by in-flight slots — the work destroyed if
-        this engine dies right now (fault-tolerance accounting)."""
+        this engine dies right now (fault-tolerance accounting). Same
+        deliberate lock-free read as ``num_active``."""
+        # analysis: ignore[guarded-attr] lock-free read, see num_active
         return sum(len(s.new_tokens) for s in self._slots if s.active)
 
     @property
