@@ -29,6 +29,7 @@ ALL = [
     "decode_hotpath",   # device-resident decode: K-step dispatch + donation
     "async_overlap",    # async rollout/train overlap on the live plane
     "fault_tolerance",  # §8: rollout checkpoint/restore vs scratch restart
+    "traffic_gen",      # Rollout-as-a-Service: multi-tenant QoS under load
     "kernels_bench",
     "roofline",         # §Roofline from the dry-run artifacts
 ]

@@ -1,0 +1,64 @@
+"""Rollout-as-a-Service demo: two weighted tenants share one live
+continuous-batching engine through the :class:`repro.serve.RolloutService`
+serving tier. A "gold" tenant (weight 3) and a "bronze" tenant (weight 1)
+each queue a burst of streaming prompt jobs behind a small admission
+window; the stride scheduler hands gold ~3/4 of the window, and each
+job's tokens stream back incrementally while later jobs are still queued.
+
+    PYTHONPATH=src python examples/serve_multi_tenant.py
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import EngineHandle, LLMProxy
+from repro.data.tokenizer import TOKENIZER
+from repro.models import Model
+from repro.rl.engine import InferenceEngine
+from repro.serve import JobState, RolloutJob, RolloutService
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--jobs-per-tenant", type=int, default=6)
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = InferenceEngine(model, params, max_slots=4, max_len=256, seed=0)
+    proxy = LLMProxy([EngineHandle(eng, "H20")])
+
+    with RolloutService(proxy, max_inflight=4) as svc:
+        svc.register_tenant("gold", weight=3.0)
+        svc.register_tenant("bronze", weight=1.0)
+        svc.start()
+
+        tickets = []
+        for i in range(args.jobs_per_tenant):
+            for name in ("gold", "bronze"):
+                tickets.append(svc.submit(name, RolloutJob(
+                    kind="prompt",
+                    prompt=TOKENIZER.encode(f"request {i} from {name}: ",
+                                            bos=True),
+                    max_new_tokens=args.max_new_tokens,
+                    temperature=0.8)))
+
+        for tk in tickets:
+            text = "".join(TOKENIZER.decode(c.tokens) for c in tk.stream)
+            assert tk.wait(timeout=120) == JobState.DONE
+            wait_ms = 1e3 * (tk.t_admit - tk.t_submit)
+            print(f"[{tk.job_id}] queued {wait_ms:6.1f} ms -> {text!r}")
+
+        for name, st in svc.stats().items():
+            print(f"tenant={name} weight={st['weight']} "
+                  f"admitted={st['admitted']} completed={st['completed']} "
+                  f"streamed_tokens={st['stream_tokens']} "
+                  f"vtime={st['vtime']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -61,7 +61,8 @@ class EnvManager:
                  policy: Optional[RolloutPolicy] = None,
                  tag: Optional[str] = None,
                  on_complete: Optional[Callable[["EnvManager"], None]] = None,
-                 group_id: str = ""):
+                 group_id: str = "",
+                 on_tokens: Optional[Callable] = None):
         self.em_id = f"em-{next(_ids)}"
         self.env = env
         self.proxy = proxy
@@ -69,6 +70,9 @@ class EnvManager:
         self.policy = policy or RolloutPolicy()
         self.tag = tag or env.TASK
         self.on_complete = on_complete
+        # incremental token-stream subscriber, forwarded with every
+        # generation request (see LLMProxy.submit / repro.serve.stream)
+        self.on_tokens = on_tokens
         self.group_id = group_id
         self.state = EMState.IDLE
         self.tokens: List[int] = []
@@ -113,7 +117,7 @@ class EnvManager:
                        max_new_tokens=self.policy.max_new_tokens,
                        temperature=self.policy.temperature,
                        stop_tokens=self.policy.stop_tokens, tag=self.tag),
-            callback=self.on_generation)
+            callback=self.on_generation, on_tokens=self.on_tokens)
 
     # ------------------------------------------------------------------
     def on_generation(self, result: GenResult):

@@ -107,10 +107,16 @@ class LLMProxy:
         self._route: Dict[str, EngineHandle] = {}        # guarded by: _lock
         self._callbacks: Dict[str, Callable[[GenResult], None]] = {}  # guarded by: _lock
         self._abort_requested: set = set()               # guarded by: _lock
+        # streaming-token subscribers, keyed by request id (Rollout-as-a-
+        # Service tier). Keyed on the REQUEST, not the engine, so a stream
+        # follows its trajectory across PD handoffs, role switches, and
+        # FT re-injection without re-subscribing.
+        self._streams: Dict[str, Callable] = {}          # guarded by: _lock
         self._lock = threading.Lock()
         self.suspended = False      # bare flag, atomic under the GIL
         for h in handles:
             h.engine.on_finish = self._make_finish_hook(h)
+            h.engine.on_progress = self._make_progress_hook(h)
         # stats (engine hooks bump these from engine threads, so they
         # share the routing lock; rebalancer state below does not — it is
         # touched only by the single pump/control thread)
@@ -152,8 +158,22 @@ class LLMProxy:
                 cb = self._callbacks.pop(result.request_id, None)
                 self._route.pop(result.request_id, None)
                 self._abort_requested.discard(result.request_id)
+                self._streams.pop(result.request_id, None)
             if cb:
                 cb(result)
+        return hook
+
+    def _make_progress_hook(self, handle: EngineHandle):
+        """Engine streaming hook: runs under the emitting engine's
+        ``_step_lock``, so the subscriber lookup takes ``_lock`` briefly
+        and the subscriber itself (a TokenStream push — leaf lock only)
+        is invoked OUTSIDE it, preserving the cross-class lock order
+        documented in ``repro.rl.engine``."""
+        def hook(rid: str, cum_tokens: List[int], cum_logprobs: List[float]):
+            with self._lock:
+                fn = self._streams.get(rid)
+            if fn is not None:
+                fn(rid, cum_tokens, cum_logprobs)
         return hook
 
     def _route_handoff(self, handoff: KVHandoff, src_pool: str,
@@ -168,6 +188,7 @@ class LLMProxy:
                 cb = self._callbacks.pop(rid, None)
                 self._route.pop(rid, None)
                 self._abort_requested.discard(rid)
+                self._streams.pop(rid, None)
                 dst = None
             else:
                 dst = min(self.decode_handles, key=lambda h: h.load())
@@ -210,11 +231,17 @@ class LLMProxy:
 
     # ------------------------------------------------------------------
     def submit(self, req: GenRequest,
-               callback: Callable[[GenResult], None]):
-        """Trajectory-level dispatch (ADD command)."""
+               callback: Callable[[GenResult], None],
+               on_tokens: Optional[Callable] = None):
+        """Trajectory-level dispatch (ADD command). ``on_tokens``
+        subscribes an incremental token stream — called with
+        ``(request_id, cumulative_tokens, cumulative_logprobs)`` as the
+        engines emit (see ``InferenceEngine.on_progress``)."""
         h = self._select(req.tag)
         with self._lock:
             self._callbacks[req.request_id] = callback
+            if on_tokens is not None:
+                self._streams[req.request_id] = on_tokens
             self._route[req.request_id] = h
             self.requests += 1
             self.routed_by_pool[h.pool] = \
@@ -269,14 +296,17 @@ class LLMProxy:
                 self._route.pop(rid, None)
                 self._callbacks.pop(rid, None)
                 self._abort_requested.discard(rid)
+                self._streams.pop(rid, None)
 
     def reinject(self, handoff: KVHandoff,
-                 callback: Optional[Callable[[GenResult], None]] = None
+                 callback: Optional[Callable[[GenResult], None]] = None,
+                 on_tokens: Optional[Callable] = None
                  ) -> EngineHandle:
         """Recovery dispatch: route a snapshotted KVHandoff to the
         least-loaded decode-capable engine and inject it. Re-registers the
-        result callback when given (cold restore into a fresh proxy); a
-        live recovery keeps the existing registration. A weight-version
+        result callback (and the ``on_tokens`` stream subscriber) when
+        given (cold restore into a fresh proxy); a live recovery keeps the
+        existing registration. A weight-version
         mismatch between the snapshot and the target engine re-prefills
         the cache under the current weights at admission
         (``InferenceEngine._admit_handoff``), so restoring an old snapshot
@@ -287,6 +317,8 @@ class LLMProxy:
             dst = min(cands, key=lambda h: h.load())
             if callback is not None:
                 self._callbacks[rid] = callback
+            if on_tokens is not None:
+                self._streams[rid] = on_tokens
             self._route[rid] = dst
             self.recoveries += 1
             dst.engine.inject(handoff)

@@ -12,20 +12,33 @@ real GRPO updates) through the paper's six-step weight-sync protocol:
                     weights (so they continue instead of restarting)
   (6) train_step  — the GRPO update, genuinely overlapped with rollout
 
-The overlap is real, not cooperative: in the asynchronous modes ("rollart",
-"areal", "one_off") the entire rollout side — proxy pump, EnvManager
-completion cascade, serverless reward scoring — runs on a persistent
-background worker thread that keeps producing into ``SampleBuffer`` while
-the trainer thread executes the six-step protocol. The ONLY barrier between
-the two threads is the suspend → update → resume critical section, taken
-under the shared pump lock so a weight swap never races a decode step.
-Reward scoring is non-blocking (``ServerlessPlatform.invoke_async``): a
-scored trajectory enters the buffer when its future resolves — drained in
-submission order so batch composition stays deterministic — and the weight
-push after each train step happens on its own thread, awaited only at the
-next suspend barrier. ``StepMetrics.decode_during_train`` counts decode
-tokens the engines generated while ``train_step`` ran (> 0 in the threaded
-modes, 0 in the synchronous baselines; see benchmarks/async_overlap.py).
+Since the Rollout-as-a-Service refactor the runner no longer owns the
+dispatch loop: ALL pump/drain work lives in
+:class:`repro.serve.RolloutService`, and the runner is simply the
+service's first tenant. It contributes a pull-based job ``source``
+(:meth:`_next_job` — the backpressure + group-top-up policy), per-tick
+policy hooks (staleness enforcement before admission, redundancy
+cancellation after the drain), and a ``sink`` (the SampleBuffer). The
+trainer therefore reaches the engines through exactly the same admission
+path an external serving client uses, and the runner contains NO direct
+``proxy.pump()`` call.
+
+The overlap is real, not cooperative: in the asynchronous modes
+("rollart", "areal", "one_off") the entire rollout side — proxy pump,
+EnvManager completion cascade, serverless reward scoring — runs on the
+service's background thread, which keeps producing into ``SampleBuffer``
+while the trainer thread executes the six-step protocol. The ONLY barrier
+between the two threads is the suspend → update → resume critical
+section, taken under the SERVICE lock (:meth:`RolloutService.barrier`,
+the role the runner's private pump lock used to play) so a weight swap
+never races a decode step. Reward scoring is non-blocking
+(``ServerlessPlatform.invoke_async``): a scored trajectory enters the
+buffer when its future resolves — drained in submission order so batch
+composition stays deterministic — and the weight push after each train
+step happens on its own thread, awaited only at the next suspend barrier.
+``StepMetrics.decode_during_train`` counts decode tokens the engines
+generated while ``train_step`` ran (> 0 in the threaded modes, 0 in the
+synchronous baselines; see benchmarks/async_overlap.py).
 
 Also implements trajectory-level staleness enforcement (abort EnvManagers
 whose start_version < n - alpha, every rollout tick — stricter than AReaL)
@@ -41,12 +54,18 @@ paper's baselines with the same code path, differing only in coordination:
   areal     — staleness bound applied at trajectory start only (threaded)
   rollart   — bounded staleness alpha enforced per tick + affinity
               (threaded)
+
+Concurrency note: the runner's rollout-side state (``active`` managers,
+``_pending_rewards``, ``_completed_this_round``, sampler/seed RNGs) is
+ALIASED into its service tenant — the same list/deque objects, never
+rebound by either side — and belongs to the service-lock domain
+documented in ``repro.serve.service``. The runner's policy hooks run
+inside the service tick (lock held); the FT plane mutates the same state
+from its documented quiescent barrier (``repro.ft.failure``).
 """
 from __future__ import annotations
 
-import collections
 import itertools
-import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
@@ -64,6 +83,7 @@ from repro.data.pipeline import Trajectory, TaskSampler, pack_batch
 from repro.data.tokenizer import ByteTokenizer
 from repro.envs import make_env
 from repro.rl.trainer import TrainState
+from repro.serve.service import RolloutJob, RolloutService
 
 MODES = ("rollart", "sync", "sync_plus", "one_off", "areal")
 THREADED_MODES = ("rollart", "areal", "one_off")
@@ -116,6 +136,10 @@ class RunnerConfig:
     # container eviction or an injected fault) is re-submitted from its
     # retained payload up to this many times before the error surfaces
     reward_retry_limit: int = 2
+    # weighted-QoS share of the trainer tenant when the RolloutService is
+    # shared with external serving tenants (stride scheduling; see
+    # repro.serve.service — irrelevant while the trainer is alone)
+    tenant_weight: float = 1.0
     seed: int = 0
 
     def sampler_weights(self) -> Optional[List[float]]:
@@ -149,13 +173,18 @@ class StepMetrics:
     #                                  only after a rollout-plane restore)
 
 
-class LiveRLRunner:
-    """Producer/consumer runner of the full RollArt pipeline.
+TRAINER_TENANT = "trainer"
 
-    Asynchronous modes run the rollout side on a background worker thread
-    (`_rollout_worker_loop`); synchronous baselines tick the same rollout
-    code cooperatively on the trainer thread. Call :meth:`close` (or use as
-    a context manager) to join the worker and the push thread.
+
+class LiveRLRunner:
+    """Producer/consumer runner of the full RollArt pipeline — tenant #0
+    of a :class:`~repro.serve.RolloutService`.
+
+    Asynchronous modes run the rollout side on the service's background
+    thread; synchronous baselines tick the same service cooperatively on
+    the trainer thread. Call :meth:`close` (or use as a context manager)
+    to shut the service and the push thread down — close is idempotent
+    and exception-safe (double-close / close-after-crash return promptly).
     """
 
     def __init__(self, cfg: RunnerConfig, proxy: LLMProxy,
@@ -164,7 +193,8 @@ class LiveRLRunner:
                  serverless: ServerlessPlatform,
                  reward_fn: Callable[[Dict], float],
                  store: Optional[MooncakeStore] = None,
-                 seq_len: int = 512):
+                 seq_len: int = 512,
+                 service: Optional[RolloutService] = None):
         self.cfg = cfg
         assert cfg.mode in MODES
         if cfg.pd_disagg and not proxy.pd_disagg:
@@ -183,46 +213,58 @@ class LiveRLRunner:
         self.store = store or MooncakeStore(bucket_mb=1)
         self.buffer = SampleBuffer(alpha=cfg.alpha)
         self.tok = ByteTokenizer()
-        # guarded by: _pump_lock
         self.sampler = TaskSampler(list(cfg.tasks), seed=cfg.seed,
                                    weights=cfg.sampler_weights())
         self.seq_len = seq_len
         self.version = 0
         self.profiler = AffinityProfiler() if cfg.online_affinity else None
-        self.active: List[EnvManager] = []         # guarded by: _pump_lock
-        self._seed_counter = itertools.count(cfg.seed * 1000)  # guarded by: _pump_lock
+        self._seed_counter = itertools.count(cfg.seed * 1000)
         self.history: List[StepMetrics] = []
         self.threaded = cfg.mode in THREADED_MODES
         # async modes score rewards through invoke_async + a pending-
         # futures drain; plain "sync" keeps the blocking inline call
         self._use_async_reward = cfg.mode != "sync"
-        # pump-vs-control barrier: the worker holds it per rollout tick,
-        # the trainer holds it across suspend -> update -> resume
-        self._pump_lock = threading.Lock()
-        self._completed_lock = threading.Lock()
-        self._completed_this_round: List[EnvManager] = []  # guarded by: _completed_lock
-        # [trajectory, payload, reward-future, attempts] entries, drained
-        # in submission order; the payload is retained so a lost
-        # invocation (ServerlessError) can be re-submitted, and so a
-        # rollout snapshot can re-issue pending rewards after a restore
-        self._pending_rewards: collections.deque = collections.deque()  # guarded by: _pump_lock
+        # --- the serving tier -----------------------------------------
+        # An externally supplied service lets the trainer share the data
+        # plane with serving tenants (launch/serve.py --service); by
+        # default the runner builds a private one.
+        self.service = service if service is not None else RolloutService(
+            proxy, max_pump_steps=cfg.max_pump_steps)
+        self._tenant = self.service.register_tenant(
+            TRAINER_TENANT,
+            weight=cfg.tenant_weight,
+            tokenizer=self.tok,
+            sink=self.buffer.put,
+            source=self._next_job,
+            pre_tick=self._enforce_staleness,
+            post_tick=self._post_tick,
+            observe=(self._observe_em if self.profiler is not None
+                     else None),
+            version_fn=lambda: self.version,
+            reward_url=cfg.reward_url,
+            serverless=self.serverless,
+            use_async_reward=self._use_async_reward,
+            reward_retry_limit=cfg.reward_retry_limit)
+        # Aliases into the tenant/service state: the SAME objects, never
+        # rebound by either side (the FT plane mutates them in place
+        # through the runner under its quiescent barrier)
+        self.active: List[EnvManager] = self._tenant.active
+        self._pending_rewards = self._tenant.pending_rewards
+        self._completed_lock = self.service._completed_lock
+        self._completed_this_round = self._tenant.completed
         # fault-tolerance hook: called at the end of every suspend ->
-        # update -> resume barrier while the pump lock is still held (the
-        # rollout plane is quiescent there) — the FT supervisor installs
-        # its snapshot capture here (see repro.ft.supervisor)
+        # update -> resume barrier while the service lock is still held
+        # (the rollout plane is quiescent there) — the FT supervisor
+        # installs its snapshot capture here (see repro.ft.supervisor)
         self.barrier_hook: Optional[Callable[["LiveRLRunner", int], None]] \
             = None
         # traj_ids trained per step (dedup / parity audits)
         self.trained_log: List[List[str]] = []
-        self.reward_retries = 0                    # guarded by: _pump_lock
-        self._run_rollout = threading.Event()
-        self._stop = threading.Event()
-        self._rollout_thread: Optional[threading.Thread] = None
-        self._rollout_error: Optional[BaseException] = None
         # async weight push: one thread so publications stay ordered
         self._push_pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="weight-push")
         self._push_future: Optional[Future] = None
+        self._closed = False
         # one_off pipeline state: the batch fetched last step, trained on
         # this step while its successor rolls out
         self._prev_batch: Optional[List[Trajectory]] = None
@@ -236,100 +278,44 @@ class LiveRLRunner:
         push_params(self.store, self.state.params, version=0)
 
     # ------------------------------------------------------------------
-    # rollout side (worker thread in threaded modes, cooperative in sync)
+    # rollout policy (runs inside the service tick via the tenant hooks)
     # ------------------------------------------------------------------
-    def _spawn_group(self, task: str, group_id: str, n: int):   # requires: _pump_lock
-        for _ in range(n):
-            env = make_env(task, seed=next(self._seed_counter))
-            em = EnvManager(
-                env, self.proxy, tokenizer=self.tok,
-                policy=RolloutPolicy(max_new_tokens=self.cfg.max_new_tokens,
-                                     temperature=self.cfg.temperature),
-                tag=task, group_id=group_id,
-                on_complete=self._on_em_complete)
-            self.active.append(em)
-            em.start(version=self.version, seed=next(self._seed_counter))
+    def _next_job(self) -> Optional[RolloutJob]:
+        """Trainer job source (service admission pulls from here): top up
+        env groups unless the buffer is already ``max_buffered_batches``
+        ahead of the trainer (backpressure: the service must not produce
+        unboundedly). The backlog includes trajectories parked on
+        unresolved reward futures, or slow serverless calls would defeat
+        the bound. Returns one env-group job, or None when satisfied."""
+        backlog = self.buffer.size() + len(self._pending_rewards)
+        if (backlog >= self.cfg.batch_size
+                * max(1, self.cfg.max_buffered_batches)):
+            return None
+        need_groups = int(np.ceil(
+            self.cfg.batch_size / self.cfg.group_size * self.cfg.redundancy))
+        alive = len({em.group_id for em in self.active
+                     if em.state in (EMState.IDLE, EMState.GENERATING)})
+        if alive >= need_groups:
+            return None
+        task = self.sampler.sample()
+        gid = f"v{self.version}.g{alive}.{task}.{next(self._seed_counter)}"
+        envs, seeds = [], []
+        for _ in range(self.cfg.group_size):
+            envs.append(make_env(task, seed=next(self._seed_counter)))
+            seeds.append(next(self._seed_counter))
+        return RolloutJob(
+            kind="env", tag=task, envs=envs, seeds=seeds, group_id=gid,
+            policy=RolloutPolicy(max_new_tokens=self.cfg.max_new_tokens,
+                                 temperature=self.cfg.temperature),
+            version=self.version,
+            # the trainer consumes trajectories through the buffer, not
+            # the per-job token stream — don't accumulate chunks nobody
+            # reads (serving tenants opt in per job instead)
+            stream=False)
 
-    def _on_em_complete(self, em: EnvManager):
-        with self._completed_lock:
-            self._completed_this_round.append(em)
-
-    def _score_and_buffer(self, em: EnvManager):   # requires: _pump_lock
-        """Reward stage. Async modes submit the serverless call and return
-        immediately — the trajectory enters the buffer when its future
-        resolves (``_drain_rewards``), not inline in the pump."""
-        traj = em.trajectory()
-        if self.profiler is not None and em.turns:
-            prefill = sum(1 for m in em.loss_mask if m == 0)
-            decode = len(em.tokens) - prefill
-            self.profiler.observe(em.tag, prefill, decode, em.turns)
-        if em.state in (EMState.FAILED, EMState.ABORTED):
-            return   # redundant rollouts / staleness absorb these
-        payload = {
-            "env_return": em.env_return,
-            "tokens": traj.tokens,
-            "loss_mask": traj.loss_mask,
-            "num_tokens": len(traj.tokens),
-            "text": self.tok.decode(traj.tokens),
-        }
-        if self._use_async_reward:
-            # analysis: ignore[blocking-under-lock] pool.submit only: the
-            # call executes on the serverless pool thread, not here
-            fut = self.serverless.invoke_async(self.cfg.reward_url, payload)
-            self._pending_rewards.append([traj, payload, fut, 0])
-        else:
-            # analysis: ignore[blocking-under-lock] sync baseline BY
-            # DESIGN: "sync" mode scores rewards inline in the tick (the
-            # pump lock is the worker-vs-barrier mutex and sync modes
-            # have no worker thread, so nothing is serialized behind it)
-            traj.reward = float(self.serverless.invoke(self.cfg.reward_url,
-                                                       payload))
-            self.buffer.put(traj)
-
-    def _drain_rewards(self, block: bool = False) -> int:   # requires: _pump_lock
-        """Move reward-scored trajectories into the buffer. Completed-
-        PREFIX drain: trajectories are buffered in reward SUBMISSION order
-        even when a later future resolves first, so batch composition does
-        not depend on serverless timing. A lost invocation (the platform
-        raises — e.g. an injected ``ServerlessError``) is re-submitted
-        from its retained payload up to ``reward_retry_limit`` times; only
-        then does the error surface to the caller."""
-        n = 0
-        while self._pending_rewards:
-            entry = self._pending_rewards[0]
-            traj, payload, fut, attempts = entry
-            if not block and not fut.done():
-                break
-            try:
-                traj.reward = float(fut.result())
-            except Exception:
-                if attempts >= self.cfg.reward_retry_limit:
-                    raise
-                # analysis: ignore[blocking-under-lock] pool.submit only
-                entry[2] = self.serverless.invoke_async(
-                    self.cfg.reward_url, payload)
-                entry[3] = attempts + 1
-                self.reward_retries += 1
-                if not block:
-                    break
-                continue
-            self._pending_rewards.popleft()
-            self.buffer.put(traj)
-            n += 1
-        return n
-
-    def _drain_completions(self) -> int:   # requires: _pump_lock
-        with self._completed_lock:
-            done = self._completed_this_round
-            self._completed_this_round = []
-        for em in done:
-            self._score_and_buffer(em)
-            if em in self.active:
-                self.active.remove(em)
-        return len(done)
-
-    def _enforce_staleness(self):   # requires: _pump_lock
-        """RollArt: per-tick trajectory-level staleness control."""
+    def _enforce_staleness(self):
+        """RollArt: per-tick trajectory-level staleness control (tenant
+        ``pre_tick`` hook, before admission)."""
         if self.cfg.mode == "areal":
             return   # AReaL bounds staleness at trajectory start only
         bound = self.version - self.cfg.alpha
@@ -337,45 +323,15 @@ class LiveRLRunner:
             if em.state == EMState.GENERATING and em.start_version < bound:
                 em.abort()
 
-    def _ensure_inflight(self):   # requires: _pump_lock
-        """Keep enough environment groups running to feed the buffer —
-        unless it is already ``max_buffered_batches`` ahead of the trainer
-        (backpressure: the worker must not produce unboundedly). The
-        backlog includes trajectories parked on unresolved reward futures,
-        or slow serverless calls would defeat the bound."""
-        backlog = self.buffer.size() + len(self._pending_rewards)
-        if (backlog >= self.cfg.batch_size
-                * max(1, self.cfg.max_buffered_batches)):
-            return
-        need_groups = int(np.ceil(
-            self.cfg.batch_size / self.cfg.group_size * self.cfg.redundancy))
-        alive = len({em.group_id for em in self.active
-                     if em.state in (EMState.IDLE, EMState.GENERATING)})
-        for g in range(need_groups - alive):
-            task = self.sampler.sample()
-            gid = f"v{self.version}.g{g}.{task}.{next(self._seed_counter)}"
-            self._spawn_group(task, gid, self.cfg.group_size)
-
-    def _rollout_tick(self) -> int:   # requires: _pump_lock
-        """One rollout iteration: staleness enforcement, env-group top-up,
-        one proxy pump, completion cascade, reward drain, surplus
-        cancellation. Returns an activity count (0 == idle tick; the pump
-        contribution is decode TOKENS, so the count — like every
-        token-denominated signal the runner reads — is invariant to the
-        engines' steps_per_dispatch batching)."""
-        self._enforce_staleness()
-        self._ensure_inflight()
-        n = self.proxy.pump()
-        n += self._drain_completions()
-        n += self._drain_rewards()
-        # redundant rollouts: once the buffer has a full batch, cancel the
-        # slowest in-flight rollouts beyond what the next iteration can use
+    def _post_tick(self):
+        """Tenant ``post_tick`` hook: redundant rollouts — once the
+        buffer has a full batch, cancel the slowest in-flight rollouts
+        beyond what the next iteration can use."""
         if (self.cfg.redundancy > 1.0
                 and self.buffer.size() >= self.cfg.batch_size):
             self._cancel_surplus()
-        return n
 
-    def _cancel_surplus(self):   # requires: _pump_lock
+    def _cancel_surplus(self):
         """Abort only the surplus beyond ``batch_size * redundancy``
         in-flight trajectories (the headroom the next iteration launches
         with), slowest first — matching the simulator's per-iteration
@@ -391,50 +347,71 @@ class LiveRLRunner:
         for em in generating[:surplus]:
             em.abort()
 
-    # ------------------------------------------------------------------
-    # background rollout worker (the producer thread)
-    # ------------------------------------------------------------------
-    def _rollout_worker_loop(self):
-        try:
-            while not self._stop.is_set():
-                if not self._run_rollout.wait(timeout=0.05):
-                    continue
-                with self._pump_lock:
-                    if not self._run_rollout.is_set():
-                        continue
-                    n = self._rollout_tick()
-                if n == 0:
-                    time.sleep(0.002)   # idle: yield the GIL to the trainer
-        except BaseException as e:        # surfaced by _await_batch
-            self._rollout_error = e
-            self._run_rollout.clear()
+    def _observe_em(self, em: EnvManager):
+        """Tenant ``observe`` hook (§9 online affinity profiling)."""
+        prefill = sum(1 for m in em.loss_mask if m == 0)
+        decode = len(em.tokens) - prefill
+        self.profiler.observe(em.tag, prefill, decode, em.turns)
 
+    def _on_em_complete(self, em: EnvManager):
+        """Completion callback for managers resurrected OUTSIDE the
+        service's job path (the FT snapshot restore re-wires restored
+        managers here); same contract as the service's own hook."""
+        with self._completed_lock:
+            self._completed_this_round.append(em)
+
+    # ------------------------------------------------------------------
+    # service delegation shims (the FT plane and the test suite drive
+    # the rollout plane through these; all dispatch is service-owned)
+    # ------------------------------------------------------------------
+    def _ensure_inflight(self):
+        """Admit trainer jobs now (pulls :meth:`_next_job` dry)."""
+        self.service.admit(only=TRAINER_TENANT)
+
+    def _drain_completions(self) -> int:
+        return self.service.drain_completions()
+
+    def _drain_rewards(self, block: bool = False) -> int:
+        return self.service.drain_rewards(block=block)
+
+    def _drain_rollout(self):
+        """Synchronous baselines: rollout and training strictly
+        alternate, so — like the simulator's sync mode — leftover
+        in-flight rollouts are CANCELLED after the batch, not completed
+        into the next one."""
+        self.service.drain_tenant(TRAINER_TENANT)
+
+    @property
+    def reward_retries(self) -> int:
+        return self._tenant.stats["reward_retries"]
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
     def _start_rollout_worker(self):
-        if self._stop.is_set():
-            raise RuntimeError("runner is closed; create a new LiveRLRunner")
-        if self._rollout_thread is None:
-            self._rollout_thread = threading.Thread(
-                target=self._rollout_worker_loop, name="rollout-worker",
-                daemon=True)
-            self._rollout_thread.start()
-        self._run_rollout.set()
+        self.service.start()
 
     def _pause_rollout_worker(self):
-        """Park the worker; returns only once no tick is in flight (any
-        tick that already passed the flag check finishes first)."""
-        self._run_rollout.clear()
-        with self._pump_lock:
-            pass
+        """Park the service thread; returns only once no tick is in
+        flight (any tick that already passed the flag check finishes
+        first)."""
+        self.service.pause()
 
     def close(self):
-        """Join the rollout worker and the weight-push thread."""
-        self._run_rollout.clear()
-        self._stop.set()
-        if self._rollout_thread is not None:
-            self._rollout_thread.join(timeout=10.0)
-            self._rollout_thread = None
-        self._await_push()
-        self._push_pool.shutdown(wait=True)
+        """Shut down the service thread and the weight-push thread.
+        Idempotent and exception-safe: double-close is a no-op, and a
+        close after a service-thread crash returns promptly instead of
+        hanging on the join (regression: tests/test_rollout_service.py)."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.service.close()
+        finally:
+            try:
+                self._await_push()
+            finally:
+                self._push_pool.shutdown(wait=True)
 
     def __enter__(self):
         return self
@@ -448,14 +425,14 @@ class LiveRLRunner:
     # ------------------------------------------------------------------
     def _await_batch(self) -> List[Trajectory]:
         """Protocol step (1). Threaded modes block on the buffer (the
-        worker produces concurrently); synchronous modes pump the rollout
-        cooperatively until a batch exists."""
+        service produces concurrently); synchronous modes tick the
+        service cooperatively until a batch exists."""
         if self.threaded:
             deadline = time.monotonic() + self.cfg.batch_timeout_s
             while True:
-                if self._rollout_error is not None:
+                if self.service.error is not None:
                     raise RuntimeError("rollout worker died") \
-                        from self._rollout_error
+                        from self.service.error
                 try:
                     return self.buffer.get_batch(self.cfg.batch_size,
                                                  timeout=0.2)
@@ -468,35 +445,10 @@ class LiveRLRunner:
             batch = self.buffer.try_get_batch(self.cfg.batch_size)
             if batch is not None:
                 return batch
-            # sync modes have no worker thread, so the pump lock is
-            # uncontended here — taken anyway so every _rollout_tick call
-            # site satisfies the same documented discipline
-            with self._pump_lock:
-                self._rollout_tick()
+            self.service.tick()
             pumps += 1
             if pumps > self.cfg.max_pump_steps:
                 raise RuntimeError("rollout starved: no batch collected")
-
-    def _drain_rollout(self):
-        """Synchronous baselines: rollout and training strictly alternate,
-        so — like the simulator's sync mode — leftover in-flight rollouts
-        are CANCELLED after the batch, not completed into the next one
-        (each iteration trains on freshly generated trajectories). The
-        pump lock is uncontended in sync modes (no worker thread) but
-        taken anyway: the rollout state keeps one documented guard."""
-        with self._pump_lock:
-            for em in list(self.active):
-                em.abort()
-            pumps = 0
-            while self.proxy.busy:
-                self.proxy.pump()
-                self._drain_completions()
-                self._drain_rewards()
-                pumps += 1
-                if pumps > self.cfg.max_pump_steps:
-                    raise RuntimeError("rollout did not drain")
-            self._drain_completions()
-            self._drain_rewards(block=True)
 
     def _push_async(self):
         """Publish the new weights off-thread; the transfer overlaps the
@@ -545,9 +497,10 @@ class LiveRLRunner:
                 self.last_batch = batch_trajs
                 # (2)-(5) the ONLY rollout/trainer barrier: suspend,
                 # pull + update + in-flight KV recompute, resume — atomic
-                # w.r.t. the pump so a weight swap never races a decode.
+                # w.r.t. the service tick so a weight swap never races a
+                # decode.
                 self._await_push()
-                with self._pump_lock:
+                with self.service.barrier():
                     self.proxy.suspend()
                     pulled = pull_params(self.store, self.state.params)
                     if pulled is not None:
@@ -558,9 +511,10 @@ class LiveRLRunner:
                                               recompute_caches=True)
                     self.proxy.resume()
                     if self.barrier_hook is not None:
-                        # rollout snapshot point: the pump lock is held,
-                        # so every engine slot / env manager / pending
-                        # reward is quiescent and mutually consistent
+                        # rollout snapshot point: the service lock is
+                        # held, so every engine slot / env manager /
+                        # pending reward is quiescent and mutually
+                        # consistent
                         self.barrier_hook(self, step)
                 # (6) train_step, overlapped with the resumed rollout
                 batch = self._pack(batch_trajs)
@@ -571,7 +525,7 @@ class LiveRLRunner:
                 self.version = int(self.state.version)
                 self.buffer.set_version(self.version)
                 if self.profiler is not None:
-                    with self._pump_lock:       # §9 online re-routing
+                    with self.service.barrier():    # §9 online re-routing
                         self.profiler.apply_to(self.proxy)
                 self._push_async()
                 if one_off:

@@ -179,7 +179,15 @@ class FTSupervisor:
         treedef, tmpl_leaves = self._slot_template()
         lost = set(ev.lost_rids)
         rehomed = set()     # lost rids re-registered under the SAME id
-        for em in list(runner.active):
+        # every SERVICE tenant's in-flight managers dangle on the dead
+        # engine, not just the trainer's — recover them all (uncovered
+        # client managers take the retry path: the snapshot plane only
+        # captures the trainer tenant)
+        if getattr(runner, "service", None) is not None:
+            ems = [em for t in runner.service.tenants() for em in t.active]
+        else:
+            ems = list(runner.active)
+        for em in ems:
             rid = em._active_req
             if rid is None or rid not in lost \
                     or em.state.name != "GENERATING":
@@ -197,11 +205,16 @@ class FTSupervisor:
                 proxy.reinject(
                     self.snapshotter._rebuild_handoff(
                         hrec, treedef, tmpl_leaves),
-                    callback=em.on_generation)
+                    callback=em.on_generation,
+                    # drop_routes above unsubscribed the manager's token
+                    # stream — re-register it so streaming consumers see
+                    # the recovery as a seamless (idempotent) replay
+                    on_tokens=em.on_tokens)
                 rehomed.add(rid)
                 ev.recovered_tokens += prefix + len(hrec["new_tokens"])
             elif rid in queued:
-                proxy.submit(queued[rid], em.on_generation)
+                proxy.submit(queued[rid], em.on_generation,
+                             on_tokens=em.on_tokens)
                 rehomed.add(rid)
                 ev.recovered_tokens += prefix
             else:

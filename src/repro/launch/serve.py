@@ -54,6 +54,12 @@ def main(argv=None):
                          "latency is bounded by one macro-step, so lower "
                          "K for latency-sensitive serving; 1 = legacy "
                          "single-step dispatch)")
+    ap.add_argument("--service", action="store_true",
+                    help="serve through the multi-tenant RolloutService "
+                         "(Rollout-as-a-Service): prompts are submitted "
+                         "as streaming jobs and tokens print as the "
+                         "engines emit them, while the service thread "
+                         "owns the pump loop")
     ap.add_argument("--async-pump", action="store_true",
                     help="pump the engines from a background thread while "
                          "requests are submitted concurrently (the live "
@@ -68,6 +74,9 @@ def main(argv=None):
     if args.failure_rate > 0 and args.async_pump:
         ap.error("--failure-rate drives the synchronous pump loop; drop "
                  "--async-pump")
+    if args.service and (args.async_pump or args.failure_rate > 0):
+        ap.error("--service owns the pump loop; drop --async-pump / "
+                 "--failure-rate")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -97,6 +106,28 @@ def main(argv=None):
         proxy = LLMProxy([EngineHandle(eng, "local")])
 
     prompts = args.prompt or ["the agent moves ", "reward comes from "]
+    if args.service:
+        # Rollout-as-a-Service: the service thread owns the pump loop;
+        # this thread is an ordinary streaming client
+        from repro.serve import RolloutJob, RolloutService
+        with RolloutService(proxy) as svc:
+            svc.register_tenant("cli")
+            svc.start()
+            tickets = [
+                (p, svc.submit("cli", RolloutJob(
+                    kind="prompt",
+                    prompt=TOKENIZER.encode(p, bos=True),
+                    max_new_tokens=args.max_new_tokens,
+                    temperature=args.temperature)))
+                for p in prompts]
+            for p, tk in tickets:
+                print(f"[{tk.job_id}] {p!r} -> ", end="", flush=True)
+                for chunk in tk.stream:      # prints as the engines emit
+                    print(TOKENIZER.decode(chunk.tokens), end="",
+                          flush=True)
+                print(f"  ({tk.wait(timeout=60)})")
+        proxy.release_bindings()
+        return
     results = []
     requests = {}
     if args.failure_rate > 0:

@@ -160,6 +160,17 @@ class InferenceEngine:
         self.on_finish = on_finish
         self.role = role                           # guarded by: _step_lock
         self.on_handoff = on_handoff
+        # streaming hook (Rollout-as-a-Service tier): called under
+        # _step_lock with (request_id, CUMULATIVE new_tokens, CUMULATIVE
+        # logprobs) whenever a slot makes progress — on admission (first
+        # sampled token), after each decode macro-step, and at finish.
+        # Cumulative delivery makes the hook idempotent downstream
+        # (TokenStream keeps per-request offsets), so replays across PD
+        # handoffs / KV recomputes / FT re-injection are no-ops. The hook
+        # must only take leaf locks (see TokenStream) — never _step_lock,
+        # the proxy lock, or the service lock.
+        self.on_progress: Optional[
+            Callable[[str, List[int], List[float]], None]] = None
         self.steps_per_dispatch = steps_per_dispatch
         self.donate = donate
         # Admission prefill and KV recompute (protocol step (5)) pad
@@ -444,6 +455,9 @@ class InferenceEngine:
         tok, lp = self._prefill_slot(i, req.temperature)
         self.prefill_tokens += s.pos      # real prompt tokens, not padding
         self._append_token(i, int(tok[0]), float(lp[0]))
+        # stream the first sampled token (idempotent if _append_token
+        # already finished the request and _finish emitted it)
+        self._emit_progress(req.request_id, s)
         if self.role == "prefill" and s.active:
             # still generating after the first token: migrate the slot's
             # cache to a decode-role engine instead of decoding here
@@ -506,6 +520,22 @@ class InferenceEngine:
         self.handoffs_in += 1
         return True
 
+    def _emit_progress(self, rid: str, s: _Slot):   # requires: _step_lock
+        """Stream slot progress: the CUMULATIVE new-token list (survives
+        ``_finish``, which clears only ``request``/``active``)."""
+        if self.on_progress is not None and s.new_tokens:
+            self.on_progress(rid, list(s.new_tokens), list(s.logprobs))
+
+    def _emit_step_progress(self, active: List[int]):   # requires: _step_lock
+        """Post-macro-step streaming for slots still generating (finished
+        slots already emitted their final cumulative state in _finish)."""
+        if self.on_progress is None:
+            return
+        for i in active:
+            s = self._slots[i]
+            if s.active:
+                self._emit_progress(s.request.request_id, s)
+
     def _append_token(self, i: int, tok: int, lp: float):   # requires: _step_lock
         s = self._slots[i]
         s.tokens.append(tok)
@@ -530,6 +560,10 @@ class InferenceEngine:
             self._results[res.request_id] = res
         s.active = False
         s.request = None
+        # final cumulative stream push BEFORE on_finish: the proxy's
+        # finish hook unregisters the request's stream, so this ordering
+        # guarantees the stream saw every token by the time it closes
+        self._emit_progress(res.request_id, s)
         if self.on_finish:
             self.on_finish(res)
 
@@ -686,6 +720,7 @@ class InferenceEngine:
                 if self._slots[i].active:
                     self.decode_tokens += 1
                     self._append_token(i, int(toks[i]), float(lps[i]))
+            self._emit_step_progress(active)
             return len(active)
         # device-resident block: the jit consumes one key per inner step
         # (the SAME split-chain schedule as K single-step dispatches, so
@@ -709,6 +744,7 @@ class InferenceEngine:
                 self.decode_tokens += 1
                 n_emitted += 1
                 self._append_token(i, int(toks[k, i]), float(lps[k, i]))
+        self._emit_step_progress(active)
         return n_emitted
 
     # ------------------------------------------------------------------

@@ -1,0 +1,9 @@
+"""Rollout-as-a-Service: the multi-tenant streaming serving tier over the
+disaggregated data plane (service loop, job/ticket request boundary,
+per-tenant weighted QoS, incremental token streams)."""
+from repro.serve.service import (JobState, JobTicket, RolloutJob,
+                                 RolloutService, Tenant)
+from repro.serve.stream import StreamChunk, TokenStream
+
+__all__ = ["JobState", "JobTicket", "RolloutJob", "RolloutService",
+           "Tenant", "StreamChunk", "TokenStream"]

@@ -1,0 +1,153 @@
+"""Incremental token streams (StreamRL-style disaggregated stream
+generation): tokens are delivered to the consumer as the engines emit
+them, not at trajectory end, so time-to-first-token and per-token tail
+latency become measurable quantities instead of being hidden inside a
+blocking generate() call.
+
+A :class:`TokenStream` is the consumer half of one rollout job. Producers
+(the engine progress hooks routed through ``LLMProxy`` plus the service's
+final-result callback) push CUMULATIVE per-request token lists; the stream
+keeps a per-request delivered offset and appends only the unseen suffix,
+which makes delivery idempotent — replays after an engine handoff, a
+weight-sync re-prefill, or a fault-tolerance re-injection collapse into
+no-ops instead of duplicating tokens. Per request id the delivered stream
+is therefore monotonic and gap-free by construction (chunk ``k`` starts
+exactly where chunk ``k-1`` ended).
+
+Locking: ``TokenStream._cv`` is a LEAF lock — push/close never call out
+while holding it, so producers may push from under the engine's
+``_step_lock`` (via the proxy progress hook) without joining any
+cross-class lock cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Iterator, List, Optional
+
+
+@dataclasses.dataclass
+class StreamChunk:
+    """One incremental delivery: ``tokens`` are the request's new tokens
+    ``[start, start + len(tokens))`` — consecutive chunks of the same
+    ``request_id`` tile the stream with no gaps or overlaps."""
+    request_id: str
+    start: int                    # offset into the request's new tokens
+    tokens: List[int]
+    logprobs: List[float]
+    t: float = 0.0                # arrival time (time.monotonic())
+
+    @property
+    def end(self) -> int:
+        return self.start + len(self.tokens)
+
+
+class TokenStream:
+    """Thread-safe incremental token stream for one rollout job.
+
+    Producers call :meth:`push` with the CUMULATIVE new-token list of a
+    request (what ``_Slot.new_tokens`` / ``GenResult.tokens`` hold);
+    consumers iterate chunks (:meth:`get`, :meth:`__iter__`) or wait for
+    completion (:meth:`result_tokens`). One stream can multiplex several
+    request ids (a multi-turn env job issues one request per turn).
+    """
+
+    def __init__(self, job_id: str = ""):
+        self.job_id = job_id
+        self._cv = threading.Condition()
+        self._chunks: List[StreamChunk] = []       # guarded by: _cv
+        self._cursor = 0                           # guarded by: _cv
+        self._delivered: Dict[str, int] = {}       # guarded by: _cv
+        self.closed = False                        # guarded by: _cv
+        self.finish_reason: Optional[str] = None   # guarded by: _cv
+        self.created_t = time.monotonic()
+        self.first_token_t: Optional[float] = None  # guarded by: _cv
+
+    # -- producer side --------------------------------------------------
+    def push(self, request_id: str, cum_tokens: List[int],
+             cum_logprobs: List[float]) -> int:
+        """Deliver the unseen suffix of ``cum_tokens`` (idempotent: a
+        replayed or shorter cumulative list is a no-op). Returns the
+        number of newly delivered tokens."""
+        with self._cv:
+            if self.closed:
+                return 0
+            seen = self._delivered.get(request_id, 0)
+            if len(cum_tokens) <= seen:
+                return 0
+            now = time.monotonic()
+            chunk = StreamChunk(
+                request_id=request_id, start=seen,
+                tokens=list(cum_tokens[seen:]),
+                logprobs=list(cum_logprobs[seen:len(cum_tokens)]),
+                t=now)
+            self._delivered[request_id] = len(cum_tokens)
+            self._chunks.append(chunk)
+            if self.first_token_t is None:
+                self.first_token_t = now
+            self._cv.notify_all()
+            return len(chunk.tokens)
+
+    def close(self, finish_reason: str = "stop"):
+        """Idempotent: the first close wins the finish reason."""
+        with self._cv:
+            if not self.closed:
+                self.closed = True
+                self.finish_reason = finish_reason
+            self._cv.notify_all()
+
+    # -- consumer side --------------------------------------------------
+    def get(self, timeout: Optional[float] = None) -> Optional[StreamChunk]:
+        """Next undelivered chunk; None once the stream is closed and
+        drained. Raises TimeoutError if nothing arrives in time."""
+        with self._cv:
+            def ready():
+                return self._cursor < len(self._chunks) or self.closed
+            if not self._cv.wait_for(ready, timeout=timeout):
+                raise TimeoutError(
+                    f"stream {self.job_id!r}: no chunk within {timeout}s")
+            if self._cursor < len(self._chunks):
+                chunk = self._chunks[self._cursor]
+                self._cursor += 1
+                return chunk
+            return None
+
+    def __iter__(self) -> Iterator[StreamChunk]:
+        while True:
+            chunk = self.get()
+            if chunk is None:
+                return
+            yield chunk
+
+    # -- inspection ------------------------------------------------------
+    def chunks(self) -> List[StreamChunk]:
+        """Every chunk delivered so far (the consumer cursor is not
+        advanced — latency analysis reads this after the fact)."""
+        with self._cv:
+            return list(self._chunks)
+
+    def token_count(self) -> int:
+        with self._cv:
+            return sum(self._delivered.values())
+
+    def tokens_for(self, request_id: str) -> List[int]:
+        """The request's delivered tokens, reassembled from its chunks."""
+        with self._cv:
+            out: List[int] = []
+            for c in self._chunks:
+                if c.request_id == request_id:
+                    assert c.start == len(out), \
+                        f"stream gap: chunk starts at {c.start}, " \
+                        f"delivered {len(out)}"
+                    out.extend(c.tokens)
+            return out
+
+    def result_tokens(self, timeout: Optional[float] = None) -> List[int]:
+        """Block until the stream closes; all delivered tokens in chunk
+        order (single-request jobs: the full generation)."""
+        with self._cv:
+            if not self._cv.wait_for(lambda: self.closed, timeout=timeout):
+                raise TimeoutError(
+                    f"stream {self.job_id!r} not closed within {timeout}s")
+            return [t for c in self._chunks for t in c.tokens]

@@ -175,7 +175,7 @@ class _StubProxy:
     def abort(self, rid):
         self.aborted.append(rid)
 
-    def submit(self, req, callback=None):
+    def submit(self, req, callback=None, on_tokens=None):
         self.submitted.append(req)
 
 
