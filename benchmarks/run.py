@@ -30,6 +30,7 @@ ALL = [
     "async_overlap",    # async rollout/train overlap on the live plane
     "fault_tolerance",  # §8: rollout checkpoint/restore vs scratch restart
     "traffic_gen",      # Rollout-as-a-Service: multi-tenant QoS under load
+    "sharded_engine",   # TP engine groups: parity, sync bytes, PD 2->4
     "kernels_bench",
     "roofline",         # §Roofline from the dry-run artifacts
 ]

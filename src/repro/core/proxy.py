@@ -347,6 +347,24 @@ class LLMProxy:
             h.engine.update_params(params, version,
                                    recompute_caches=recompute_caches)
 
+    def update_all_chunks(self, chunks, version: int,
+                          recompute_caches: bool = True):
+        """Sharded weight sync fan-out: every engine assembles the new
+        version from the store's per-shard chunks straight into its own
+        placement (``InferenceEngine.update_from_chunks``) — a TP engine
+        never materializes a full unsharded param copy; a single-device
+        engine concatenates. Same no-op/recompute semantics as
+        :meth:`update_all`."""
+        for h in self.handles:
+            h.engine.update_from_chunks(chunks, version,
+                                        recompute_caches=recompute_caches)
+
+    def max_group_size(self) -> int:
+        """Largest TP group across engines (1 = all single-device). The
+        runner keys its push format off this: >1 selects per-shard
+        chunked publication (``weightstore.push_params_sharded``)."""
+        return max(h.engine.tp_group for h in self.handles)
+
     # ------------------------------------------------------------------
     # dynamic rebalancing (prefill<->decode role switch)
     # ------------------------------------------------------------------
@@ -449,17 +467,22 @@ class LLMProxy:
         out = []
         for h in self.handles:
             hw = REGISTRY.get(h.pool)
+            # a live TP group prices as a GROUP: tp-degree speedup in the
+            # PerfModel, group-size multiplier on normalized cost
+            tp = h.engine.tp_group
+            devices = (tp if tp > 1
+                       else (h.binding.group.size if h.binding else 1))
             row = {"name": h.name, "pool": h.pool, "role": h.role,
-                   "devices": (h.binding.group.size if h.binding else 1)}
+                   "devices": devices, "tp_group": tp}
             if hw is not None:
                 conc = max(h.engine.max_slots, 1)
                 row.update({
                     "klass": hw.klass,
                     "affine": ROLE_CLASS_AFFINITY.get(h.role) == hw.klass,
                     "modeled_prefill_s": PERF.prefill_time(
-                        cfg, prompt_tokens, hw, 1),
+                        cfg, prompt_tokens, hw, tp),
                     "modeled_decode_s": PERF.decode_time(
-                        cfg, new_tokens, hw, 1,
+                        cfg, new_tokens, hw, tp,
                         context=prompt_tokens + new_tokens,
                         concurrency=conc),
                     "norm_cost": hw.norm_cost * row["devices"],
@@ -549,6 +572,9 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
                    hw_affinity: Optional[Dict[str, str]] = None,
                    resource_manager: Optional[ResourceManager] = None,
                    devices_per_engine: int = 1,
+                   prefill_devices_per_engine: Optional[int] = None,
+                   decode_devices_per_engine: Optional[int] = None,
+                   shard_rules: Optional[Dict] = None,
                    rebalancer: Optional[RebalancerConfig] = None,
                    steps_per_dispatch: int = 8,
                    donate: bool = True) -> LLMProxy:
@@ -565,18 +591,41 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
     pools. Pass a ``RebalancerConfig`` to enable the dynamic
     prefill<->decode role switch (which releases/re-binds those groups).
 
+    ``devices_per_engine`` > 1 makes every engine a LIVE TP group: each
+    engine claims a disjoint slice of ``jax.devices()``, builds a
+    (1, n) group mesh, and executes sharded over it (see
+    ``InferenceEngine`` with ``mesh=``). Prefill and decode sizes can
+    differ (``prefill_devices_per_engine`` / ``decode_devices_per_engine``
+    override the common value — the §6.3 heterogeneous split, e.g. 2-way
+    prefill feeding 4-way decode; KV handoffs re-shard across the size
+    change). Whenever ANY group exceeds 1, every engine gets a disjoint
+    group (a size-1 group mesh for the others) so no two engines contend
+    for the same device. Too few visible devices or a group size that
+    shards nothing raises instead of silently degrading to one device —
+    the no-op ``devices_per_engine`` trap this replaces. On CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
+    importing jax.
+
     ``steps_per_dispatch``/``donate`` configure the decode hot path of
     every engine (K scanned decode steps per jit dispatch / in-place
     donated KV caches; see ``InferenceEngine``). The shared ``params``
-    pytree is exactly why engines never donate their params argument."""
-    handles = []
+    pytree is exactly why engines never donate their params argument
+    (TP engines place a private SHARDED copy of it per group)."""
+    pre_n = (prefill_devices_per_engine
+             if prefill_devices_per_engine is not None
+             else devices_per_engine)
+    dec_n = (decode_devices_per_engine
+             if decode_devices_per_engine is not None
+             else devices_per_engine)
+    if pre_n < 1 or dec_n < 1:
+        raise ValueError("devices_per_engine must be >= 1, got "
+                         f"prefill={pre_n} decode={dec_n}")
     bound = []
 
-    def _bind(wid, role):
+    def _bind(wid, role, n_devices):
         if resource_manager is None:
             return None
-        b = resource_manager.bind_affine(wid, role,
-                                         n_devices=devices_per_engine)
+        b = resource_manager.bind_affine(wid, role, n_devices=n_devices)
         if b is None:
             for w in bound:                  # no partial-placement leak
                 resource_manager.release(w)
@@ -586,25 +635,37 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
         bound.append(wid)
         return b
 
-    for i in range(n_prefill):
-        name = f"prefill-{i}"
-        b = _bind(name, "prefill")
+    # bind the whole placement BEFORE claiming live devices: an RM
+    # inventory shortfall reports as "cannot bind" (with partial release)
+    # rather than a live-device error, and a live-device shortfall never
+    # leaks RM bindings either
+    plan = ([(f"prefill-{i}", "prefill", pre_n, seed + i, prefill_pool)
+             for i in range(n_prefill)]
+            + [(f"decode-{i}", "decode", dec_n, seed + 1000 + i,
+                decode_pool)
+               for i in range(n_decode)])
+    bindings = [_bind(name, role, n) for name, role, n, _, _ in plan]
+    meshes = [None] * len(plan)
+    if max(pre_n, dec_n) > 1:
+        from repro.launch.mesh import (allocate_engine_devices,
+                                       make_group_mesh)
+        try:
+            groups = allocate_engine_devices([n for _, _, n, _, _ in plan])
+        except RuntimeError:
+            if resource_manager is not None:
+                for w in bound:
+                    resource_manager.release(w)
+            raise
+        meshes = [make_group_mesh(g) for g in groups]
+    handles = []
+    for (name, role, _, eng_seed, pool), b, mesh in zip(plan, bindings,
+                                                        meshes):
         eng = InferenceEngine(model, params, max_slots=max_slots,
-                              max_len=max_len, seed=seed + i,
-                              role="prefill",
+                              max_len=max_len, seed=eng_seed, role=role,
                               steps_per_dispatch=steps_per_dispatch,
-                              donate=donate)
-        handles.append(EngineHandle(eng, b.group.pool if b else prefill_pool,
-                                    name, binding=b))
-    for i in range(n_decode):
-        name = f"decode-{i}"
-        b = _bind(name, "decode")
-        eng = InferenceEngine(model, params, max_slots=max_slots,
-                              max_len=max_len, seed=seed + 1000 + i,
-                              role="decode",
-                              steps_per_dispatch=steps_per_dispatch,
-                              donate=donate)
-        handles.append(EngineHandle(eng, b.group.pool if b else decode_pool,
+                              donate=donate, mesh=mesh,
+                              shard_rules=shard_rules)
+        handles.append(EngineHandle(eng, b.group.pool if b else pool,
                                     name, binding=b))
     return LLMProxy(handles, hw_affinity=hw_affinity, pd_disagg=True,
                     resource_manager=resource_manager, rebalancer=rebalancer)

@@ -78,7 +78,9 @@ from repro.core.envmanager import EMState, EnvManager, RolloutPolicy
 from repro.core.profiler import AffinityProfiler
 from repro.core.proxy import LLMProxy
 from repro.core.serverless import ServerlessPlatform
-from repro.core.weightstore import MooncakeStore, pull_params, push_params
+from repro.core.weightstore import (MooncakeStore, pull_param_chunks,
+                                    pull_params, push_params,
+                                    push_params_sharded)
 from repro.data.pipeline import Trajectory, TaskSampler, pack_batch
 from repro.data.tokenizer import ByteTokenizer
 from repro.envs import make_env
@@ -274,8 +276,21 @@ class LiveRLRunner:
         self._last_aborted = 0
         self._last_role_switches = 0
         self._last_deduped = 0
+        # weight-sync format: a plane with TP engine groups publishes
+        # PER-SHARD chunks (engines assemble their own shards and never
+        # materialize a full per-engine copy); a single-device plane
+        # keeps the dense per-leaf format. Chunk dims follow the same
+        # serve rules the engines place with, so chunks and shards line
+        # up by construction.
+        self._tp_chunks = self.proxy.max_group_size()
+        if self._tp_chunks > 1:
+            from repro.distributed.sharding import model_axis_dims
+            self._chunk_dims = model_axis_dims(self.state.params,
+                                               self._tp_chunks)
+        else:
+            self._chunk_dims = None
         # publish v0 weights
-        push_params(self.store, self.state.params, version=0)
+        self._publish_params(self.state.params, 0)
 
     # ------------------------------------------------------------------
     # rollout policy (runs inside the service tick via the tenant hooks)
@@ -450,12 +465,22 @@ class LiveRLRunner:
             if pumps > self.cfg.max_pump_steps:
                 raise RuntimeError("rollout starved: no batch collected")
 
+    def _publish_params(self, params, version: int) -> int:
+        """Publish one weight version in the plane's format: per-shard
+        chunks when any engine runs a TP group, dense otherwise. The FT
+        restore path republishes through this too, so a restored plane
+        keeps pulling the format its engines expect."""
+        if self._tp_chunks > 1:
+            return push_params_sharded(self.store, params, version,
+                                       self._tp_chunks, self._chunk_dims)
+        return push_params(self.store, params, version)
+
     def _push_async(self):
         """Publish the new weights off-thread; the transfer overlaps the
         resumed rollout and is awaited at the next suspend barrier."""
         params, version = self.state.params, self.version
         self._push_future = self._push_pool.submit(
-            push_params, self.store, params, version)
+            self._publish_params, params, version)
 
     def _await_push(self):
         if self._push_future is not None:
@@ -502,13 +527,21 @@ class LiveRLRunner:
                 self._await_push()
                 with self.service.barrier():
                     self.proxy.suspend()
-                    pulled = pull_params(self.store, self.state.params)
-                    if pulled is not None:
-                        params, v = pulled
-                        # (5) recomp happens inside update_all (no-op for
-                        # engines already at version v)
-                        self.proxy.update_all(params, v,
-                                              recompute_caches=True)
+                    # (5) recomp happens inside update_all[_chunks]
+                    # (no-op for engines already at version v)
+                    if self._tp_chunks > 1:
+                        pulled = pull_param_chunks(self.store,
+                                                   self.state.params)
+                        if pulled is not None:
+                            chunks, v = pulled
+                            self.proxy.update_all_chunks(
+                                chunks, v, recompute_caches=True)
+                    else:
+                        pulled = pull_params(self.store, self.state.params)
+                        if pulled is not None:
+                            params, v = pulled
+                            self.proxy.update_all(params, v,
+                                                  recompute_caches=True)
                     self.proxy.resume()
                     if self.barrier_hook is not None:
                         # rollout snapshot point: the service lock is

@@ -22,7 +22,11 @@ class Bucket:
     name: str
     version: int
     nbytes: int
-    payload: Any = None        # list of (leaf_index, array) in live mode
+    payload: Any = None        # list of (leaf_index, array) in live mode;
+    #                            sharded buckets carry
+    #                            (leaf_index, shard_index, n_shards, dim,
+    #                             array) entries instead
+    sharded: bool = False
 
 
 @dataclass
@@ -50,24 +54,54 @@ class MooncakeStore:
         with self._lock:
             return self._latest
 
-    def bucketize(self, leaves: List[np.ndarray],
-                  version: int) -> List[Bucket]:
-        """Split a flat list of arrays into ~bucket_bytes buckets."""
+    def _pack(self, entries: List[Tuple], version: int,
+              sharded: bool) -> List[Bucket]:
+        """Pack (..., array) payload entries into ~bucket_bytes buckets."""
         buckets: List[Bucket] = []
-        cur: List[Tuple[int, np.ndarray]] = []
+        cur: List[Tuple] = []
         cur_bytes = 0
-        for i, leaf in enumerate(leaves):
-            nb = int(np.asarray(leaf).nbytes)
+        for entry in entries:
+            nb = int(np.asarray(entry[-1]).nbytes)
             if cur and cur_bytes + nb > self.bucket_bytes:
                 buckets.append(Bucket(f"v{version}.b{len(buckets)}",
-                                      version, cur_bytes, cur))
+                                      version, cur_bytes, cur,
+                                      sharded=sharded))
                 cur, cur_bytes = [], 0
-            cur.append((i, leaf))
+            cur.append(entry)
             cur_bytes += nb
         if cur:
             buckets.append(Bucket(f"v{version}.b{len(buckets)}",
-                                  version, cur_bytes, cur))
+                                  version, cur_bytes, cur,
+                                  sharded=sharded))
         return buckets
+
+    def bucketize(self, leaves: List[np.ndarray],
+                  version: int) -> List[Bucket]:
+        """Split a flat list of arrays into ~bucket_bytes buckets."""
+        return self._pack(list(enumerate(leaves)), version, sharded=False)
+
+    def bucketize_sharded(self, leaves: List[np.ndarray], version: int,
+                          n_shards: int,
+                          chunk_dims: List[Optional[int]]) -> List[Bucket]:
+        """Split leaves into per-shard chunks first, THEN into buckets:
+        leaf ``i`` with ``chunk_dims[i] = d`` is split into ``n_shards``
+        equal chunks along dim ``d`` (the dim an n-way engine group
+        shards over its "model" axis — ``sharding.model_axis_dims``);
+        ``chunk_dims[i] = None`` leaves replicate and travel whole. An
+        engine pulling version v then reads exactly the chunks its
+        devices need (``InferenceEngine.update_from_chunks``) instead of
+        a monolithic per-leaf array."""
+        entries: List[Tuple] = []
+        for i, leaf in enumerate(leaves):
+            d = chunk_dims[i] if i < len(chunk_dims) else None
+            arr = np.asarray(leaf)
+            if d is None or arr.shape[d] % n_shards != 0:
+                entries.append((i, 0, 1, None, arr))
+            else:
+                for j, part in enumerate(np.split(arr, n_shards, axis=d)):
+                    entries.append((i, j, n_shards, d,
+                                    np.ascontiguousarray(part)))
+        return self._pack(entries, version, sharded=True)
 
     def publish(self, buckets: List[Bucket]):
         """Training side: write-once publication of a new version."""
@@ -128,6 +162,10 @@ def pull_params(store: MooncakeStore, like) -> Optional[Tuple[Any, int]]:
     buckets = store.pull_latest()
     if not buckets:
         return None
+    if any(b.sharded for b in buckets):
+        raise RuntimeError(
+            "store holds a sharded version; pull with pull_param_chunks "
+            "(engines assemble shards via update_from_chunks)")
     import jax
     n_leaves = len(jax.tree.leaves(like))
     leaves: List[Optional[np.ndarray]] = [None] * n_leaves
@@ -137,3 +175,52 @@ def pull_params(store: MooncakeStore, like) -> Optional[Tuple[Any, int]]:
     if any(x is None for x in leaves):
         raise RuntimeError("incomplete bucket set")
     return unflatten_like(like, leaves), buckets[0].version
+
+
+def push_params_sharded(store: MooncakeStore, params, version: int,
+                        n_shards: int,
+                        chunk_dims: List[Optional[int]]) -> int:
+    """Live-mode publication of real weights as PER-SHARD chunks (§6.3
+    data movement at TP scale: the trainer pushes once; each engine
+    device pulls only its chunks). Returns bytes pushed."""
+    leaves = flatten_params(params)
+    buckets = store.bucketize_sharded(leaves, version, n_shards,
+                                      chunk_dims)
+    store.publish(buckets)
+    return sum(b.nbytes for b in buckets)
+
+
+def pull_param_chunks(store: MooncakeStore, like
+                      ) -> Optional[Tuple[List[Tuple], int]]:
+    """Live-mode pull of the latest version in CHUNK form: one
+    ``(dim, [parts in shard order])`` entry per leaf of ``like`` —
+    the input format of ``InferenceEngine.update_from_chunks``. Plain
+    (unsharded) buckets degrade to single-part entries, so a mixed plane
+    (e.g. an FT restore republishing a dense snapshot) still pulls
+    through the one code path. Returns (chunks, version) or None."""
+    buckets = store.pull_latest()
+    if not buckets:
+        return None
+    import jax
+    n_leaves = len(jax.tree.leaves(like))
+    dims: List[Optional[int]] = [None] * n_leaves
+    parts: List[Dict[int, np.ndarray]] = [dict() for _ in range(n_leaves)]
+    counts = [1] * n_leaves
+    for b in buckets:
+        for entry in b.payload:
+            if b.sharded:
+                i, j, n, d, arr = entry
+                dims[i] = d
+                counts[i] = n
+                parts[i][j] = arr
+            else:
+                i, arr = entry
+                parts[i][0] = arr
+    chunks: List[Tuple] = []
+    for i in range(n_leaves):
+        if len(parts[i]) != counts[i]:
+            raise RuntimeError(
+                f"incomplete bucket set: leaf {i} has {len(parts[i])} of "
+                f"{counts[i]} shards")
+        chunks.append((dims[i], [parts[i][j] for j in range(counts[i])]))
+    return chunks, buckets[0].version

@@ -15,7 +15,8 @@ from __future__ import annotations
 import contextlib
 import re
 import threading
-from typing import Any, Dict, Optional, Sequence, Tuple
+import warnings
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 import jax
 import numpy as np
@@ -90,20 +91,27 @@ class _Ctx(threading.local):
     def __init__(self):
         self.mesh: Optional[Mesh] = None
         self.rules: Dict[str, Any] = {}
+        self.on_drop: Optional[Callable[[], None]] = None
 
 
 _CTX = _Ctx()
 
 
 @contextlib.contextmanager
-def axis_rules(mesh: Optional[Mesh], rules: Dict[str, Any]):
-    """Activate a (mesh, logical-rules) context for model tracing."""
-    old = (_CTX.mesh, _CTX.rules)
-    _CTX.mesh, _CTX.rules = mesh, dict(rules)
+def axis_rules(mesh: Optional[Mesh], rules: Dict[str, Any],
+               on_drop: Optional[Callable[[], None]] = None):
+    """Activate a (mesh, logical-rules) context for model tracing.
+
+    ``on_drop`` (optional) is called once per dimension whose requested
+    sharding ``fit_spec`` has to drop because the mesh axes do not divide
+    it — engines use it to surface a per-engine drop counter in
+    ``stats()`` (see ``ShardingDropWarning``)."""
+    old = (_CTX.mesh, _CTX.rules, _CTX.on_drop)
+    _CTX.mesh, _CTX.rules, _CTX.on_drop = mesh, dict(rules), on_drop
     try:
         yield
     finally:
-        _CTX.mesh, _CTX.rules = old
+        _CTX.mesh, _CTX.rules, _CTX.on_drop = old
 
 
 def _mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -115,6 +123,13 @@ def resolve_spec(logical: Sequence[Optional[str]],
                  mesh: Optional[Mesh]) -> P:
     """Map a tuple of logical names (or None) to a PartitionSpec."""
     axes_avail = set(_mesh_axes(mesh)) if mesh is not None else set()
+    return _resolve_spec_avail(logical, rules, axes_avail)
+
+
+def _resolve_spec_avail(logical: Sequence[Optional[str]],
+                        rules: Dict[str, Any],
+                        axes_avail: set) -> P:
+    """``resolve_spec`` against an explicit set of available mesh axes."""
     used = set()
     out = []
     for name in logical:
@@ -140,9 +155,56 @@ def resolve_spec(logical: Sequence[Optional[str]],
     return P(*out)
 
 
-def fit_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
-    """Drop sharding on dims the mesh axes do not divide evenly."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+class ShardingDropWarning(UserWarning):
+    """``fit_spec`` dropped a requested sharding because the mesh axes do
+    not divide the dimension evenly (e.g. ``num_kv_heads=2`` at 4-way TP).
+    Emitted ONCE per distinct (shape, spec, mesh-sizes) so a misconfigured
+    TP degree is visible without flooding every trace."""
+
+
+_DROP_LOCK = threading.Lock()
+_DROP_EVENTS = 0                         # guarded by: _DROP_LOCK
+_DROP_WARNED: set = set()                # guarded by: _DROP_LOCK
+
+
+def dropped_dim_events() -> int:
+    """Process-wide count of dims whose sharding ``fit_spec`` dropped."""
+    with _DROP_LOCK:
+        return _DROP_EVENTS
+
+
+def reset_drop_state():
+    """Test hook: clear the drop counter and the once-per-key warn set."""
+    global _DROP_EVENTS
+    with _DROP_LOCK:
+        _DROP_EVENTS = 0
+        _DROP_WARNED.clear()
+
+
+def _note_drop(shape, dim: int, entry, sizes: Dict[str, int]):
+    """Record one dropped-dim event: bump the module counter, warn once
+    per structural key, and notify the active context's ``on_drop``."""
+    global _DROP_EVENTS
+    key = (tuple(shape), dim, entry if not isinstance(entry, list)
+           else tuple(entry), tuple(sorted(sizes.items())))
+    with _DROP_LOCK:
+        _DROP_EVENTS += 1
+        first = key not in _DROP_WARNED
+        _DROP_WARNED.add(key)
+    if first:
+        warnings.warn(
+            f"fit_spec dropped sharding {entry!r} on dim {dim} of shape "
+            f"{tuple(shape)}: mesh axis sizes {sizes} do not divide "
+            f"{shape[dim]} — the dim is replicated instead "
+            "(misconfigured TP degree?)",
+            ShardingDropWarning, stacklevel=3)
+    if _CTX.on_drop is not None:
+        _CTX.on_drop()
+
+
+def _fit_spec_sizes(shape: Sequence[int], spec: P,
+                    sizes: Dict[str, int]) -> P:
+    """``fit_spec`` against explicit axis sizes (no Mesh needed)."""
     out = []
     for i, entry in enumerate(spec):
         if entry is None:
@@ -155,11 +217,16 @@ def fit_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
         if n <= 1 or shape[i] % n != 0:
             # try a prefix of the axes that still divides
             kept = []
-            n = 1
+            k = 1
             for a in axes:
-                if shape[i] % (n * sizes.get(a, 1)) == 0 and sizes.get(a, 1) > 1:
+                if shape[i] % (k * sizes.get(a, 1)) == 0 \
+                        and sizes.get(a, 1) > 1:
                     kept.append(a)
-                    n *= sizes.get(a, 1)
+                    k *= sizes.get(a, 1)
+            if n > 1 and k < n:
+                # sharding was actually requested (product of available
+                # axis sizes > 1) and could not be fully honored
+                _note_drop(shape, i, entry, sizes)
             out.append(tuple(kept) if len(kept) > 1 else
                        (kept[0] if kept else None))
         else:
@@ -167,6 +234,15 @@ def fit_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
     while out and out[-1] is None:
         out.pop()
     return P(*out)
+
+
+def fit_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes do not divide evenly. Each
+    dropped dim is counted (``dropped_dim_events``), warned once
+    (``ShardingDropWarning``), and reported to the active ``axis_rules``
+    context's ``on_drop`` hook."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return _fit_spec_sizes(shape, spec, sizes)
 
 
 def sharding_active() -> bool:
@@ -278,3 +354,74 @@ def param_spec_tree(params_shape, mesh, rules):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+def place_params(params, mesh: Mesh, rules: Dict[str, Any]):
+    """Place a host/device param pytree onto ``mesh`` with the rule set's
+    NamedShardings (each leaf lands as shards, never via a whole-array
+    single-device copy)."""
+    return jax.device_put(params, param_sharding(params, mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# engine-group helpers: what a TP group of size n shards, without a Mesh
+# ---------------------------------------------------------------------------
+# An engine group is a (1, n) ("data", "model") mesh, so "model" carries
+# the whole group and "data"/"pod" collapse to size 1. These helpers
+# answer sharding questions for such a group from axis sizes alone, which
+# lets the weight store chunk params per-shard on the TRAINER side without
+# ever building (or importing) the engines' meshes.
+
+def _group_sizes(n: int) -> Dict[str, int]:
+    return {"pod": 1, "data": 1, "model": int(n)}
+
+
+def model_axis_dims(params, n: int,
+                    rules: Dict[str, Any] = None) -> List[Optional[int]]:
+    """Per-leaf (``jax.tree.leaves`` order) index of the dim an n-way
+    engine group shards over its "model" axis under ``rules``
+    (default SERVE_RULES), or None when the leaf replicates. Divisibility
+    is honored exactly like ``fit_spec`` (non-divisible dims fall back to
+    replication), so the chunking this drives always matches the
+    placement the engines compute."""
+    rules = SERVE_RULES if rules is None else rules
+    sizes = _group_sizes(n)
+    avail = {a for a, s in sizes.items() if s > 1}
+    out: List[Optional[int]] = []
+
+    def one(path, leaf):
+        axes = logical_axes_for_path(path, np.ndim(leaf))
+        spec = _resolve_spec_avail(axes, rules, avail)
+        spec = _fit_spec_sizes(np.shape(leaf), spec, sizes)
+        dim = next((i for i, e in enumerate(spec)
+                    if e == "model" or (isinstance(e, tuple)
+                                        and "model" in e)), None)
+        out.append(dim)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(one, params)
+    return out
+
+
+def validate_group(params, n: int, rules: Dict[str, Any] = None,
+                   model_name: str = "") -> int:
+    """Raise unless an n-way engine group actually shards ``params``.
+
+    ``devices_per_engine`` used to be a silent no-op; now a group size
+    whose "model" axis divides NO parameter dim (so every leaf would
+    replicate and the group buys nothing but n-fold memory) is rejected
+    loudly. Returns the number of sharded leaves on success."""
+    if n <= 1:
+        return 0
+    dims = model_axis_dims(params, n, rules)
+    sharded = sum(d is not None for d in dims)
+    if sharded == 0:
+        raise ValueError(
+            f"devices_per_engine={n} shards nothing"
+            + (f" of model {model_name!r}" if model_name else "")
+            + f": no parameter dim of the {len(dims)} leaves is divisible "
+            f"by {n} under the serve rules (head/expert/mlp/vocab dims "
+            "must divide the group size) — the group would replicate the "
+            "full model n-fold for zero parallelism. Pick a group size "
+            "that divides the sharded dims, or use devices_per_engine=1.")
+    return sharded

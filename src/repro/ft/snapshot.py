@@ -11,8 +11,11 @@ checkpoint:
   (``LiveRLRunner.barrier_hook``), where the pump lock is held and the
   plane is quiescent. It is cheap: host lists are copied, environments are
   deep-copied, and KV slots are extracted through the existing
-  ``Model.extract_cache_slot`` path (fresh device arrays, safe against the
-  engines' donated dispatches). No disk I/O happens under the barrier.
+  ``Model.extract_cache_slot`` path and gathered to HOST numpy (safe
+  against the engines' donated dispatches, and — since engines can run
+  TP-sharded over device groups — already in the portable format that
+  re-shards on inject into ANY group size at restore). No disk I/O
+  happens under the barrier.
 - **save** runs on a background writer thread (``save_async``), staging
   into a ``.tmp_rollout_*`` dir and publishing with one atomic
   ``os.replace`` — the same crash-safety contract as the checkpointer.
@@ -46,7 +49,6 @@ from repro.checkpoint import checkpointer as CK
 from repro.checkpoint.checkpointer import CorruptCheckpointError
 from repro.core.envmanager import (EnvManager, RolloutPolicy,
                                    em_counter_value, ensure_em_counter)
-from repro.core.weightstore import push_params
 from repro.rl.engine import KVHandoff
 
 
@@ -397,9 +399,10 @@ class RolloutSnapshotter:
         if not plane_only:
             runner.version = snap.runner_version
             # republish the restored weights at their version so the
-            # first barrier's pull/update is the usual no-op
-            push_params(runner.store, runner.state.params,
-                        version=snap.version)
+            # first barrier's pull/update is the usual no-op — through
+            # the runner's publisher, so a TP plane gets the per-shard
+            # chunk format its engines pull
+            runner._publish_params(runner.state.params, snap.version)
             buf = dict(snap.buffer)
             if snap.mode == "one_off":
                 runner._prev_batch = (list(snap.in_hand)

@@ -30,3 +30,33 @@ def make_host_mesh():
     """1x1 mesh over the single real device (live mode / smoke tests)."""
     dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
     return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+def make_group_mesh(devices):
+    """(1, n) ("data", "model") mesh over one engine's device group: the
+    whole group is the TP ("model") axis, matching the engine-group
+    helpers in ``repro.distributed.sharding``."""
+    devices = list(devices)
+    dev = np.asarray(devices).reshape(1, len(devices))
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+def allocate_engine_devices(group_sizes):
+    """Disjoint jax-device groups for a list of engines (one entry per
+    engine, in order). Raises with the XLA_FLAGS recipe when the process
+    does not expose enough devices — the silent fall-back-to-one-device
+    behavior is exactly the bug this replaces."""
+    need = sum(group_sizes)
+    devices = jax.devices()
+    if need > len(devices):
+        raise RuntimeError(
+            f"engine groups need {need} devices "
+            f"({'+'.join(map(str, group_sizes))}) but the process exposes "
+            f"{len(devices)}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "BEFORE importing jax")
+    groups, off = [], 0
+    for n in group_sizes:
+        groups.append(list(devices[off:off + n]))
+        off += n
+    return groups

@@ -46,6 +46,21 @@ def main(argv=None):
                          "--pd-disagg and requires --pools")
     ap.add_argument("--n-prefill", type=int, default=1)
     ap.add_argument("--n-decode", type=int, default=1)
+    ap.add_argument("--devices-per-engine", type=int, default=1,
+                    metavar="N",
+                    help="TP group size: each engine runs sharded over a "
+                         "disjoint group of N local devices (on CPU, "
+                         "expose devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--prefill-devices-per-engine", type=int, default=None,
+                    metavar="N",
+                    help="per-role override of --devices-per-engine for "
+                         "prefill engines (PD planes can size roles "
+                         "independently, e.g. prefill 2 / decode 4)")
+    ap.add_argument("--decode-devices-per-engine", type=int, default=None,
+                    metavar="N",
+                    help="per-role override of --devices-per-engine for "
+                         "decode engines")
     ap.add_argument("--steps-per-dispatch", type=int, default=8,
                     metavar="K",
                     help="decode macro-step size: K scanned decode steps "
@@ -89,20 +104,31 @@ def main(argv=None):
         ap.error("--pools only takes effect on the disaggregated plane; "
                  "add --pd-disagg or --affinity")
     rm = ResourceManager(parse_pools(args.pools)) if args.pools else None
+    dpe = args.devices_per_engine
+    pre_dpe = args.prefill_devices_per_engine or dpe
+    dec_dpe = args.decode_devices_per_engine or dpe
     if args.pd_disagg or args.affinity:
         proxy = build_pd_proxy(
             model, params, max_slots=args.slots, max_len=1024,
             n_prefill=args.n_prefill, n_decode=args.n_decode,
             resource_manager=rm,
             rebalancer=RebalancerConfig() if args.affinity else None,
-            steps_per_dispatch=args.steps_per_dispatch)
+            steps_per_dispatch=args.steps_per_dispatch,
+            prefill_devices_per_engine=pre_dpe,
+            decode_devices_per_engine=dec_dpe)
         if args.affinity:
             for row in proxy.placement_report():
                 print("placement: " + format_placement_row(row))
     else:
+        mesh = None
+        if dpe > 1:
+            from repro.launch.mesh import (allocate_engine_devices,
+                                           make_group_mesh)
+            mesh = make_group_mesh(allocate_engine_devices([dpe])[0])
         eng = InferenceEngine(model, params, max_slots=args.slots,
                               max_len=1024,
-                              steps_per_dispatch=args.steps_per_dispatch)
+                              steps_per_dispatch=args.steps_per_dispatch,
+                              mesh=mesh)
         proxy = LLMProxy([EngineHandle(eng, "local")])
 
     prompts = args.prompt or ["the agent moves ", "reward comes from "]

@@ -68,6 +68,21 @@ def main(argv=None):
                          "(default 1; 2 with --affinity, so the "
                          "rebalancer has room to switch one)")
     ap.add_argument("--n-decode", type=int, default=1)
+    ap.add_argument("--devices-per-engine", type=int, default=1,
+                    metavar="N",
+                    help="TP group size: each rollout engine runs sharded "
+                         "over a disjoint group of N local devices; weight "
+                         "sync then moves per-shard chunks through the "
+                         "store (on CPU expose devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--prefill-devices-per-engine", type=int, default=None,
+                    metavar="N",
+                    help="per-role override of --devices-per-engine for "
+                         "prefill engines on the disaggregated plane")
+    ap.add_argument("--decode-devices-per-engine", type=int, default=None,
+                    metavar="N",
+                    help="per-role override of --devices-per-engine for "
+                         "decode engines on the disaggregated plane")
     ap.add_argument("--steps-per-dispatch", type=int, default=8,
                     metavar="K",
                     help="decode macro-step size: K scanned decode steps "
@@ -130,6 +145,10 @@ def main(argv=None):
         weights = (tuple(float(w) for w in args.task_weights.split(","))
                    if args.task_weights else None)
 
+        dpe = args.devices_per_engine
+        pre_dpe = args.prefill_devices_per_engine or dpe
+        dec_dpe = args.decode_devices_per_engine or dpe
+
         def build_runner(st):
             """Fresh runner over ``st`` — also the trainer-restart hook
             (``restore_latest`` rebuilds the plane through it)."""
@@ -141,11 +160,20 @@ def main(argv=None):
                     resource_manager=rm,
                     rebalancer=RebalancerConfig() if args.affinity
                     else None,
-                    steps_per_dispatch=args.steps_per_dispatch)
+                    steps_per_dispatch=args.steps_per_dispatch,
+                    prefill_devices_per_engine=pre_dpe,
+                    decode_devices_per_engine=dec_dpe)
             else:
+                mesh = None
+                if dpe > 1:
+                    from repro.launch.mesh import (allocate_engine_devices,
+                                                   make_group_mesh)
+                    mesh = make_group_mesh(
+                        allocate_engine_devices([dpe])[0])
                 eng = InferenceEngine(
                     model, st.params, max_slots=8, max_len=640,
-                    steps_per_dispatch=args.steps_per_dispatch)
+                    steps_per_dispatch=args.steps_per_dispatch,
+                    mesh=mesh)
                 proxy = LLMProxy([EngineHandle(eng, "H20")])
             return LiveRLRunner(
                 RunnerConfig(batch_size=args.batch, group_size=args.group,

@@ -273,6 +273,42 @@ class Model:
         return tuple(self._block_cache_spec(pat, batch, cache_len)
                      for pat in self.cfg.block_pattern)
 
+    # logical axes per cache leaf, aligned with _block_cache_spec shapes.
+    # Under SERVE_RULES the attention cache shards its sequence dim over
+    # the group's "model" axis ("cache_seq" rule) — the layout the §6.3
+    # decode path wants, since each decode step touches one position of
+    # every head but streams the whole context.
+    _CACHE_AXES = {
+        "attn": {"k": (None, None, "cache_kv_heads", "cache_seq", None),
+                 "v": (None, None, "cache_kv_heads", "cache_seq", None)},
+        "mamba": {"h": (None, None, "mamba_inner", "ssm_state"),
+                  "conv": (None, None, None, "mamba_inner")},
+        "rwkv": {"prev_x": (None, None, None),
+                 "S": (None, None, "rwkv_heads", None, None)},
+    }
+
+    def cache_logical_axes(self):
+        """Pytree matching ``init_cache`` structure whose leaves are the
+        logical-axis tuples of each cache leaf."""
+        return tuple(dict(self._CACHE_AXES[mixer])
+                     for mixer, _ in self.cfg.block_pattern)
+
+    def cache_sharding(self, cache, mesh, rules):
+        """NamedSharding pytree for an engine cache on ``mesh`` under a
+        logical rule set (divisibility handled exactly like params, via
+        ``fit_spec``)."""
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import fit_spec, resolve_spec
+
+        def one(leaf, axes):
+            spec = fit_spec(leaf.shape,
+                            resolve_spec(axes, rules, mesh), mesh)
+            return NamedSharding(mesh, spec)
+        # tree.map flattens up to the CACHE's leaves (arrays), so the
+        # logical-axis tuples sitting at those positions pass through
+        # whole instead of being descended into
+        return jax.tree.map(one, cache, self.cache_logical_axes())
+
     # ------------------------------------------------------------------
     # KV-cache slot migration (live prefill/decode disaggregation)
     # ------------------------------------------------------------------

@@ -28,6 +28,18 @@ cache row directly (O(log max_len) compiled prefill shapes, no transient
 batch-1 cache). Commands still drain between macro-steps, so ADD/ABORT
 latency is bounded by one macro-step (K decode tokens per slot).
 
+TP engine groups: constructed with a ``mesh`` (a per-engine (1, n)
+("data", "model") group mesh), the engine executes SHARDED over its
+device group — params and KV cache are placed with per-leaf
+NamedShardings, every jit dispatch runs inside an ``axis_rules`` context
+so the model's ``shd`` annotations become GSPMD constraints, KV-slot
+handoffs gather to host numpy (portable across unequal group sizes),
+and sharded weight sync assembles per-shard chunks straight into each
+device's shard (:meth:`update_from_chunks` — no full per-engine copy).
+Donation rules are UNCHANGED: the sharded cache is still donated
+per-jit, params are never donated (mesh engines own a private placed
+copy, but the host pytree stays shared with trainer/store/siblings).
+
 Locking (machine-checked by ``python -m repro.analysis``; see the
 ``# guarded by:`` / ``# requires:`` annotations):
 
@@ -51,6 +63,7 @@ Locking (machine-checked by ``python -m repro.analysis``; see the
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import threading
@@ -60,6 +73,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import (SERVE_RULES, axis_rules,
+                                        param_sharding, validate_group)
 from repro.models.model import Model
 from repro.rl.sampling import sample_mixed
 
@@ -91,7 +106,10 @@ class KVHandoff:
     """A prefilled trajectory in flight between a prefill-role and a
     decode-role engine: the request, the token/logprob state after the
     first sampled token, and the slot's cache pytree (batch axis == 1,
-    extracted with ``Model.extract_cache_slot``). Both engines must share
+    extracted with ``Model.extract_cache_slot`` and gathered to HOST
+    numpy arrays). The host gather is what makes the handoff portable
+    across engines with *different* TP group sizes — injection re-shards
+    the slot under the target engine's own mesh. Both engines must share
     the same model and ``max_len`` for the cache shapes to line up."""
     request: GenRequest
     tokens: List[int]             # prompt + first sampled token
@@ -118,6 +136,29 @@ class _Slot:
 ROLES = ("colocated", "prefill", "decode")
 
 
+def _slice_chunks(parts, dim: int, idx, shape) -> np.ndarray:
+    """Assemble ``full[idx]`` from equal-size chunks of ``full`` along
+    ``dim`` WITHOUT concatenating the full array: only the chunks
+    overlapping the requested slice are touched. ``idx`` is the per-dim
+    slice tuple a ``make_array_from_callback`` device callback receives;
+    contiguous (step-1) slices only, which is all NamedSharding asks."""
+    norm = [slice(*sl.indices(n)) for sl, n in zip(idx, shape)]
+    if len(parts) == 1:
+        return np.ascontiguousarray(np.asarray(parts[0])[tuple(norm)])
+    csize = int(np.shape(parts[0])[dim])
+    start, stop = norm[dim].start, norm[dim].stop
+    pieces = []
+    for c in range(start // csize, (stop - 1) // csize + 1):
+        lo = max(start - c * csize, 0)
+        hi = min(stop - c * csize, csize)
+        sub = list(norm)
+        sub[dim] = slice(lo, hi)
+        pieces.append(np.asarray(parts[c])[tuple(sub)])
+    out = (pieces[0] if len(pieces) == 1
+           else np.concatenate(pieces, axis=dim))
+    return np.ascontiguousarray(out)
+
+
 class InferenceEngine:
     """Slot-based continuous batching engine.
 
@@ -135,7 +176,8 @@ class InferenceEngine:
                  role: str = "colocated",
                  on_handoff: Optional[Callable[[KVHandoff], None]] = None,
                  steps_per_dispatch: int = 8, donate: bool = True,
-                 bucketed_prefill: Optional[bool] = None):
+                 bucketed_prefill: Optional[bool] = None,
+                 mesh=None, shard_rules: Optional[Dict] = None):
         """``steps_per_dispatch`` (K) is the decode macro-step size: K
         decode steps run per jit dispatch via ``Model.decode_block``.
         Larger K amortizes dispatch + host round-trip overhead but bounds
@@ -147,7 +189,18 @@ class InferenceEngine:
         ``bucketed_prefill`` force-disables (False) the power-of-two
         prompt bucketing on stacks that support it — the
         one-compile-per-prompt-length seed behavior, kept for the same
-        benchmark; None (default) enables it wherever valid."""
+        benchmark; None (default) enables it wherever valid.
+
+        ``mesh`` (optional) is the engine's TP device group — a
+        ``launch.mesh.make_group_mesh`` (1, n) ("data", "model") mesh.
+        With a mesh the engine executes SHARDED over the group: params
+        and the KV cache are placed with per-leaf NamedShardings under
+        ``shard_rules`` (default SERVE_RULES), every jit traces inside an
+        ``axis_rules`` context so the model's ``shd`` annotations become
+        sharding constraints, and the engine owns a PRIVATE placed param
+        copy (single-device engines keep sharing the caller's pytree).
+        An n that shards no parameter dim raises (``validate_group``)
+        instead of silently replicating the model n-fold."""
         if role not in ROLES:
             raise ValueError(f"role must be one of {ROLES}, got {role!r}")
         if steps_per_dispatch < 1:
@@ -155,6 +208,14 @@ class InferenceEngine:
                              f"{steps_per_dispatch}")
         self.model = model
         self.params = params                       # guarded by: _step_lock
+        self.mesh = mesh
+        self.tp_group = (int(np.prod(mesh.devices.shape))
+                         if mesh is not None else 1)
+        self._shard_rules = (dict(shard_rules) if shard_rules is not None
+                             else dict(SERVE_RULES))
+        if self.tp_group > 1:
+            validate_group(params, self.tp_group, self._shard_rules,
+                           model.cfg.name)
         self.max_slots = max_slots
         self.max_len = max_len
         self.on_finish = on_finish
@@ -203,7 +264,35 @@ class InferenceEngine:
         # block on an in-flight decode step.
         self._step_lock = threading.Lock()
         self._results: Dict[str, GenResult] = {}   # guarded by: _lock
-        self._cache = model.init_cache(max_slots, max_len)  # guarded by: _step_lock
+        # fit_spec drop events observed by THIS engine's traces/placements
+        # (the module-wide one-shot ShardingDropWarning fires alongside);
+        # bumped via the axis_rules on_drop hook, which only runs inside
+        # _shard_ctx() — and every _shard_ctx() site holds _step_lock
+        self.sharding_drops = 0                    # guarded by: _step_lock
+        # host chunk bytes consumed by sharded weight syncs
+        self.sync_bytes = 0                        # guarded by: _step_lock
+        # param/cache placement: a mesh engine shards both over its group
+        # (per-leaf NamedShardings; a sharded leaf never lands as a
+        # whole-array copy on any one device). Done under _step_lock so
+        # placement-time fit_spec drops funnel through _on_fit_drop with
+        # the same lock trace-time drops hold.
+        with self._step_lock:
+            if self.mesh is not None:
+                with self._shard_ctx():
+                    self._param_shardings = param_sharding(
+                        params, self.mesh, self._shard_rules)
+                    self.params = jax.device_put(params,
+                                                 self._param_shardings)
+                    cache = model.init_cache(max_slots, max_len)
+                    self._cache_shardings = model.cache_sharding(
+                        cache, self.mesh, self._shard_rules)
+                    # guarded by: _step_lock
+                    self._cache = jax.device_put(cache,
+                                                 self._cache_shardings)
+            else:
+                self._param_shardings = None
+                self._cache_shardings = None
+                self._cache = model.init_cache(max_slots, max_len)  # guarded by: _step_lock
         # stats (steps/busy_steps count MACRO-steps, i.e. engine
         # iterations; decode_dispatches counts decode jit calls — with
         # K = steps_per_dispatch, dispatches/token converges to 1/K —
@@ -277,6 +366,21 @@ class InferenceEngine:
         self._decode_block_jit = _decode_block
         self._prefill_jit = _prefill_into_slot
         self._sample = sample_mixed
+
+    def _shard_ctx(self):
+        """axis_rules context for tracing and placement: activates the
+        group mesh + logical rules (so ``Model``'s ``shd`` annotations
+        become NamedSharding constraints) plus the per-engine drop
+        counter. A no-op nullcontext for single-device engines. Only
+        entered with ``_step_lock`` held — the on_drop hook relies on
+        it."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return axis_rules(self.mesh, self._shard_rules,
+                          on_drop=self._on_fit_drop)
+
+    def _on_fit_drop(self):   # requires: _step_lock
+        self.sharding_drops += 1
 
     def _next_key(self):   # requires: _step_lock
         self._key, k = jax.random.split(self._key)
@@ -368,7 +472,12 @@ class InferenceEngine:
                 self._commands.clear()
                 self._results.clear()
             self._slots = [_Slot() for _ in range(self.max_slots)]
-            self._cache = self.model.init_cache(self.max_slots, self.max_len)
+            cache = self.model.init_cache(self.max_slots, self.max_len)
+            if self.mesh is not None:
+                # the reborn replacement binds the same device group, so
+                # its fresh cache takes the same shardings
+                cache = jax.device_put(cache, self._cache_shardings)
+            self._cache = cache
             self.crashes += 1
 
     def suspend(self):
@@ -398,12 +507,90 @@ class InferenceEngine:
         with self._step_lock:
             if version == self.weight_version:
                 return
+            if self.mesh is not None:
+                # per-leaf sharded placement: each leaf lands under its
+                # NamedSharding (device_put splits host leaves into
+                # shards), never as a whole-array copy on one device of
+                # the group
+                with self._shard_ctx():
+                    params = jax.device_put(params, self._param_shardings)
             self.params = params
             self.weight_version = version
             if recompute_caches:
                 for i, s in enumerate(self._slots):
                     if s.active and s.pos > 0:
                         self._reprefill_slot(i)
+
+    def update_from_chunks(self, chunks, version: int,
+                           recompute_caches: bool = True):
+        """Sharded weight sync: swap in a new version delivered as
+        PER-SHARD host chunks (``weightstore.pull_param_chunks`` format —
+        one ``(dim, parts)`` entry per param leaf, ``dim=None`` for
+        unchunked leaves). A mesh engine assembles each leaf directly
+        into its NamedSharding via ``jax.make_array_from_callback``:
+        every device's callback slices just ITS shard out of the chunk
+        list, so a sharded leaf is never materialized whole — on host or
+        on any single device — even when the store's chunk count differs
+        from this engine's TP degree (unequal PD group sizes). A
+        single-device engine concatenates chunks. Same same-version no-op
+        and in-flight KV recompute semantics as :meth:`update_params`."""
+        with self._step_lock:
+            if version == self.weight_version:
+                return
+            treedef = jax.tree.structure(self.params)
+            shardings = (jax.tree.leaves(self._param_shardings)
+                         if self.mesh is not None
+                         else [None] * len(chunks))
+            leaves = [self._assemble_leaf(dim, parts, shd)
+                      for (dim, parts), shd in zip(chunks, shardings)]
+            self.params = jax.tree.unflatten(treedef, leaves)
+            self.weight_version = version
+            if recompute_caches:
+                for i, s in enumerate(self._slots):
+                    if s.active and s.pos > 0:
+                        self._reprefill_slot(i)
+
+    def _assemble_leaf(self, dim, parts, sharding):   # requires: _step_lock
+        """One param leaf from its host chunks. ``sync_bytes`` counts the
+        host bytes actually consumed: for a sharded leaf the device
+        callbacks sum to ~1x the leaf (split across the group), for a
+        replicated leaf on a group they sum to group-x — which is the
+        honest cost of replication the benchmark reports."""
+        if dim is not None and len(parts) > 1:
+            shape = list(np.shape(parts[0]))
+            shape[dim] *= len(parts)
+            shape = tuple(shape)
+        else:
+            shape = tuple(np.shape(parts[0]))
+        if sharding is None:
+            arr = (np.concatenate([np.asarray(p) for p in parts], axis=dim)
+                   if len(parts) > 1 else np.asarray(parts[0]))
+            self.sync_bytes += int(arr.nbytes)
+            return jnp.asarray(arr)
+
+        def cb(idx):
+            piece = _slice_chunks(parts, dim, idx, shape)
+            self.sync_bytes += int(piece.nbytes)
+            return piece
+
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+    def param_device_bytes(self) -> Dict[str, int]:
+        """Parameter bytes resident per device (addressable shards) — the
+        no-full-copy accounting: at TP degree g, sharded leaves
+        contribute 1/g per device, so no device of a useful group holds
+        the full parameter footprint."""
+        with self._step_lock:
+            out: Dict[str, int] = {}
+            for leaf in jax.tree.leaves(self.params):
+                if hasattr(leaf, "addressable_shards"):
+                    for sh in leaf.addressable_shards:
+                        d = str(sh.device)
+                        out[d] = out.get(d, 0) + int(sh.data.nbytes)
+                else:
+                    out["host"] = (out.get("host", 0)
+                                   + int(np.asarray(leaf).nbytes))
+            return out
 
     def _bucket_len(self, n: int) -> int:
         b = 16
@@ -425,9 +612,10 @@ class InferenceEngine:
             toks = toks + [0] * (self._bucket_len(len(toks)) - len(toks))
         tok_arr = jnp.asarray([toks], jnp.int32)
         last = jnp.asarray([s.pos - 1], jnp.int32)
-        tok, lp, self._cache = self._prefill_jit(
-            self.params, tok_arr, self._cache, i, last, self._next_key(),
-            jnp.float32(temperature))
+        with self._shard_ctx():
+            tok, lp, self._cache = self._prefill_jit(
+                self.params, tok_arr, self._cache, i, last,
+                self._next_key(), jnp.float32(temperature))
         return tok, lp
 
     def _reprefill_slot(self, i: int):   # requires: _step_lock
@@ -468,13 +656,18 @@ class InferenceEngine:
         """Freeze slot ``i`` into a KVHandoff WITHOUT freeing the slot.
         ``extract_cache_slot`` produces fresh arrays (a dynamic slice), so
         the handoff stays valid even after later donated dispatches
-        invalidate the engine's own cache buffer."""
+        invalidate the engine's own cache buffer. The slot is gathered to
+        HOST numpy (``jax.device_get`` all-gathers a sharded slot's
+        shards): the host copy is the portable interchange format — it
+        injects into any engine regardless of that engine's TP group
+        size, and the FT snapshotter serializes it as-is."""
         s = self._slots[i]
         return KVHandoff(
             request=s.request, tokens=list(s.tokens),
             new_tokens=list(s.new_tokens), logprobs=list(s.logprobs),
             pos=s.pos, start_version=s.start_version,
-            cache=self.model.extract_cache_slot(self._cache, i),
+            cache=jax.device_get(
+                self.model.extract_cache_slot(self._cache, i)),
             weight_version=self.weight_version)
 
     def _package_handoff(self, i: int) -> KVHandoff:   # requires: _step_lock
@@ -710,10 +903,11 @@ class InferenceEngine:
             self._gather_slot_arrays()
         if K == 1:
             # legacy single-step dispatch (stop/length handled host-side)
-            toks, lps, self._cache = self._decode_jit(
-                self.params, jnp.asarray(last_tokens), self._cache,
-                jnp.asarray(positions), self._next_key(),
-                jnp.asarray(temps))
+            with self._shard_ctx():
+                toks, lps, self._cache = self._decode_jit(
+                    self.params, jnp.asarray(last_tokens), self._cache,
+                    jnp.asarray(positions), self._next_key(),
+                    jnp.asarray(temps))
             self.decode_dispatches += 1
             toks, lps = np.asarray(toks), np.asarray(lps)
             for i in active:
@@ -726,10 +920,12 @@ class InferenceEngine:
         # (the SAME split-chain schedule as K single-step dispatches, so
         # sampled streams are reproducible across steps_per_dispatch
         # settings) and hands back the advanced chain head
-        toks, lps, emitted, self._cache, self._key = self._decode_block_jit(
-            self.params, jnp.asarray(last_tokens), self._cache,
-            jnp.asarray(positions), self._key, jnp.asarray(temps),
-            jnp.asarray(stop_ids), jnp.asarray(budgets))
+        with self._shard_ctx():
+            toks, lps, emitted, self._cache, self._key = \
+                self._decode_block_jit(
+                    self.params, jnp.asarray(last_tokens), self._cache,
+                    jnp.asarray(positions), self._key, jnp.asarray(temps),
+                    jnp.asarray(stop_ids), jnp.asarray(budgets))
         self.decode_dispatches += 1
         toks = np.asarray(toks)          # [K, B]
         lps = np.asarray(lps)
@@ -765,6 +961,9 @@ class InferenceEngine:
                 "handoffs_in": self.handoffs_in,
                 "crashes": self.crashes,
                 "weight_version": self.weight_version,
+                "tp_group": self.tp_group,
+                "sharding_drops": self.sharding_drops,
+                "sync_bytes": self.sync_bytes,
             }
 
     def pop_result(self, request_id: str) -> Optional[GenResult]:

@@ -1,0 +1,298 @@
+"""Sharded engine groups (TP execution through the live inference stack):
+
+- byte-identical greedy decode at group sizes 1/2/4 on attention and MoE
+  stacks (the mesh/axis_rules path changes placement, never tokens);
+- sharded PD handoff across UNEQUAL group sizes (2-way prefill feeding
+  4-way decode) with greedy parity vs a single-device engine;
+- FT: kill a sharded engine mid-flight and restore its KV slot from a
+  snapshot (host-numpy handoffs re-shard on inject);
+- mid-flight sharded weight sync: per-shard chunks through the
+  MooncakeStore -> update_from_chunks, with no device ever holding a
+  full param copy (param_device_bytes accounting);
+- fit_spec drop surfacing (one-shot warning + stats counter) and the
+  validate_group raise that replaces the silent devices_per_engine no-op.
+
+Needs >= 8 host devices; run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set below when
+this module is the first jax importer, e.g. a standalone pytest run).
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:      # must precede the first jax import
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import EngineHandle, LLMProxy, build_pd_proxy
+from repro.core.weightstore import (MooncakeStore, pull_param_chunks,
+                                    push_params_sharded)
+from repro.distributed.sharding import (model_axis_dims, reset_drop_state,
+                                        validate_group)
+from repro.launch.mesh import allocate_engine_devices, make_group_mesh
+from repro.models import Model
+from repro.rl.engine import GenRequest, InferenceEngine
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+# tiny with num_kv_heads=4 so group 4 shards the KV heads too (tiny's
+# stock kv_heads=2 is the fit-drop case, covered separately below)
+ATTN_CFG = get_config("tiny").with_(name="tiny-tp", num_kv_heads=4)
+MOE_CFG = get_config("tiny").with_(
+    name="tiny-tp-moe", family="moe", num_kv_heads=4,
+    block_pattern=(("attn", "moe"),), num_experts=4, top_k=2, moe_d_ff=128)
+
+
+def _setup(cfg):
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _mesh(n):
+    return make_group_mesh(allocate_engine_devices([n])[0])
+
+
+def _greedy(model, params, prompt, n, *, mesh=None, max_len=96):
+    eng = InferenceEngine(model, params, max_slots=2, max_len=max_len,
+                          mesh=mesh)
+    eng.add_request(GenRequest(request_id="g", prompt=list(prompt),
+                               max_new_tokens=n, temperature=0.0))
+    eng.run_until_idle()
+    return eng.pop_result("g").tokens
+
+
+def _serve(proxy, reqs, max_pumps=2000):
+    out = {}
+    for r in reqs:
+        proxy.submit(r, callback=lambda res: out.__setitem__(
+            res.request_id, res))
+    pumps = 0
+    while proxy.busy:
+        proxy.pump()
+        pumps += 1
+        assert pumps < max_pumps, "proxy did not drain"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tentpole: greedy parity across group sizes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [ATTN_CFG, MOE_CFG],
+                         ids=["attn", "moe"])
+def test_greedy_parity_across_group_sizes(cfg):
+    model, params = _setup(cfg)
+    prompt = [1, 5, 7, 9, 3]
+    ref = _greedy(model, params, prompt, 12)
+    assert len(ref) == 12
+    for n in (2, 4):
+        got = _greedy(model, params, prompt, 12, mesh=_mesh(n))
+        assert got == ref, f"group size {n} diverged from single-device"
+
+
+def test_sharded_engine_places_params_and_cache():
+    model, params = _setup(ATTN_CFG)
+    eng = InferenceEngine(model, params, max_slots=2, max_len=64,
+                          mesh=_mesh(4))
+    assert eng.stats()["tp_group"] == 4
+    # a sharded leaf spreads across the group: the per-device param
+    # footprint must be strictly below the full footprint
+    full = sum(int(np.asarray(x).nbytes) for x in jax.tree.leaves(params))
+    per_dev = eng.param_device_bytes()
+    assert len(per_dev) == 4
+    assert all(b < full for b in per_dev.values())
+    # caller's pytree stays host/single-device; the engine placed a copy
+    assert eng.params is not params
+
+
+# ---------------------------------------------------------------------------
+# sharded PD handoff across unequal group sizes
+# ---------------------------------------------------------------------------
+def test_pd_handoff_across_unequal_groups():
+    model, params = _setup(ATTN_CFG)
+    prompts = [[1, 5, 7, 9], [1, 2, 3], [1, 9, 9, 4, 2]]
+    refs = [_greedy(model, params, p, 6) for p in prompts]
+    proxy = build_pd_proxy(model, params, max_slots=4, max_len=96, seed=7,
+                           prefill_devices_per_engine=2,
+                           decode_devices_per_engine=4)
+    by_role = {h.engine.role: h.engine for h in proxy.handles}
+    assert by_role["prefill"].tp_group == 2
+    assert by_role["decode"].tp_group == 4
+    reqs = [GenRequest(request_id=f"r{i}", prompt=p, max_new_tokens=6,
+                       temperature=0.0) for i, p in enumerate(prompts)]
+    out = _serve(proxy, reqs)
+    for i, ref in enumerate(refs):
+        assert out[f"r{i}"].tokens == ref
+    assert proxy.stats()["handoffs"] == 3
+
+
+def test_engine_groups_are_disjoint():
+    model, params = _setup(ATTN_CFG)
+    proxy = build_pd_proxy(model, params, max_slots=2, max_len=64,
+                           prefill_devices_per_engine=2,
+                           decode_devices_per_engine=4)
+    seen = set()
+    for h in proxy.handles:
+        devs = {d.id for d in h.engine.mesh.devices.flat}
+        assert not (seen & devs), "engines share a device"
+        seen |= devs
+
+
+# ---------------------------------------------------------------------------
+# FT: kill a sharded engine, restore its KV slot from a snapshot
+# ---------------------------------------------------------------------------
+def test_sharded_engine_kill_and_snapshot_restore():
+    model, params = _setup(ATTN_CFG)
+    prompt = [1, 5, 7, 9, 3]
+    ref = _greedy(model, params, prompt, 48, max_len=128)
+    eng = InferenceEngine(model, params, max_slots=2, max_len=128,
+                          seed=0, mesh=_mesh(4))
+    proxy = LLMProxy([EngineHandle(eng, "local")])
+    out = {}
+    proxy.submit(GenRequest(request_id="g", prompt=list(prompt),
+                            max_new_tokens=48, temperature=0.0),
+                 callback=lambda r: out.__setitem__(r.request_id, r))
+    for _ in range(2):
+        proxy.pump()
+    [hf] = eng.snapshot_slots()
+    assert isinstance(jax.tree.leaves(hf.cache)[0], np.ndarray), \
+        "snapshot cache must be host numpy (portable across group sizes)"
+    proxy.pump()                       # work advances past the snapshot
+    eng.crash()
+    assert eng.stats()["crashes"] == 1
+    proxy.reinject(hf)                 # re-shards the slot on inject
+    pumps = 0
+    while proxy.busy:
+        proxy.pump()
+        pumps += 1
+        assert pumps < 2000
+    assert out["g"].tokens == ref
+
+
+def test_handoff_injects_across_group_sizes():
+    """A slot snapshotted on a 2-way engine restores onto a 4-way engine
+    (the FT re-homing case when the replacement pool is sized
+    differently)."""
+    model, params = _setup(ATTN_CFG)
+    prompt = [1, 5, 7, 9, 3]
+    ref = _greedy(model, params, prompt, 32, max_len=128)
+    src = InferenceEngine(model, params, max_slots=2, max_len=128,
+                          mesh=_mesh(2))
+    src.add_request(GenRequest(request_id="g", prompt=list(prompt),
+                               max_new_tokens=32, temperature=0.0))
+    src.step()
+    src.step()                # ~17 of 32 tokens: genuinely mid-flight
+    [hf] = src.snapshot_slots()
+    dst = InferenceEngine(model, params, max_slots=2, max_len=128,
+                          mesh=_mesh(4))
+    dst.inject(hf)
+    dst.run_until_idle()
+    assert dst.pop_result("g").tokens == ref
+
+
+# ---------------------------------------------------------------------------
+# mid-flight sharded weight sync
+# ---------------------------------------------------------------------------
+def test_midflight_sharded_weight_sync():
+    model, params = _setup(ATTN_CFG)
+    params_v1 = model.init(jax.random.PRNGKey(1))
+    prompt = [1, 5, 7, 9, 3]
+
+    def run(eng):
+        eng.add_request(GenRequest(request_id="g", prompt=list(prompt),
+                                   max_new_tokens=24, temperature=0.0))
+        eng.step()                     # mid-flight under v0 weights
+        return eng
+
+    # reference: single-device engine swapped to v1 the monolithic way
+    ref_eng = run(InferenceEngine(model, params, max_slots=2, max_len=128))
+    ref_eng.update_params(params_v1, 1)
+    ref_eng.run_until_idle()
+    ref = ref_eng.pop_result("g").tokens
+
+    # sharded engine pulls v1 as per-shard chunks through the store
+    eng = run(InferenceEngine(model, params, max_slots=2, max_len=128,
+                              mesh=_mesh(4)))
+    store = MooncakeStore(bucket_mb=1)
+    dims = model_axis_dims(params_v1, 4)
+    pushed = push_params_sharded(store, params_v1, 1, 4, dims)
+    assert pushed > 0
+    chunks, version = pull_param_chunks(store, params_v1)
+    eng.update_from_chunks(chunks, version)
+    eng.run_until_idle()
+    assert eng.pop_result("g").tokens == ref
+    st = eng.stats()
+    assert st["weight_version"] == 1
+    assert st["sync_bytes"] > 0
+    # no device assembled a full copy of the params
+    full = sum(int(np.asarray(x).nbytes)
+               for x in jax.tree.leaves(params_v1))
+    assert all(b < full for b in eng.param_device_bytes().values())
+
+
+def test_chunked_pull_assembles_on_single_device_engine():
+    """A dense (mesh=None) engine consumes the same chunked store format
+    — the mixed-plane path (e.g. an unsharded colocated engine pulling a
+    version the trainer chunked for its sharded peers)."""
+    model, params = _setup(ATTN_CFG)
+    params_v1 = model.init(jax.random.PRNGKey(1))
+    store = MooncakeStore(bucket_mb=1)
+    push_params_sharded(store, params_v1, 1, 4, model_axis_dims(params_v1, 4))
+    chunks, version = pull_param_chunks(store, params_v1)
+    eng = InferenceEngine(model, params, max_slots=2, max_len=64)
+    eng.update_from_chunks(chunks, version)
+    want = jax.tree.leaves(params_v1)
+    got = jax.tree.leaves(eng.params)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+
+# ---------------------------------------------------------------------------
+# fit_spec drop surfacing + validate_group
+# ---------------------------------------------------------------------------
+def test_fit_drop_warns_once_and_counts_in_stats():
+    # stock tiny has num_kv_heads=2: a 4-way group cannot shard the KV
+    # head dim, so fit_spec drops it — surfaced, never silent
+    from repro.distributed.sharding import ShardingDropWarning
+    model, params = _setup(get_config("tiny"))
+    reset_drop_state()
+    with pytest.warns(ShardingDropWarning, match="dropped sharding"):
+        eng = InferenceEngine(model, params, max_slots=2, max_len=64,
+                              mesh=_mesh(4))
+    assert eng.stats()["sharding_drops"] > 0
+    # one-shot: the same structural drop does not warn again
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", ShardingDropWarning)
+        InferenceEngine(model, params, max_slots=2, max_len=64,
+                        mesh=_mesh(4))
+
+
+def test_unusable_group_raises_not_noop():
+    # tiny shards nothing 7 ways (no param dim divisible by 7): the old
+    # silent devices_per_engine no-op must raise instead
+    model, params = _setup(get_config("tiny"))
+    with pytest.raises(ValueError, match="shards nothing"):
+        InferenceEngine(model, params, max_slots=2, max_len=64,
+                        mesh=_mesh(7))
+    with pytest.raises(ValueError, match="shards nothing"):
+        validate_group(params, 7, model_name="tiny")
+
+
+def test_placement_report_prices_the_group():
+    model, params = _setup(ATTN_CFG)
+    proxy = build_pd_proxy(model, params, max_slots=2, max_len=64,
+                           prefill_devices_per_engine=2,
+                           decode_devices_per_engine=4)
+    rows = {r["role"]: r for r in proxy.placement_report()}
+    assert rows["prefill"]["tp_group"] == 2
+    assert rows["decode"]["tp_group"] == 4
+    assert rows["prefill"]["devices"] == 2
+    assert rows["decode"]["devices"] == 4
