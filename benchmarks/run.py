@@ -31,6 +31,7 @@ ALL = [
     "fault_tolerance",  # §8: rollout checkpoint/restore vs scratch restart
     "traffic_gen",      # Rollout-as-a-Service: multi-tenant QoS under load
     "sharded_engine",   # TP engine groups: parity, sync bytes, PD 2->4
+    "paged_kv",         # paged KV pool + prefix forking + dirty capture
     "kernels_bench",
     "roofline",         # §Roofline from the dry-run artifacts
 ]

@@ -577,7 +577,9 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
                    shard_rules: Optional[Dict] = None,
                    rebalancer: Optional[RebalancerConfig] = None,
                    steps_per_dispatch: int = 8,
-                   donate: bool = True) -> LLMProxy:
+                   donate: bool = True,
+                   paged: bool = False,
+                   page_size: int = 16) -> LLMProxy:
     """Build a PD-disaggregated proxy: ``n_prefill`` prefill-role engines on
     the compute pool and ``n_decode`` decode-role engines on the bandwidth
     pool (the live analogue of the simulator's ``gen_pools`` +
@@ -610,7 +612,14 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
     every engine (K scanned decode steps per jit dispatch / in-place
     donated KV caches; see ``InferenceEngine``). The shared ``params``
     pytree is exactly why engines never donate their params argument
-    (TP engines place a private SHARDED copy of it per group)."""
+    (TP engines place a private SHARDED copy of it per group).
+
+    ``paged=True`` switches EVERY engine of the pool to the paged KV
+    plane (shared page pool + prefix cache + compacted decode dispatch;
+    see ``InferenceEngine``). The KVHandoff interchange format is
+    unchanged, so mixed paged/dense pools also interoperate — but a
+    uniform setting keeps capacity accounting comparable across the
+    pool."""
     pre_n = (prefill_devices_per_engine
              if prefill_devices_per_engine is not None
              else devices_per_engine)
@@ -664,7 +673,8 @@ def build_pd_proxy(model, params, *, prefill_pool: str = "H800",
                               max_len=max_len, seed=eng_seed, role=role,
                               steps_per_dispatch=steps_per_dispatch,
                               donate=donate, mesh=mesh,
-                              shard_rules=shard_rules)
+                              shard_rules=shard_rules, paged=paged,
+                              page_size=page_size)
         handles.append(EngineHandle(eng, b.group.pool if b else pool,
                                     name, binding=b))
     return LLMProxy(handles, hw_affinity=hw_affinity, pd_disagg=True,

@@ -38,6 +38,7 @@ TRAIN_RULES: Dict[str, Any] = {
     "act_experts": "model",
     "moe_group": ("pod", "data", "model"),
     "cache_seq": None,
+    "cache_page_seq": None,
     # parameters (FSDP over "data", TP over "model")
     "vocab": "model",
     "embed": "data",          # FSDP shard of the d_model dim
@@ -66,6 +67,10 @@ SERVE_RULES: Dict[str, Any] = {
     "moe_group": ("pod", "data", "model"),
     "cache_seq": "model",     # KV cache sequence dim sharded over model axis
     "cache_kv_heads": None,   # cache seq takes the model axis, not kv heads
+    # paged pool: within-page positions shard over the group, mirroring
+    # the dense cache_seq layout at page granularity (page_size must be
+    # divisible by the group or fit_spec drops the dim to replicated)
+    "cache_page_seq": "model",
     "rwkv_heads": "model",
     # parameters: TP on "model" + 2-D weight-stationary sharding over "data"
     # (MaxText-style serving layout; without it 100B-class archs do not fit

@@ -117,6 +117,11 @@ class RolloutSnapshotter:
                                         thread_name_prefix="rollout-snap")
         self._pending: List[Future] = []   # guarded by: _lock
         self._lock = threading.Lock()
+        # per-engine host image of the paged KV pool, merged across
+        # incremental captures: {engine name: {pid: [leaf arrays]}}.
+        # Only touched from capture(), which runs under the runner
+        # barrier (single-threaded by contract).
+        self._pool_images: Dict[str, Dict[int, List[np.ndarray]]] = {}
 
     # ------------------------------------------------------------------
     # capture (under the runner barrier)
@@ -129,6 +134,7 @@ class RolloutSnapshotter:
         #                                completed-EM list must be empty
         proxy = runner.proxy
         engines = []
+        kv_capture_bytes = 0
         for h in proxy.handles:
             eng = h.engine
             queued = []
@@ -137,13 +143,26 @@ class RolloutSnapshotter:
                     queued.append((kind, _handoff_record(payload)))
                 else:
                     queued.append((kind, payload))
+            if getattr(eng, "paged", False):
+                # incremental path: only pages written since the last
+                # barrier cross device->host; the slot records are
+                # assembled from the snapshotter's merged pool image so
+                # the on-disk format stays identical to the dense path
+                slots, moved = self._capture_paged_slots(h.name, eng)
+            else:
+                slots = [_handoff_record(hf)
+                         for hf in eng.snapshot_slots()]
+                moved = sum(int(np.asarray(leaf).nbytes)
+                            for rec in slots
+                            for leaf in rec["cache_leaves"])
+            kv_capture_bytes += moved
             engines.append({
                 "name": h.name, "role": h.role,
                 "key": eng.snapshot_rng(),
                 "weight_version": eng.weight_version,
-                "slots": [_handoff_record(hf)
-                          for hf in eng.snapshot_slots()],
+                "slots": slots,
                 "queued": queued,
+                "kv_capture_bytes": moved,
             })
         # requests whose cancellation is already in flight (proxy-level
         # abort guard + engine-queued ABORTs, read once from the command
@@ -176,7 +195,46 @@ class RolloutSnapshotter:
             prev_fetched=runner._prev_batch_fetched_step,
             pending_rewards=pending, ems=ems, engines=engines,
             sampler_rng=runner.sampler._rng.getstate(),
-            seed_counter=seed_val, em_counter=em_counter_value())
+            seed_counter=seed_val, em_counter=em_counter_value(),
+            meta={"kv_capture_bytes": kv_capture_bytes})
+
+    def _capture_paged_slots(self, name: str, eng):
+        """Incremental KV capture for one paged engine: merge its dirty
+        pages into the persistent host pool image, prune the image to
+        pages a restore could still need (live slot tables + prefix
+        cache), then assemble each active slot's SELF-CONTAINED dense
+        ``cache_leaves`` record from the image — byte-compatible with
+        ``_handoff_record``, so save/load/restore are untouched. Returns
+        ``(slot_records, device_bytes_moved)``: when only one slot
+        advanced since the last barrier, only its freshly written pages
+        are gathered, not every active slot's full dense row."""
+        cap = eng.capture_kv_incremental()
+        img = self._pool_images.setdefault(name, {})
+        img.update(cap["pages"])
+        for pid in [p for p in img if p not in cap["live_pages"]]:
+            del img[pid]
+        tmpl = eng.model.init_cache(1, eng.max_len)
+        tmpl_leaves = jax.tree.leaves(tmpl)
+        page = eng.page_size
+        slots = []
+        for rec in cap["slots"]:
+            leaves = []
+            for li, t in enumerate(tmpl_leaves):
+                dense = np.zeros(np.shape(t), np.asarray(t).dtype)
+                for j, pid in enumerate(rec["table"]):
+                    blk = img.get(pid)
+                    if blk is not None:
+                        dense[:, 0, :, j * page:(j + 1) * page, :] = blk[li]
+                leaves.append(dense)
+            slots.append({
+                "request": rec["request"], "tokens": rec["tokens"],
+                "new_tokens": rec["new_tokens"],
+                "logprobs": rec["logprobs"], "pos": rec["pos"],
+                "start_version": rec["start_version"],
+                "weight_version": rec["weight_version"],
+                "source": "snapshot", "cache_leaves": leaves,
+            })
+        return slots, int(cap["captured_bytes"])
 
     # ------------------------------------------------------------------
     # persistence (writer thread)
@@ -394,8 +452,11 @@ class RolloutSnapshotter:
                 f"the rollout snapshot pairs with version {snap.version} "
                 "— restore the matching train-state checkpoint first")
         eng0 = proxy.handles[0].engine
+        # host-built zero template: same treedef/shapes as a slot
+        # extraction, and valid for paged engines too (which hold a page
+        # pool instead of a dense per-slot cache)
         tmpl_leaves, treedef = jax.tree.flatten(
-            eng0.model.extract_cache_slot(eng0._cache, 0))
+            eng0.model.init_cache(1, eng0.max_len))
         if not plane_only:
             runner.version = snap.runner_version
             # republish the restored weights at their version so the

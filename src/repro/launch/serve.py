@@ -69,6 +69,15 @@ def main(argv=None):
                          "latency is bounded by one macro-step, so lower "
                          "K for latency-sensitive serving; 1 = legacy "
                          "single-step dispatch)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV decode plane: shared page pool + "
+                         "radix prefix cache (redundant prompts fork "
+                         "their prefix instead of re-prefilling) + "
+                         "compacted decode dispatch that skips idle "
+                         "slots; greedy output is byte-identical to the "
+                         "dense cache")
+    ap.add_argument("--page-size", type=int, default=16, metavar="T",
+                    help="tokens per KV page under --paged")
     ap.add_argument("--service", action="store_true",
                     help="serve through the multi-tenant RolloutService "
                          "(Rollout-as-a-Service): prompts are submitted "
@@ -115,7 +124,8 @@ def main(argv=None):
             rebalancer=RebalancerConfig() if args.affinity else None,
             steps_per_dispatch=args.steps_per_dispatch,
             prefill_devices_per_engine=pre_dpe,
-            decode_devices_per_engine=dec_dpe)
+            decode_devices_per_engine=dec_dpe,
+            paged=args.paged, page_size=args.page_size)
         if args.affinity:
             for row in proxy.placement_report():
                 print("placement: " + format_placement_row(row))
@@ -128,7 +138,8 @@ def main(argv=None):
         eng = InferenceEngine(model, params, max_slots=args.slots,
                               max_len=1024,
                               steps_per_dispatch=args.steps_per_dispatch,
-                              mesh=mesh)
+                              mesh=mesh, paged=args.paged,
+                              page_size=args.page_size)
         proxy = LLMProxy([EngineHandle(eng, "local")])
 
     prompts = args.prompt or ["the agent moves ", "reward comes from "]

@@ -225,6 +225,67 @@ def attention_decode(p, cfg: ModelConfig, x, k_cache, v_cache, positions,
     return y, k_cache, v_cache
 
 
+def attention_decode_paged(p, cfg: ModelConfig, x, k_pool, v_pool, tables,
+                           positions, page_size: int):
+    """One-token decode against a PAGED KV pool.
+
+    x: [B,1,d]; k_pool/v_pool: [N+1, kvH, page, hd] (row N is the trash
+    page absorbing padded rows' writes); tables: [B,P] int32 page ids
+    (padded with the trash id); positions: [B] absolute position of the
+    new token. ``P * page_size`` must equal the dense engine's
+    ``max_len``: the gather below always materializes the FULL table
+    width, so the attention reduction runs over exactly the same axis
+    length — and therefore exactly the same partial-sum grouping — as
+    ``attention_decode``. Masked positions contribute exact zeros either
+    way, which is what makes paged-vs-dense greedy decode byte-identical
+    (the perf win is batch compaction: B is the POW2-bucketed ACTIVE
+    slot count, not max_slots). The Pallas counterpart that also skips
+    empty pages is ``kernels.decode_attention.ragged_paged_decode``.
+
+    Returns (out [B,1,d], k_pool, v_pool) with the new K/V scattered
+    into each row's current page.
+    """
+    B = x.shape[0]
+    P = tables.shape[1]
+    kvH, hd = k_pool.shape[1], k_pool.shape[3]
+    cdt = dt(cfg)
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"].astype(cdt))
+    if cfg.qk_norm:
+        q = rmsnorm_head(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_head(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q.swapaxes(1, 2), positions[:, None, None], cfg.rope_theta)
+    k_new = apply_rope(k.swapaxes(1, 2), positions[:, None, None],
+                       cfg.rope_theta)                    # [B,kvH,1,hd]
+    v_new = v.swapaxes(1, 2)
+
+    # scatter the new K/V at (page_table[b, pos//page], pos%page): the
+    # write VALUE is the same bits attention_decode's one-hot update
+    # produces (0*old + 1*new == new)
+    pid = jnp.take_along_axis(tables, (positions // page_size)[:, None],
+                              axis=1)[:, 0]               # [B]
+    off = positions % page_size
+    k_pool = k_pool.at[pid, :, off, :].set(k_new[:, :, 0, :])
+    v_pool = v_pool.at[pid, :, off, :].set(v_new[:, :, 0, :])
+    k_pool = shd(k_pool, None, "cache_kv_heads", "cache_page_seq", None)
+    v_pool = shd(v_pool, None, "cache_kv_heads", "cache_page_seq", None)
+
+    # gather each row's pages to a dense [B,kvH,P*page,hd] view
+    kg = jnp.moveaxis(k_pool[tables], 2, 1).reshape(B, kvH, P * page_size, hd)
+    vg = jnp.moveaxis(v_pool[tables], 2, 1).reshape(B, kvH, P * page_size, hd)
+
+    scores = _grouped_scores(q, kg, cfg)                  # [B,kvH,G,1,T]
+    idx = jnp.arange(P * page_size)[None, :]
+    valid = idx <= positions[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = jnp.einsum("bkgst,bkth->bkgsh", probs, vg)
+    out = out.reshape(B, cfg.num_heads, 1, cfg.head_dim)
+    y = jnp.einsum("bnsh,nhd->bsd", out, p["wo"].astype(cdt))
+    return y, k_pool, v_pool
+
+
 # ---------------------------------------------------------------------------
 # Gated MLP
 # ---------------------------------------------------------------------------

@@ -273,6 +273,33 @@ class Model:
         return tuple(self._block_cache_spec(pat, batch, cache_len)
                      for pat in self.cfg.block_pattern)
 
+    # ------------------------------------------------------------------
+    # paged KV pool (attention stacks only; see rl/paged_kv.py)
+    # ------------------------------------------------------------------
+    def supports_paged(self) -> bool:
+        """Paged KV needs position-addressable per-token state: every
+        mixer must be attention (a recurrent mamba/rwkv state has no
+        page structure) and no ring-buffered sliding window (a page
+        holds absolute positions, a ring holds positions mod window)."""
+        return (self.window is None
+                and all(m == "attn" for m, _ in self.cfg.block_pattern))
+
+    def init_paged_pool(self, num_rows: int, page_size: int):
+        """Zeroed page pool, one leaf pair per block-pattern position:
+        ``[num_periods, num_rows, kvH, page_size, hd]``. ``num_rows``
+        includes the engine's trash row (id ``num_rows-1``), which
+        absorbs padded-table writes and gathers."""
+        if not self.supports_paged():
+            raise ValueError(
+                f"{self.cfg.name}: paged KV requires an attention-only "
+                "stack with no sliding window")
+        cfg = self.cfg
+        shape = (cfg.num_periods, num_rows, cfg.num_kv_heads, page_size,
+                 cfg.head_dim)
+        return tuple({"k": jnp.zeros(shape, L.dt(cfg)),
+                      "v": jnp.zeros(shape, L.dt(cfg))}
+                     for _ in cfg.block_pattern)
+
     # logical axes per cache leaf, aligned with _block_cache_spec shapes.
     # Under SERVE_RULES the attention cache shards its sequence dim over
     # the group's "model" axis ("cache_seq" rule) — the layout the §6.3
@@ -287,27 +314,43 @@ class Model:
                  "S": (None, None, "rwkv_heads", None, None)},
     }
 
+    # paged pool leaves are [num_periods, num_rows, kvH, page, hd]: the
+    # within-page position dim shards over the group ("cache_page_seq"),
+    # the page-granular analogue of the dense "cache_seq" layout
+    _PAGED_CACHE_AXES = {
+        "attn": {"k": (None, None, "cache_kv_heads", "cache_page_seq", None),
+                 "v": (None, None, "cache_kv_heads", "cache_page_seq", None)},
+    }
+
     def cache_logical_axes(self):
         """Pytree matching ``init_cache`` structure whose leaves are the
         logical-axis tuples of each cache leaf."""
         return tuple(dict(self._CACHE_AXES[mixer])
                      for mixer, _ in self.cfg.block_pattern)
 
-    def cache_sharding(self, cache, mesh, rules):
+    def paged_cache_logical_axes(self):
+        return tuple(dict(self._PAGED_CACHE_AXES[mixer])
+                     for mixer, _ in self.cfg.block_pattern)
+
+    def cache_sharding(self, cache, mesh, rules, axes=None):
         """NamedSharding pytree for an engine cache on ``mesh`` under a
         logical rule set (divisibility handled exactly like params, via
-        ``fit_spec``)."""
+        ``fit_spec``). ``axes`` selects the layout — dense
+        (``cache_logical_axes``, default) or paged
+        (``paged_cache_logical_axes``)."""
         from jax.sharding import NamedSharding
         from repro.distributed.sharding import fit_spec, resolve_spec
 
-        def one(leaf, axes):
+        def one(leaf, leaf_axes):
             spec = fit_spec(leaf.shape,
-                            resolve_spec(axes, rules, mesh), mesh)
+                            resolve_spec(leaf_axes, rules, mesh), mesh)
             return NamedSharding(mesh, spec)
         # tree.map flattens up to the CACHE's leaves (arrays), so the
         # logical-axis tuples sitting at those positions pass through
         # whole instead of being descended into
-        return jax.tree.map(one, cache, self.cache_logical_axes())
+        return jax.tree.map(one, cache,
+                            axes if axes is not None
+                            else self.cache_logical_axes())
 
     # ------------------------------------------------------------------
     # KV-cache slot migration (live prefill/decode disaggregation)
@@ -335,6 +378,35 @@ class Model:
             lambda big, little: jax.lax.dynamic_update_slice_in_dim(
                 big, little.astype(big.dtype), slot, axis=1),
             cache, slot_cache)
+
+    def paged_to_dense_slot(self, pool, table):
+        """Gather one slot's pages into the batch-1 DENSE cache layout
+        (``init_cache(1, P*page)`` shapes) — the portable KVHandoff
+        format. ``table``: [P] int32 page ids, padded with the trash row
+        past the slot's allocation (those positions carry junk the
+        consumer masks by position, exactly like a dense engine's stale
+        rows). Eager ops, like ``extract_cache_slot``."""
+        table = jnp.asarray(table, jnp.int32)
+
+        def one(leaf):
+            g = jnp.swapaxes(leaf[:, table], 1, 2)   # [np,kvH,P,page,hd]
+            np_, kvh, P, page, hd = g.shape
+            return g.reshape(np_, kvh, P * page, hd)[:, None]
+        return jax.tree.map(one, pool)
+
+    def dense_slot_to_pages(self, pool, slot_cache, table):
+        """Scatter a batch-1 dense cache pytree into a slot's pages (the
+        inject half of a PD handoff / FT restore into a paged engine).
+        Positions past the allocation land in the trash row."""
+        table = jnp.asarray(table, jnp.int32)
+
+        def one(leaf, dense):
+            np_, _, kvh, length, hd = dense.shape
+            P = table.shape[0]
+            pages = dense[:, 0].reshape(np_, kvh, P, length // P, hd)
+            pages = jnp.swapaxes(pages, 1, 2)        # [np,P,kvH,page,hd]
+            return leaf.at[:, table].set(pages.astype(leaf.dtype))
+        return jax.tree.map(one, pool, slot_cache)
 
     # ------------------------------------------------------------------
     # decode
@@ -364,8 +436,132 @@ class Model:
             h = L.mlp_fwd(bp["mlp"], cfg, h)
         return x + h, new_cache
 
+    def _block_decode_paged(self, bp, pattern, x, pool_leaf, tables,
+                            positions, page_size):
+        cfg = self.cfg
+        mixer, ffn = pattern
+        if mixer != "attn":
+            raise ValueError(f"paged decode: unsupported mixer {mixer!r}")
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        h, k_p, v_p = L.attention_decode_paged(
+            bp["attn"], cfg, h, pool_leaf["k"], pool_leaf["v"], tables,
+            positions, page_size)
+        x = x + h
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            h, _ = MOE.moe_fwd(bp["moe"], cfg, h)
+        else:
+            h = L.mlp_fwd(bp["mlp"], cfg, h)
+        return x + h, {"k": k_p, "v": v_p}
+
+    def decode_step_paged(self, params, tokens, pool, tables, positions,
+                          page_size: int):
+        """Paged analogue of :meth:`decode_step`. ``pool`` leaves are
+        ``[num_periods, num_rows, kvH, page, hd]``; ``tables``: [B,P]
+        page ids (trash-padded); B is the COMPACTED active batch, not
+        max_slots. Per-row math is bit-identical to the dense step (see
+        ``attention_decode_paged``)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        x = x.astype(L.dt(cfg))
+        x = shd(x, "batch", "seq", "act_embed")
+
+        if self.scan_layers:
+            def body(x, xs):
+                period_params, period_pool = xs
+                new_pool = []
+                for p_idx, pat in enumerate(self.cfg.block_pattern):
+                    x, nc = self._block_decode_paged(
+                        period_params[p_idx], pat, x, period_pool[p_idx],
+                        tables, positions, page_size)
+                    new_pool.append(nc)
+                return x, tuple(new_pool)
+            x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
+        else:
+            outs = []
+            for i in range(cfg.num_periods):
+                pp = jax.tree.map(lambda a: a[i], params["layers"])
+                pc = jax.tree.map(lambda a: a[i], pool)
+                ncs = []
+                for p_idx, pat in enumerate(cfg.block_pattern):
+                    x, nc = self._block_decode_paged(
+                        pp[p_idx], pat, x, pc[p_idx], tables, positions,
+                        page_size)
+                    ncs.append(nc)
+                outs.append(tuple(ncs))
+            new_pool = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        w_out = (params["embed"]["tokens"].T if cfg.tie_embeddings
+                 else params["lm_head"]["w"])
+        logits = jnp.einsum("bsd,dv->bsv", x, w_out.astype(L.dt(cfg)))
+        return logits[:, 0].astype(jnp.float32), new_pool
+
+    def gather_paged_cache(self, pool, tables):
+        """Gather each compacted row's page table out of the pool into
+        the dense block-cache layout (``[np, B, kvH, P*page, hd]`` per
+        leaf, i.e. ``init_cache(B, P*page)`` shapes). ``tables``: [B,P]
+        int32, trash-padded — padded positions carry junk that downstream
+        attention masks by position, exactly like a dense engine's stale
+        rows."""
+        def one(leaf):
+            g = jnp.swapaxes(leaf[:, tables], 2, 3)  # [np,B,kvH,P,page,hd]
+            np_, b, kvh, p, page, hd = g.shape
+            return g.reshape(np_, b, kvh, p * page, hd)
+        return jax.tree.map(one, pool)
+
+    def scatter_block_writes(self, pool, cache, tables, positions,
+                             k_steps: int, page_size: int):
+        """Write the pages a K-step decode block can have touched back
+        into the pool. A block starting at ``positions[b]`` writes the
+        span ``[pos, pos+K)``, which lands on at most
+        ``(K-1)//page + 2`` pages starting at ``pos // page``; everything
+        else in the gathered view is byte-identical to the pool already,
+        so rewriting a partially-touched page is idempotent. Page-id
+        clamping to the last table column mirrors ``dynamic_slice``'s
+        automatic start clamping, so an overshooting candidate rewrites
+        the final page (or the trash row) with its own bytes."""
+        n_rows, n_pages = tables.shape
+        n_cand = (k_steps - 1) // page_size + 2
+
+        def one(leaf, dense):
+            np_, _, kvh, _, hd = dense.shape
+            for b in range(n_rows):
+                first = positions[b] // page_size
+                for t in range(n_cand):
+                    j = first + t
+                    pid = tables[b, jnp.minimum(j, n_pages - 1)]
+                    piece = jax.lax.dynamic_slice(
+                        dense, (0, b, 0, j * page_size, 0),
+                        (np_, 1, kvh, page_size, hd))
+                    leaf = jax.lax.dynamic_update_slice(
+                        leaf, piece.astype(leaf.dtype), (0, pid, 0, 0, 0))
+            return leaf
+        return jax.tree.map(one, pool, cache)
+
+    def decode_block_paged(self, params, tokens, pool, tables, positions,
+                           keys, temperatures, stop_ids, budgets, sample_fn,
+                           page_size: int):
+        """K paged decode steps in one compiled call. Rather than carry
+        the pool through the scan (a per-step pool scatter is ~100x the
+        cost of the gather on XLA:CPU), the block gathers each row's
+        pages into a dense cache ONCE, runs the unmodified dense
+        :meth:`decode_block` on it — bit-identical per-row math, which is
+        what keeps paged greedy output byte-equal to the dense engine —
+        and writes only the touched pages back at the end. ``tables`` is
+        loop-invariant: every page a slot can touch is allocated at
+        admission."""
+        cache = self.gather_paged_cache(pool, tables)
+        toks, lps, emitted, cache = self.decode_block(
+            params, tokens, cache, positions, keys, temperatures,
+            stop_ids, budgets, sample_fn)
+        pool = self.scatter_block_writes(pool, cache, tables, positions,
+                                         keys.shape[0], page_size)
+        return toks, lps, emitted, pool
+
     def decode_block(self, params, tokens, cache, positions, keys,
-                     temperatures, stop_ids, budgets, sample_fn):
+                     temperatures, stop_ids, budgets, sample_fn,
+                     step_fn=None):
         """K decode steps in one compiled call (``jax.lax.scan`` over the
         stacked ``keys``): the device-resident decode loop. Host dispatch,
         per-step Python overhead, and the token round-trip are amortized
@@ -389,9 +585,11 @@ class Model:
         slot's emitted column is a True-prefix: host code appends exactly
         the emitted tokens and re-derives stop/length finishing from them.
         """
+        step = step_fn if step_fn is not None else self.decode_step
+
         def body(carry, key):
             tok, pos, rem, done, cache = carry
-            logits, cache = self.decode_step(params, tok, cache, pos)
+            logits, cache = step(params, tok, cache, pos)
             t, lp = sample_fn(key, logits, temperatures)
             emit = ~done
             # frozen rows re-feed their previous token at the same
@@ -580,6 +778,125 @@ class Model:
                  else params["lm_head"]["w"])
         logits = jnp.einsum("bd,dv->bv", x_last, w_out.astype(L.dt(cfg)))
         return logits.astype(jnp.float32), new_cache
+
+    def prefill_paged(self, params, tokens, pool, table, page_size: int,
+                      last_pos=None, ctx_len=None):
+        """Prefill a (tail of a) prompt into a slot's KV pages.
+
+        tokens: [1, S] with S a page multiple (engine pads); table: [P]
+        int32 page ids for the WHOLE slot, trash-padded past the
+        allocation; last_pos: [1] index of the last real prompt token
+        WITHIN ``tokens``.
+
+        Two modes, selected statically so each gets its own compile:
+
+        - ``ctx_len=None`` (fresh prompt, no prefix hit): positions start
+          at 0 and attention runs ``_attend_causal`` over the tail alone —
+          the exact op sequence of the dense :meth:`prefill`, so the tail
+          logits (and the K/V bytes written to the pages) are bitwise
+          identical to the dense engine's.
+        - ``ctx_len`` a traced int32 scalar (prefix fork): ``ctx_len``
+          cached prefix tokens (a page multiple) already sit in the
+          slot's leading pages; the tail is written at positions
+          ``ctx_len + [0, S)`` and attends over the full gathered table
+          (cached prefix + its own causal tail, everything else masked
+          to exact zeros).
+
+        Returns (logits [1,V] fp32 at ``last_pos``, pool).
+        """
+        cfg = self.cfg
+        if not self.supports_paged():
+            raise ValueError(f"{cfg.name}: paged prefill needs an "
+                             "attention-only, non-windowed stack")
+        B, S = tokens.shape
+        n_tail_pages = S // page_size
+        P = table.shape[0]
+        base = jnp.arange(S)[None, :]
+        positions = base if ctx_len is None else base + ctx_len
+        start_page = (jnp.int32(0) if ctx_len is None
+                      else ctx_len // page_size)
+        x = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        x = x.astype(L.dt(cfg))
+        x = shd(x, "batch", "seq", "act_embed")
+
+        def write_pages(leaf, kv):
+            # kv: [1, kvH, S, hd] tail K or V -> page-aligned scatter;
+            # static page count, traced page ids (trash absorbs writes
+            # past the allocation when the tail bucket overshoots)
+            for j in range(n_tail_pages):
+                piece = kv[:, :, j * page_size:(j + 1) * page_size, :]
+                pid = table[start_page + j]
+                leaf = jax.lax.dynamic_update_slice(
+                    leaf, piece.astype(leaf.dtype), (pid, 0, 0, 0))
+            return leaf
+
+        def period_prefill(period_params, period_pool, x):
+            new_pool = []
+            for p_idx, pat in enumerate(cfg.block_pattern):
+                bp = period_params[p_idx]
+                cdt = L.dt(cfg)
+                h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+                q, k, v = L._qkv(bp["attn"], cfg, h, positions)
+                pl = period_pool[p_idx]
+                k_p = write_pages(pl["k"], k)
+                v_p = write_pages(pl["v"], v)
+                if ctx_len is None:
+                    out = L._attend_causal(q, k, v, cfg, None,
+                                           q_chunk=self.q_chunk)
+                else:
+                    # gather the full table (cached prefix + the tail
+                    # pages just written); mask mirrors _attend_causal:
+                    # row i sees absolute positions <= ctx_len + i, the
+                    # rest contribute exact zeros
+                    kvh, hd = k_p.shape[1], k_p.shape[3]
+                    kg = jnp.swapaxes(k_p[table], 0, 1)
+                    kg = kg.reshape(1, kvh, P * page_size, hd)
+                    vg = jnp.swapaxes(v_p[table], 0, 1)
+                    vg = vg.reshape(1, kvh, P * page_size, hd)
+                    scores = L._grouped_scores(q, kg, cfg)
+                    t_idx = jnp.arange(P * page_size)[None, None, :]
+                    mask = t_idx <= positions[0][:, None]
+                    scores = jnp.where(mask[None, None], scores, L.NEG_INF)
+                    probs = jax.nn.softmax(scores, axis=-1).astype(vg.dtype)
+                    out = jnp.einsum("bkgst,bkth->bkgsh", probs, vg)
+                    out = out.reshape(1, cfg.num_heads, S, cfg.head_dim)
+                h = jnp.einsum("bnsh,nhd->bsd", out,
+                               bp["attn"]["wo"].astype(cdt))
+                x = x + h
+                h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+                if pat[1] == "moe":
+                    h, _ = MOE.moe_fwd(bp["moe"], cfg, h)
+                else:
+                    h = L.mlp_fwd(bp["mlp"], cfg, h)
+                x = x + h
+                new_pool.append({"k": k_p, "v": v_p})
+            return x, tuple(new_pool)
+
+        if self.scan_layers:
+            def body(x, xs):
+                period_params, period_pool = xs
+                x, ncs = period_prefill(period_params, period_pool, x)
+                return x, ncs
+            x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
+        else:
+            outs = []
+            for i in range(cfg.num_periods):
+                pp = jax.tree.map(lambda a: a[i], params["layers"])
+                pc = jax.tree.map(lambda a: a[i], pool)
+                x, ncs = period_prefill(pp, pc, x)
+                outs.append(ncs)
+            new_pool = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if last_pos is None:
+            x_last = x[:, -1, :]
+        else:
+            x_last = jnp.take_along_axis(
+                x, last_pos[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        w_out = (params["embed"]["tokens"].T if cfg.tie_embeddings
+                 else params["lm_head"]["w"])
+        logits = jnp.einsum("bd,dv->bv", x_last, w_out.astype(L.dt(cfg)))
+        return logits.astype(jnp.float32), new_pool
 
 
 @functools.lru_cache(maxsize=64)

@@ -76,6 +76,7 @@ import numpy as np
 from repro.distributed.sharding import (SERVE_RULES, axis_rules,
                                         param_sharding, validate_group)
 from repro.models.model import Model
+from repro.rl.paged_kv import PagedKVAllocator, PrefixCache
 from repro.rl.sampling import sample_mixed
 
 
@@ -177,7 +178,9 @@ class InferenceEngine:
                  on_handoff: Optional[Callable[[KVHandoff], None]] = None,
                  steps_per_dispatch: int = 8, donate: bool = True,
                  bucketed_prefill: Optional[bool] = None,
-                 mesh=None, shard_rules: Optional[Dict] = None):
+                 mesh=None, shard_rules: Optional[Dict] = None,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         """``steps_per_dispatch`` (K) is the decode macro-step size: K
         decode steps run per jit dispatch via ``Model.decode_block``.
         Larger K amortizes dispatch + host round-trip overhead but bounds
@@ -246,6 +249,41 @@ class InferenceEngine:
             and all(mixer == "attn" for mixer, _ in model.cfg.block_pattern))
         self._bucketed_prefill = (supported if bucketed_prefill is None
                                   else bool(bucketed_prefill) and supported)
+        # Paged KV (opt-in): per-slot dense cache rows are replaced by a
+        # shared page pool + per-slot page tables, with a radix-style
+        # prefix cache so redundant rollouts / multi-turn continuations
+        # prefill once and FORK (rl/paged_kv.py). Greedy decode is
+        # byte-identical to paged=False (see attention_decode_paged);
+        # paged stays opt-in because SAMPLED (temp>0) streams are not:
+        # decode dispatch compacts to the pow2-bucketed ACTIVE batch and
+        # jax.random.categorical draws depend on the batch shape.
+        self.paged = bool(paged)
+        self.page_size = page_size
+        if self.paged:
+            if not model.supports_paged():
+                raise ValueError(
+                    f"{model.cfg.name}: paged KV requires an attention-"
+                    "only stack with no sliding window")
+            if page_size < 1 or page_size & (page_size - 1):
+                raise ValueError(f"page_size must be a power of two, "
+                                 f"got {page_size}")
+            if max_len % page_size:
+                raise ValueError(f"max_len={max_len} not divisible by "
+                                 f"page_size={page_size}")
+            self.num_pages = (num_pages if num_pages is not None
+                              else (max_slots * max_len) // page_size)
+            self._pages_per_slot = max_len // page_size
+            self._trash_pid = self.num_pages       # extra pool row
+            # page bookkeeping: all mutated under _step_lock (the
+            # allocator's own lock is a leaf below _lock; PrefixCache is
+            # lock-free and relies on _step_lock serialization)
+            self._alloc = PagedKVAllocator(self.num_pages, page_size)  # guarded by: _step_lock
+            self._prefix = PrefixCache(self._alloc, page_size)  # guarded by: _step_lock
+            self._tables: List[List[int]] = [[] for _ in range(max_slots)]  # guarded by: _step_lock
+            # page ids written on device since the last incremental
+            # snapshot capture (FT dirty tracking)
+            self._dirty = set()                    # guarded by: _step_lock
+            self.shared_prefix_tokens = 0          # guarded by: _step_lock
         # width of the padded per-slot stop-token matrix fed to
         # decode_block; grows (power of two -> bounded recompiles) if a
         # request carries more stop tokens
@@ -283,16 +321,23 @@ class InferenceEngine:
                         params, self.mesh, self._shard_rules)
                     self.params = jax.device_put(params,
                                                  self._param_shardings)
-                    cache = model.init_cache(max_slots, max_len)
+                    store = self._init_kv_store()
                     self._cache_shardings = model.cache_sharding(
-                        cache, self.mesh, self._shard_rules)
-                    # guarded by: _step_lock
-                    self._cache = jax.device_put(cache,
-                                                 self._cache_shardings)
+                        store, self.mesh, self._shard_rules,
+                        axes=(model.paged_cache_logical_axes()
+                              if self.paged else None))
+                    store = jax.device_put(store, self._cache_shardings)
             else:
                 self._param_shardings = None
                 self._cache_shardings = None
-                self._cache = model.init_cache(max_slots, max_len)  # guarded by: _step_lock
+                store = self._init_kv_store()
+            # the engine's KV store: dense per-slot cache (paged=False)
+            # or the shared page pool (paged=True)
+            if self.paged:
+                self._pool = store                 # guarded by: _step_lock
+                self._cache = None                 # guarded by: _step_lock
+            else:
+                self._cache = store                # guarded by: _step_lock
         # stats (steps/busy_steps count MACRO-steps, i.e. engine
         # iterations; decode_dispatches counts decode jit calls — with
         # K = steps_per_dispatch, dispatches/token converges to 1/K —
@@ -309,7 +354,23 @@ class InferenceEngine:
         self.handoffs_out = 0                      # guarded by: _step_lock
         self.handoffs_in = 0                       # guarded by: _step_lock
         self.crashes = 0                           # guarded by: _step_lock
+        # requests rejected at submit because prompt+budget can NEVER fit
+        # max_len (bugfix: formerly conflated with "no free slot" and
+        # queued forever). Guarded by _lock, not _step_lock: the
+        # rejection runs synchronously on the submitter's thread, which
+        # may hold the proxy's routing state and must not take
+        # _step_lock (cross-class ordering, see module docstring).
+        self.rejected_too_long = 0                 # guarded by: _lock
         self._build_jit()
+
+    def _init_kv_store(self):   # requires: _step_lock
+        """Fresh zeroed KV store (host layout): the dense per-slot cache,
+        or the page pool plus one trash row absorbing padded-table
+        writes/gathers."""
+        if self.paged:
+            return self.model.init_paged_pool(self.num_pages + 1,
+                                              self.page_size)
+        return self.model.init_cache(self.max_slots, self.max_len)
 
     # ------------------------------------------------------------------
     def _build_jit(self):
@@ -366,6 +427,43 @@ class InferenceEngine:
         self._decode_block_jit = _decode_block
         self._prefill_jit = _prefill_into_slot
         self._sample = sample_mixed
+        if not self.paged:
+            return
+        page = self.page_size
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def _decode_block_paged(params, tokens, pool, tables, positions,
+                                key, temperatures, stop_ids, budgets):
+            def split_body(c, _):
+                c, sub = jax.random.split(c)
+                return c, sub
+            new_key, keys = jax.lax.scan(split_body, key, None, length=K)
+            toks, lps, emitted, pool = model.decode_block_paged(
+                params, tokens, pool, tables, positions, keys,
+                temperatures, stop_ids, budgets, sample_fn=sample_mixed,
+                page_size=page)
+            return toks, lps, emitted, pool, new_key
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def _prefill_paged(params, tokens, pool, table, last_rel, key,
+                           temperature):
+            logits, pool = model.prefill_paged(
+                params, tokens, pool, table, page, last_pos=last_rel)
+            toks, lps = sample_mixed(key, logits, temperature)
+            return toks, lps, pool
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def _prefill_paged_fork(params, tokens, pool, table, ctx_len,
+                                last_rel, key, temperature):
+            logits, pool = model.prefill_paged(
+                params, tokens, pool, table, page, last_pos=last_rel,
+                ctx_len=ctx_len)
+            toks, lps = sample_mixed(key, logits, temperature)
+            return toks, lps, pool
+
+        self._decode_block_paged_jit = _decode_block_paged
+        self._prefill_paged_jit = _prefill_paged
+        self._prefill_paged_fork_jit = _prefill_paged_fork
 
     def _shard_ctx(self):
         """axis_rules context for tracing and placement: activates the
@@ -390,8 +488,33 @@ class InferenceEngine:
     # command interface (thread-safe)
     # ------------------------------------------------------------------
     def add_request(self, req: GenRequest):
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            # unservable at ANY occupancy: queueing it would either wedge
+            # admission forever (the old conflated `_admit` check) or
+            # waste a round trip to the drain-time backstop — reject NOW,
+            # on the submitter's thread, with a counted aborted result
+            self._reject_too_long(req)
+            return
         with self._lock:
             self._commands.append(("add", req))
+
+    def _reject_too_long(self, req: GenRequest):
+        """Emit the aborted result for a request whose prompt+budget can
+        never fit ``max_len``. Takes only ``_lock`` — callable from
+        ``add_request`` on a submitter thread that may sit under proxy
+        routing state (never ``_step_lock``; see cross-class ordering)."""
+        # advisory racy read for result metadata: exact versioning is
+        # meaningless for a request that never touched the slots
+        res = GenResult(request_id=req.request_id, tokens=[], logprobs=[],
+                        finish_reason="aborted",
+                        # analysis: ignore[guarded-attr] advisory read
+                        weight_version=self.weight_version,
+                        prefill_tokens=0, decode_tokens=0)
+        with self._lock:
+            self.rejected_too_long += 1
+            self._results[res.request_id] = res
+        if self.on_finish:
+            self.on_finish(res)
 
     def inject(self, handoff: KVHandoff):
         """Queue a prefilled trajectory for decode (PD disaggregation)."""
@@ -472,12 +595,22 @@ class InferenceEngine:
                 self._commands.clear()
                 self._results.clear()
             self._slots = [_Slot() for _ in range(self.max_slots)]
-            cache = self.model.init_cache(self.max_slots, self.max_len)
+            store = self._init_kv_store()
             if self.mesh is not None:
                 # the reborn replacement binds the same device group, so
                 # its fresh cache takes the same shardings
-                cache = jax.device_put(cache, self._cache_shardings)
-            self._cache = cache
+                store = jax.device_put(store, self._cache_shardings)
+            if self.paged:
+                self._pool = store
+                # the pool metadata dies with the process: fresh
+                # allocator / prefix cache / tables, no dirty pages
+                self._alloc = PagedKVAllocator(self.num_pages,
+                                               self.page_size)
+                self._prefix = PrefixCache(self._alloc, self.page_size)
+                self._tables = [[] for _ in range(self.max_slots)]
+                self._dirty = set()
+            else:
+                self._cache = store
             self.crashes += 1
 
     def suspend(self):
@@ -517,6 +650,11 @@ class InferenceEngine:
             self.params = params
             self.weight_version = version
             if recompute_caches:
+                if self.paged:
+                    # cached prefix KV was computed under the OLD
+                    # weights: a post-sync fork of it would silently mix
+                    # versions in one trajectory
+                    self._prefix.clear()
                 for i, s in enumerate(self._slots):
                     if s.active and s.pos > 0:
                         self._reprefill_slot(i)
@@ -546,6 +684,9 @@ class InferenceEngine:
             self.params = jax.tree.unflatten(treedef, leaves)
             self.weight_version = version
             if recompute_caches:
+                if self.paged:
+                    # stale-version prefix KV, same as update_params
+                    self._prefix.clear()
                 for i, s in enumerate(self._slots):
                     if s.active and s.pos > 0:
                         self._reprefill_slot(i)
@@ -598,29 +739,89 @@ class InferenceEngine:
             b <<= 1
         return min(b, self.max_len)
 
-    def _prefill_slot(self, i: int, temperature: float):   # requires: _step_lock
+    def _prefill_slot(self, i: int, temperature: float,
+                      ctx_tokens: int = 0):   # requires: _step_lock
         """Fill slot ``i``'s cache row from its tokens[:pos] — shared by
         first admission and the protocol-(5) KV recompute. On attention-
         only stacks the prompt is padded to a power-of-two bucket (padded
         positions beyond last_pos are causally masked and later overwritten
         by decode), so XLA compiles O(log max_len) prefill shapes instead
         of one per distinct prompt length. Returns the (token, logprob)
-        sampled at the true last prompt position."""
+        sampled at the true last prompt position.
+
+        Paged engines prefill only the TAIL past ``ctx_tokens`` cached
+        prefix tokens (a page multiple, 0 = fresh prompt): the forked
+        prefix pages already hold its KV. The tail is padded to a page-
+        multiple bucket; overshoot past the slot's allocation writes to
+        the trash row."""
         s = self._slots[i]
-        toks = s.tokens[: s.pos]
+        if not self.paged:
+            toks = s.tokens[: s.pos]
+            if self._bucketed_prefill:
+                toks = toks + [0] * (self._bucket_len(len(toks)) - len(toks))
+            tok_arr = jnp.asarray([toks], jnp.int32)
+            last = jnp.asarray([s.pos - 1], jnp.int32)
+            with self._shard_ctx():
+                tok, lp, self._cache = self._prefill_jit(
+                    self.params, tok_arr, self._cache, i, last,
+                    self._next_key(), jnp.float32(temperature))
+            return tok, lp
+        page = self.page_size
+        m = ctx_tokens
+        tail = s.tokens[m: s.pos]
+        n = len(tail)
         if self._bucketed_prefill:
-            toks = toks + [0] * (self._bucket_len(len(toks)) - len(toks))
-        tok_arr = jnp.asarray([toks], jnp.int32)
-        last = jnp.asarray([s.pos - 1], jnp.int32)
+            sb = max(self._bucket_len(n), page)
+        else:
+            sb = -(-n // page) * page
+        # never index page-table slots past the table width: the real
+        # tail region always fits ([m, pos) is within max_len), only the
+        # bucket overshoot is trimmed
+        sb = min(sb, self.max_len - m)
+        tail = tail + [0] * (sb - n)
+        tok_arr = jnp.asarray([tail], jnp.int32)
+        tbl = jnp.asarray(self._full_table(i))
+        last_rel = jnp.asarray([s.pos - 1 - m], jnp.int32)
         with self._shard_ctx():
-            tok, lp, self._cache = self._prefill_jit(
-                self.params, tok_arr, self._cache, i, last,
-                self._next_key(), jnp.float32(temperature))
+            if m == 0:
+                tok, lp, self._pool = self._prefill_paged_jit(
+                    self.params, tok_arr, self._pool, tbl, last_rel,
+                    self._next_key(), jnp.float32(temperature))
+            else:
+                tok, lp, self._pool = self._prefill_paged_fork_jit(
+                    self.params, tok_arr, self._pool, tbl, jnp.int32(m),
+                    last_rel, self._next_key(), jnp.float32(temperature))
+        first = m // page
+        self._dirty.update(self._tables[i][first: first + sb // page])
         return tok, lp
 
     def _reprefill_slot(self, i: int):   # requires: _step_lock
+        if self.paged:
+            # the recompute rewrites every page of the slot from position
+            # 0 — give it exclusive pages first so the rewrite cannot
+            # mutate pages shared with the prefix cache or other slots
+            self._cow_slot_pages(i)
         self._prefill_slot(i, -1.0)   # greedy: the sampled token is unused
         self.recomputes += 1
+
+    def _cow_slot_pages(self, i: int):   # requires: _step_lock
+        """Copy-on-write every shared page of slot ``i``'s table. Pool
+        pressure first evicts prefix-cache pages; if the pool is STILL
+        exhausted the slot falls back to rewriting the shared page in
+        place — safe for the weight-sync path because the prefix cache
+        was cleared and every sharing slot is itself recomputed to
+        byte-identical contents under the same new weights."""
+        tbl = self._tables[i]
+        for j, pid in enumerate(tbl):
+            if self._alloc.refcount(pid) <= 1:
+                continue
+            while (self._alloc.free_pages == 0
+                   and self._prefix.cached_pages > 0):
+                self._prefix.evict(1)
+            new = self._alloc.cow(pid)
+            if new is not None and new != pid:
+                tbl[j] = new
+                self._dirty.add(new)
 
     def _grow_stop_width(self, stop_tokens: Sequence[int]):   # requires: _step_lock
         while len(stop_tokens) > self._stop_width:
@@ -628,10 +829,19 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------
     def _admit(self, req: GenRequest) -> bool:   # requires: _step_lock
+        # too-long requests never reach here: add_request rejects them at
+        # submit and _drain_commands backstops queue-restored ones, so a
+        # False return always means "retry later", never "can never fit"
         free = [i for i, s in enumerate(self._slots) if not s.active]
-        if not free or len(req.prompt) + req.max_new_tokens > self.max_len:
+        if not free:
             return False
         i = free[0]
+        shared = 0
+        if self.paged:
+            table, shared = self._alloc_slot_pages(req)
+            if table is None:
+                return False      # pool pressure: defer like no-free-slot
+            self._tables[i] = table
         s = self._slots[i]
         s.active = True
         s.request = req
@@ -640,8 +850,13 @@ class InferenceEngine:
         s.pos = len(req.prompt)
         s.start_version = self.weight_version
         self._grow_stop_width(req.stop_tokens)
-        tok, lp = self._prefill_slot(i, req.temperature)
-        self.prefill_tokens += s.pos      # real prompt tokens, not padding
+        tok, lp = self._prefill_slot(i, req.temperature, ctx_tokens=shared)
+        self.prefill_tokens += s.pos - shared   # real NEW tokens prefilled
+        if self.paged:
+            self.shared_prefix_tokens += shared
+            # register the freshly-prefilled prompt pages so concurrent
+            # admissions of shared-prompt requests fork them immediately
+            self._prefix.insert(req.prompt, self._tables[i])
         self._append_token(i, int(tok[0]), float(lp[0]))
         # stream the first sampled token (idempotent if _append_token
         # already finished the request and _finish emitted it)
@@ -652,6 +867,64 @@ class InferenceEngine:
             self._emit_handoff(i)
         return True
 
+    def _alloc_slot_pages(self, req: GenRequest):   # requires: _step_lock
+        """Reserve slot pages for ``req`` up-front: EVERY page the request
+        can touch (prompt + full decode budget, capped at max_len) is
+        allocated at admission, so a mid-flight decode step can never hit
+        an out-of-pages failure. Shared-prefix pages come from the radix
+        cache (incref'd, never written by this slot); the rest are fresh
+        private pages. Returns ``(table, shared_tokens)`` or
+        ``(None, 0)`` when the pool — even after evicting cached prefix
+        pages — cannot cover the request (caller defers it)."""
+        page = self.page_size
+        total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        n_pages = -(-total // page)
+        matched = self._prefix.match(req.prompt)
+        # the tail (>= 1 prompt token: decode needs a real last position
+        # to prefill logits from) always starts on a fresh private page
+        matched = matched[: (len(req.prompt) - 1) // page]
+        self._alloc.incref(matched)   # pin before eviction can run
+        need = n_pages - len(matched)
+        while (self._alloc.free_pages < need
+               and self._prefix.cached_pages > 0):
+            self._prefix.evict(1)
+        priv = self._alloc.alloc(need)
+        if priv is None:
+            self._alloc.decref(matched)
+            return None, 0
+        self._dirty.update(priv)
+        return matched + priv, len(matched) * page
+
+    def _full_table(self, i: int) -> np.ndarray:   # requires: _step_lock
+        """Slot ``i``'s page table padded to full width with the trash
+        page id — the fixed-shape form every paged jit consumes (padded
+        gathers read the trash row and are masked; padded writes land in
+        the trash row)."""
+        tbl = np.full((self._pages_per_slot,), self._trash_pid, np.int32)
+        pids = self._tables[i][: self._pages_per_slot]
+        tbl[: len(pids)] = pids
+        return tbl
+
+    def _release_slot_pages(self, i: int):   # requires: _step_lock
+        """Return slot ``i``'s pages to the pool — but first hand the
+        finished trajectory to the prefix cache so a multi-turn
+        continuation (same conversation + new env tokens) forks it
+        instead of re-prefilling. Only guaranteed-WRITTEN positions are
+        cacheable: the device has KV for tokens[:pos-1] (the final
+        sampled token was never fed), so the insert stops at the last
+        full page below pos-1."""
+        if not self.paged:
+            return
+        tbl = self._tables[i]
+        if not tbl:
+            return
+        s = self._slots[i]
+        done = max(s.pos - 1, 0)
+        if done >= self.page_size:
+            self._prefix.insert(s.tokens[:done], tbl)
+        self._alloc.decref(tbl)
+        self._tables[i] = []
+
     def _peek_handoff(self, i: int) -> KVHandoff:   # requires: _step_lock
         """Freeze slot ``i`` into a KVHandoff WITHOUT freeing the slot.
         ``extract_cache_slot`` produces fresh arrays (a dynamic slice), so
@@ -660,20 +933,29 @@ class InferenceEngine:
         HOST numpy (``jax.device_get`` all-gathers a sharded slot's
         shards): the host copy is the portable interchange format — it
         injects into any engine regardless of that engine's TP group
-        size, and the FT snapshotter serializes it as-is."""
+        size, and the FT snapshotter serializes it as-is. A paged engine
+        gathers the slot's pages back into the SAME dense layout, so the
+        handoff format — and everything downstream of it (unequal-TP
+        re-shard, FT serialization, paged<->dense handoffs) — is
+        unchanged."""
         s = self._slots[i]
+        if self.paged:
+            cache = jax.device_get(self.model.paged_to_dense_slot(
+                self._pool, jnp.asarray(self._full_table(i))))
+        else:
+            cache = jax.device_get(self.model.extract_cache_slot(
+                self._cache, i))
         return KVHandoff(
             request=s.request, tokens=list(s.tokens),
             new_tokens=list(s.new_tokens), logprobs=list(s.logprobs),
             pos=s.pos, start_version=s.start_version,
-            cache=jax.device_get(
-                self.model.extract_cache_slot(self._cache, i)),
-            weight_version=self.weight_version)
+            cache=cache, weight_version=self.weight_version)
 
     def _package_handoff(self, i: int) -> KVHandoff:   # requires: _step_lock
         """Freeze slot ``i`` into a KVHandoff and free the slot."""
         s = self._slots[i]
         handoff = self._peek_handoff(i)
+        self._release_slot_pages(i)
         s.active = False
         s.request = None
         return handoff
@@ -692,6 +974,21 @@ class InferenceEngine:
         if not free:
             return False
         i = free[0]
+        if self.paged:
+            # all-private pages: the handoff carries opaque dense KV, so
+            # there is no token<->page correspondence to share from (the
+            # finished slot will still be INSERTED for future forks)
+            req = handoff.request
+            total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+            need = -(-total // self.page_size)
+            while (self._alloc.free_pages < need
+                   and self._prefix.cached_pages > 0):
+                self._prefix.evict(1)
+            pids = self._alloc.alloc(need)
+            if pids is None:
+                return False
+            self._tables[i] = pids
+            self._dirty.update(pids)
         s = self._slots[i]
         s.active = True
         s.request = handoff.request
@@ -707,6 +1004,13 @@ class InferenceEngine:
             # this cache under the current weights instead of injecting
             # the stale one
             self._reprefill_slot(i)
+        elif self.paged:
+            # scatter the dense slot image into this slot's pages (one
+            # eager page-granular scatter; GSPMD handles a sharded pool)
+            self._pool = self.model.dense_slot_to_pages(
+                self._pool,
+                jax.tree.map(jnp.asarray, handoff.cache),
+                jnp.asarray(self._full_table(i)))
         else:
             self._cache = self.model.inject_cache_slot(self._cache,
                                                        handoff.cache, i)
@@ -751,6 +1055,7 @@ class InferenceEngine:
             decode_tokens=len(s.new_tokens))
         with self._lock:
             self._results[res.request_id] = res
+        self._release_slot_pages(i)
         s.active = False
         s.request = None
         # final cumulative stream push BEFORE on_finish: the proxy's
@@ -840,10 +1145,10 @@ class InferenceEngine:
                 continue
             if (kind == "add" and len(payload.prompt)
                     + payload.max_new_tokens > self.max_len):
-                # unservable at ANY occupancy: deferring would wedge the
-                # engine (and head-of-line-block everything behind it)
-                # forever, so unwind the request immediately
-                self._emit_aborted_pending(cmd)
+                # drain-time backstop for paths that enqueue directly
+                # (FT command-queue restore); live submissions are
+                # rejected in add_request before they ever queue
+                self._reject_too_long(payload)
                 continue
             blocked = self.suspended or bool(deferred)
             if not blocked:
@@ -898,6 +1203,8 @@ class InferenceEngine:
         if not active:
             return 0
         self.busy_steps += 1
+        if self.paged:
+            return self._decode_macro_paged(active)
         K = self.steps_per_dispatch
         last_tokens, positions, temps, budgets, stop_ids = \
             self._gather_slot_arrays()
@@ -943,6 +1250,66 @@ class InferenceEngine:
         self._emit_step_progress(active)
         return n_emitted
 
+    def _decode_macro_paged(self, active: List[int]) -> int:   # requires: _step_lock
+        """Paged decode macro-step: only the ACTIVE slots ride the
+        dispatch, padded to a power-of-two batch bucket (bounded
+        compiles) with trash page tables and budget 0 for padding rows.
+        This batch COMPACTION is where the paged throughput win comes
+        from — the dense path pays ``max_slots`` attention rows on every
+        dispatch regardless of occupancy, while this path pays the
+        occupancy bucket. Greedy streams stay byte-identical to the dense
+        path because each real row computes the exact dense op sequence
+        over its full table width (see ``attention_decode_paged``)."""
+        K = self.steps_per_dispatch
+        ba = 1
+        while ba < len(active):
+            ba <<= 1
+        last_tokens = np.zeros((ba, 1), np.int32)
+        positions = np.zeros((ba,), np.int32)
+        temps = np.ones((ba,), np.float32)
+        budgets = np.zeros((ba,), np.int32)
+        stop_ids = np.full((ba, self._stop_width), -1, np.int32)
+        tables = np.full((ba, self._pages_per_slot), self._trash_pid,
+                         np.int32)
+        for j, i in enumerate(active):
+            s = self._slots[i]
+            last_tokens[j, 0] = s.tokens[-1]
+            positions[j] = s.pos - 1  # index of the token we feed
+            temps[j] = s.request.temperature
+            budgets[j] = min(s.request.max_new_tokens - len(s.new_tokens),
+                             self.max_len - s.pos)
+            st = list(s.request.stop_tokens)
+            stop_ids[j, : len(st)] = st
+            # the device writes KV at positions [pos-1, pos-1+K): mark
+            # their pages dirty NOW, before _append_token can finish the
+            # slot and release its table to the prefix cache
+            tbl = self._tables[i]
+            lo = (s.pos - 1) // self.page_size
+            hi = min((s.pos - 1 + K) // self.page_size + 1, len(tbl))
+            self._dirty.update(tbl[lo:hi])
+            tables[j] = self._full_table(i)
+        with self._shard_ctx():
+            toks, lps, emitted, self._pool, self._key = \
+                self._decode_block_paged_jit(
+                    self.params, jnp.asarray(last_tokens), self._pool,
+                    jnp.asarray(tables), jnp.asarray(positions),
+                    self._key, jnp.asarray(temps), jnp.asarray(stop_ids),
+                    jnp.asarray(budgets))
+        self.decode_dispatches += 1
+        toks = np.asarray(toks)          # [K, ba]
+        lps = np.asarray(lps)
+        emitted = np.asarray(emitted)
+        n_emitted = 0
+        for j, i in enumerate(active):
+            for k in range(K):
+                if not self._slots[i].active or not emitted[k, j]:
+                    break
+                self.decode_tokens += 1
+                n_emitted += 1
+                self._append_token(i, int(toks[k, j]), float(lps[k, j]))
+        self._emit_step_progress(active)
+        return n_emitted
+
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, int]:
         """Consistent snapshot of the step-granular counters. Callers
@@ -950,7 +1317,7 @@ class InferenceEngine:
         and the engine calls back into those holders' locks from under
         it — see the module docstring's cross-class ordering note)."""
         with self._step_lock:
-            return {
+            out = {
                 "steps": self.steps,
                 "busy_steps": self.busy_steps,
                 "decode_dispatches": self.decode_dispatches,
@@ -965,6 +1332,66 @@ class InferenceEngine:
                 "sharding_drops": self.sharding_drops,
                 "sync_bytes": self.sync_bytes,
             }
+            with self._lock:   # nested acquisition: canonical order
+                out["rejected_too_long"] = self.rejected_too_long
+            if self.paged:
+                out.update({
+                    "shared_prefix_tokens": self.shared_prefix_tokens,
+                    "free_pages": self._alloc.free_pages,
+                    "page_highwater": self._alloc.highwater,
+                    "prefix_cached_pages": self._prefix.cached_pages,
+                    "prefix_hits": self._prefix.hits,
+                    "prefix_misses": self._prefix.misses,
+                })
+            return out
+
+    def capture_kv_incremental(self) -> Dict[str, object]:
+        """FT capture for paged engines: gather ONLY the pages written
+        since the last capture (page-granularity dirty tracking) instead
+        of device_get-ing every active slot's full dense row. The
+        snapshotter merges the returned pages into its host-side pool
+        image and assembles self-contained dense records from it, so the
+        on-disk snapshot format is unchanged.
+
+        Returns ``pages`` ({pid: [one host array per pool leaf]}),
+        ``slots`` (active-slot metadata incl. page table), ``live_pages``
+        (pids any restore could still need — slot tables plus prefix
+        cache — for pruning the host image), and ``captured_bytes``."""
+        with self._step_lock:
+            if not self.paged:
+                raise RuntimeError("incremental KV capture requires "
+                                   "paged=True")
+            dirty = sorted(p for p in self._dirty
+                           if self._alloc.refcount(p) > 0)
+            self._dirty.clear()
+            pages: Dict[int, list] = {}
+            captured = 0
+            if dirty:
+                idx = jnp.asarray(dirty, jnp.int32)
+                host = jax.device_get(
+                    jax.tree.map(lambda leaf: leaf[:, idx], self._pool))
+                flat = jax.tree.leaves(host)
+                captured = sum(int(a.nbytes) for a in flat)
+                for j, pid in enumerate(dirty):
+                    pages[pid] = [a[:, j] for a in flat]
+            slots = []
+            live = set(self._prefix.page_ids())
+            for i, s in enumerate(self._slots):
+                if not s.active:
+                    continue
+                live.update(self._tables[i])
+                slots.append({
+                    "slot": i, "request": s.request,
+                    "tokens": list(s.tokens),
+                    "new_tokens": list(s.new_tokens),
+                    "logprobs": list(s.logprobs),
+                    "pos": s.pos,
+                    "start_version": s.start_version,
+                    "weight_version": self.weight_version,
+                    "table": list(self._tables[i]),
+                })
+            return {"pages": pages, "slots": slots, "live_pages": live,
+                    "captured_bytes": captured}
 
     def pop_result(self, request_id: str) -> Optional[GenResult]:
         with self._lock:

@@ -1,0 +1,323 @@
+"""Paged KV-cache bookkeeping: a refcounted copy-on-write page allocator
+plus a radix-style shared-prefix cache (the vLLM PagedAttention / SGLang
+RadixAttention idea, sized for the decode plane of §5.2/§6.3).
+
+The engine owns ONE device-resident page pool per attention cache leaf
+(``Model.init_paged_pool``); this module tracks which pool rows (pages)
+belong to whom. Pages are shared by reference counting:
+
+- each live slot holds one reference per page-table entry,
+- the prefix cache holds one reference per cached page,
+- a page returns to the free list when its last reference drops.
+
+Forking (``redundancy>1`` rollouts, multi-turn continuations) is an
+``incref`` of the matched prefix pages — no KV bytes move. Shared pages
+are never written on the hot path: the engine rounds a prefix match DOWN
+to a full-page multiple strictly below the prompt length, so a slot's
+tail always starts on a fresh private page. ``cow`` covers the one
+writer of previously-shared pages (the weight-sync KV recompute).
+
+The allocator also timestamps writes (``note_write`` / ``dirty_since``):
+page-granularity dirty tracking is what turns the FT plane's slot
+captures into incremental snapshots (only pages written since the last
+capture cross the device->host boundary).
+
+Locking: both classes are leaf locks under the engine's canonical order
+(``_step_lock`` -> ``_lock`` -> here). ``PagedKVAllocator._lock`` guards
+all allocator state; :class:`PrefixCache` is driven only from under the
+engine's ``_step_lock`` and delegates page lifetime to the allocator, so
+it needs no lock of its own beyond the allocator's.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class PageLeakError(AssertionError):
+    """Raised by :meth:`PagedKVAllocator.check` on invariant violation."""
+
+
+class PagedKVAllocator:
+    """Fixed-size pool of KV pages with refcounts and a LIFO free list.
+
+    Page ids are ``0..num_pages-1``; the engine reserves one extra pool
+    row (id ``num_pages``) as the trash page for padded writes/gathers —
+    that row is outside this allocator on purpose.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._lock = threading.Lock()
+        # LIFO free list: recently-freed pages are re-used first (their
+        # pool rows are the ones most likely still in cache)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))  # guarded by: _lock
+        self._refs: List[int] = [0] * num_pages    # guarded by: _lock
+        # monotonic write stamps for incremental snapshots: stamp 0 means
+        # "never written"; dirty_since(e) returns pages written at stamp>e
+        self._stamp: List[int] = [0] * num_pages   # guarded by: _lock
+        self._clock = 0                            # guarded by: _lock
+        self.highwater = 0                         # guarded by: _lock
+
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        with self._lock:
+            return self.num_pages - len(self._free)
+
+    def refcount(self, pid: int) -> int:
+        with self._lock:
+            return self._refs[pid]
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` fresh pages with refcount 1 each, or None if the pool
+        cannot satisfy the whole request (all-or-nothing: the engine
+        allocates a slot's full prompt+budget worth of pages at admission
+        so decode can never fail mid-flight)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        with self._lock:
+            if n > len(self._free):
+                return None
+            pids = [self._free.pop() for _ in range(n)]
+            for p in pids:
+                self._refs[p] = 1
+            self.highwater = max(self.highwater,
+                                 self.num_pages - len(self._free))
+            return pids
+
+    def incref(self, pids: Sequence[int]):
+        """Fork: one more holder per page (slot table entry or prefix-
+        cache node)."""
+        with self._lock:
+            for p in pids:
+                if self._refs[p] <= 0:
+                    raise PageLeakError(f"incref of free page {p}")
+                self._refs[p] += 1
+
+    def decref(self, pids: Sequence[int]) -> List[int]:
+        """Drop one reference per page; returns the pages actually freed
+        (refcount hit zero -> back on the free list)."""
+        freed: List[int] = []
+        with self._lock:
+            for p in pids:
+                if self._refs[p] <= 0:
+                    raise PageLeakError(f"decref of free page {p}")
+                self._refs[p] -= 1
+                if self._refs[p] == 0:
+                    self._free.append(p)
+                    freed.append(p)
+        return freed
+
+    def cow(self, pid: int) -> Optional[int]:
+        """Copy-on-write: an exclusive page id for a writer of ``pid``.
+        Refcount 1 -> already exclusive, returned as-is. Shared -> a
+        fresh page is allocated (caller copies/recomputes the contents)
+        and the writer's reference to ``pid`` is dropped. None when the
+        pool is exhausted (caller may evict prefix-cache pages and
+        retry, or fall back to an in-place rewrite)."""
+        with self._lock:
+            if self._refs[pid] <= 0:
+                raise PageLeakError(f"cow of free page {pid}")
+            if self._refs[pid] == 1:
+                return pid
+            if not self._free:
+                return None
+            new = self._free.pop()
+            self._refs[new] = 1
+            self._refs[pid] -= 1
+            self.highwater = max(self.highwater,
+                                 self.num_pages - len(self._free))
+            return new
+
+    # ------------------------------------------------------------------
+    # write stamps (incremental snapshots)
+    # ------------------------------------------------------------------
+    def note_write(self, pids: Sequence[int]):
+        """Record that ``pids`` were (re)written on device."""
+        with self._lock:
+            self._clock += 1
+            for p in pids:
+                self._stamp[p] = self._clock
+
+    def clock(self) -> int:
+        with self._lock:
+            return self._clock
+
+    def dirty_since(self, stamp: int) -> List[int]:
+        """ALLOCATED pages written after ``stamp`` (free pages are never
+        captured: their contents are dead)."""
+        with self._lock:
+            return [p for p in range(self.num_pages)
+                    if self._refs[p] > 0 and self._stamp[p] > stamp]
+
+    # ------------------------------------------------------------------
+    def check(self, external_refs: Optional[Dict[int, int]] = None):
+        """Invariants (hypothesis harness + engine tests):
+
+        - every page is exactly once in {free list} or {refcount > 0};
+        - the free list holds no duplicates and no referenced page;
+        - with ``external_refs`` (pid -> expected holders), refcounts
+          match the callers' books exactly (no leaked references).
+        """
+        with self._lock:
+            free = list(self._free)
+            refs = list(self._refs)
+        if len(set(free)) != len(free):
+            raise PageLeakError(f"duplicate pages in free list: {free}")
+        for p in free:
+            if refs[p] != 0:
+                raise PageLeakError(f"page {p} free but refcount {refs[p]}")
+        for p in range(self.num_pages):
+            if refs[p] < 0:
+                raise PageLeakError(f"page {p} refcount {refs[p]} < 0")
+            if refs[p] == 0 and p not in set(free):
+                raise PageLeakError(f"page {p} leaked (ref 0, not free)")
+        if external_refs is not None:
+            for p in range(self.num_pages):
+                want = external_refs.get(p, 0)
+                if refs[p] != want:
+                    raise PageLeakError(
+                        f"page {p}: refcount {refs[p]} != {want} holders")
+
+
+class _Node:
+    __slots__ = ("pid", "children", "tick")
+
+    def __init__(self, pid: int, tick: int):
+        self.pid = pid
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.tick = tick
+
+
+class PrefixCache:
+    """Radix-style prefix cache over page-granular token chunks.
+
+    Keys are tuples of ``page_size`` token ids; a path from the root
+    spells a token prefix and each node pins one KV page (the cache
+    holds a real allocator reference per node, so cached pages survive
+    their originating slot). ``match`` is the fork fast path; ``insert``
+    is called after admission prefill (prompt pages) and at slot release
+    (full-sequence pages, which is what makes multi-turn continuations
+    hit). Eviction is LRU over LEAF nodes only — evicting an interior
+    node would orphan its descendants' match path.
+
+    Driven exclusively from under the engine's ``_step_lock`` (admission,
+    release, weight sync); page lifetime is delegated to the allocator,
+    whose lock is the leaf of the ordering.
+    """
+
+    def __init__(self, alloc: PagedKVAllocator, page_size: int):
+        self.alloc = alloc
+        self.page_size = page_size
+        self._root: Dict[Tuple[int, ...], _Node] = {}
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def _chunks(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
+        p = self.page_size
+        n = len(tokens) // p
+        return [tuple(tokens[i * p:(i + 1) * p]) for i in range(n)]
+
+    @property
+    def cached_pages(self) -> int:
+        def count(children) -> int:
+            return sum(1 + count(n.children) for n in children.values())
+        return count(self._root)
+
+    def page_ids(self) -> List[int]:
+        out: List[int] = []
+
+        def walk(children):
+            for n in children.values():
+                out.append(n.pid)
+                walk(n.children)
+        walk(self._root)
+        return out
+
+    # ------------------------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Page ids of the longest cached full-page prefix of ``tokens``.
+        Returns WITHOUT taking references — the caller must ``incref``
+        the returned pages before anything (e.g. ``evict``) can drop the
+        cache's own reference."""
+        self._tick += 1
+        pids: List[int] = []
+        children = self._root
+        for chunk in self._chunks(tokens):
+            node = children.get(chunk)
+            if node is None:
+                break
+            node.tick = self._tick
+            pids.append(node.pid)
+            children = node.children
+        if pids:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return pids
+
+    def insert(self, tokens: Sequence[int], pids: Sequence[int]):
+        """Register ``tokens``' full-page chunks against the slot's page
+        table ``pids``. Existing nodes win (their pages hold bitwise-
+        identical KV, and keeping them maximizes sharing); new nodes take
+        a cache reference on the slot's page."""
+        self._tick += 1
+        children = self._root
+        for j, chunk in enumerate(self._chunks(tokens)):
+            if j >= len(pids):
+                break
+            node = children.get(chunk)
+            if node is None:
+                node = _Node(pids[j], self._tick)
+                self.alloc.incref([node.pid])
+                children[chunk] = node
+            node.tick = self._tick
+            children = node.children
+
+    def evict(self, n: int) -> int:
+        """Drop up to ``n`` LRU leaf nodes (repeatedly, so an LRU chain
+        unwinds child-first). Returns how many pages were actually freed
+        back to the pool — a dropped node whose page other slots still
+        reference frees nothing yet."""
+        freed = 0
+        for _ in range(max(n, 0)):
+            victim = self._lru_leaf()
+            if victim is None:
+                break
+            parent, key, node = victim
+            del parent[key]
+            freed += len(self.alloc.decref([node.pid]))
+        return freed
+
+    def _lru_leaf(self):
+        best = None
+
+        def walk(children):
+            nonlocal best
+            for key, n in children.items():
+                if n.children:
+                    walk(n.children)
+                elif best is None or n.tick < best[2].tick:
+                    best = (children, key, n)
+        walk(self._root)
+        return best
+
+    def clear(self):
+        """Drop every cached page (weight sync: cached KV is stale under
+        the new weights; engine crash: the pool itself is gone)."""
+        pids = self.page_ids()
+        self._root = {}
+        if pids:
+            self.alloc.decref(pids)
