@@ -30,6 +30,7 @@ ALL = [
     "async_overlap",    # async rollout/train overlap on the live plane
     "fault_tolerance",  # §8: rollout checkpoint/restore vs scratch restart
     "traffic_gen",      # Rollout-as-a-Service: multi-tenant QoS under load
+    "slo_burn",         # serving SLOs (TTFT / inter-token) + step budget
     "sharded_engine",   # TP engine groups: parity, sync bytes, PD 2->4
     "paged_kv",         # paged KV pool + prefix forking + dirty capture
     "kernels_bench",

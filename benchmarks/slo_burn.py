@@ -1,0 +1,160 @@
+"""SLO-burn baseline (ROADMAP item 2): first-class serving SLOs — TTFT
+and inter-token gap p50/p99 from the proxy's per-request lifecycle
+records — plus the trainer's step-time-budget burn rate.
+
+Two phases:
+
+1. **Serving SLOs.** An open-loop prompt load runs against a tiny live
+   engine through :class:`repro.serve.RolloutService` with the obs plane
+   attached (``instrument_proxy``), so the same numbers land in the
+   ``repro_slo_*`` histograms a Prometheus scrape would see. Percentiles
+   are computed exactly from the lifecycle records; the histogram's
+   bucket-bound estimate is reported next to the exact p99 as a
+   cross-check of the exporter path.
+2. **Step budget burn.** A synchronous tiny runner executes real GRPO
+   steps; the budget is 1.2x the first post-warmup step's wall time and
+   burn = wall / budget per step. A healthy pipeline holds mean burn
+   near 1/1.2 with zero violations; regressions in any protocol phase
+   (fetch / barrier / train — the new ``StepMetrics`` phase timings,
+   also reported) push it past 1.
+
+    PYTHONPATH=src python -m benchmarks.slo_burn [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import time
+
+import jax
+
+from benchmarks.common import Bench, fmt, header
+from repro.configs import get_config
+from repro.core import (EngineHandle, LiveRLRunner, LLMProxy, RunnerConfig,
+                        ServerlessPlatform)
+from repro.models import Model
+from repro.obs import MetricsRegistry, instrument_proxy
+from repro.rewards.rule_based import format_bonus_reward
+from repro.rl.engine import InferenceEngine
+from repro.rl.trainer import (default_optimizer, init_train_state,
+                              make_grpo_train_step)
+from repro.serve import JobState, RolloutJob, RolloutService
+
+WARMUP = 2
+
+
+def _pctl(xs, q):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def _serving_slos(b: Bench, duration_s: float, rate: float,
+                  max_new: int = 24):
+    cfg = get_config("tiny")
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = InferenceEngine(model, params, max_slots=4, max_len=128, seed=0)
+    proxy = LLMProxy([EngineHandle(eng, "H20")])
+    reg = MetricsRegistry()
+    instrument_proxy(reg, proxy)      # fills the repro_slo_* histograms
+    svc = RolloutService(proxy, max_inflight=8)
+    svc.register_tenant("slo", weight=1.0, max_queue=64)
+    rng = random.Random(0)
+    tickets = []
+    svc.start()
+    try:
+        t_end = time.monotonic() + duration_s
+        next_t = time.monotonic()
+        while time.monotonic() < t_end:
+            now = time.monotonic()
+            while next_t <= now:
+                tickets.append(svc.submit("slo", RolloutJob(
+                    kind="prompt",
+                    prompt=[1, 5, 7, rng.randrange(3, 250)],
+                    max_new_tokens=max_new, temperature=1.0,
+                    stop_tokens=())))
+                next_t += rng.expovariate(rate)
+            time.sleep(0.002)
+        deadline = time.monotonic() + 30
+        while any(not t.done for t in tickets):
+            if time.monotonic() > deadline:
+                raise RuntimeError("drain did not complete in 30s")
+            time.sleep(0.01)
+    finally:
+        svc.close()
+    if svc.error is not None:
+        raise RuntimeError("service thread crashed") from svc.error
+    done = sum(1 for t in tickets if t.state == JobState.DONE)
+    recs = proxy.drain_completed_lifecycles()
+    ttft = [r.ttft for r in recs if r.ttft is not None]
+    gaps = [g for r in recs for g in r.gaps()]
+    reg.collect()                     # one scrape: mirror into families
+    hist = {f.name: f for f in reg.families()}
+    ttft_hist_p99 = hist["repro_slo_ttft_seconds"].child().percentile(0.99)
+    b.row("slo_requests_done", done)
+    b.row("ttft_p50_ms", fmt(1e3 * _pctl(ttft, 0.5), 2))
+    b.row("ttft_p99_ms", fmt(1e3 * _pctl(ttft, 0.99), 2))
+    b.row("ttft_p99_ms_hist_estimate", fmt(1e3 * ttft_hist_p99, 2),
+          "same order as ttft_p99_ms (bucket-bound estimator)")
+    b.row("intertoken_p50_ms", fmt(1e3 * _pctl(gaps, 0.5), 2))
+    b.row("intertoken_p99_ms", fmt(1e3 * _pctl(gaps, 0.99), 2))
+
+
+def _step_burn(b: Bench, steps: int):
+    cfg = get_config("tiny")
+    model = Model(cfg, remat=False)
+    opt = default_optimizer(1e-3)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    eng = InferenceEngine(model, state.params, max_slots=8, max_len=256,
+                          seed=3)
+    proxy = LLMProxy([EngineHandle(eng, "H20")])
+    with LiveRLRunner(
+            RunnerConfig(batch_size=4, group_size=2, alpha=2, mode="sync",
+                         tasks=("game",), max_new_tokens=16,
+                         temperature=0.0, seed=0),
+            proxy, state,
+            jax.jit(make_grpo_train_step(model, opt, num_microbatches=2)),
+            ServerlessPlatform(), format_bonus_reward,
+            seq_len=256) as runner:
+        hist = runner.run_steps(WARMUP + steps)
+    warm = hist[WARMUP:]
+    budget = 1.2 * warm[0].wall_s
+    burns = [s.wall_s / budget for s in warm]
+    b.row("step_budget_s", fmt(budget, 4),
+          "1.2x first post-warmup step")
+    b.row("step_burn_mean", fmt(sum(burns) / len(burns), 3),
+          "~0.83 (= 1/1.2) when step time is stable")
+    b.row("step_burn_max", fmt(max(burns), 3))
+    b.row("step_budget_violations", sum(1 for x in burns if x > 1.0),
+          "0")
+    for phase in ("fetch_s", "barrier_s", "train_s"):
+        vals = [s.to_dict()[phase] for s in warm]
+        b.row(f"step_{phase}_mean", fmt(sum(vals) / len(vals), 4))
+
+
+def run(duration_s: float = 6.0, rate: float = 60.0, steps: int = 6,
+        smoke: bool = False, save: bool = True):
+    if smoke:
+        duration_s, rate, steps = 1.5, 30.0, 3
+    b = Bench("slo_burn")
+    _serving_slos(b, duration_s, rate)
+    _step_burn(b, steps)
+    if save:
+        b.save()
+    return b
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short window for CI (no JSON rewrite)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        header()
+    run(smoke=args.smoke, save=not args.smoke)
+
+
+if __name__ == "__main__":
+    main()

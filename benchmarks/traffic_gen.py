@@ -9,8 +9,10 @@ collapse. The aggregate arrival rate is set well above engine capacity,
 so the run measures behavior *under overload*:
 
 - goodput (completed jobs/s and streamed tokens/s) per tenant,
-- time-to-first-token and inter-token latency p50/p99 from the
-  per-chunk arrival stamps (:class:`repro.serve.StreamChunk.t`),
+- time-to-first-token and inter-token latency p50/p99 from the proxy's
+  per-request lifecycle records (``LLMProxy.drain_completed_lifecycles``
+  — the data plane stamps submit/admit/first-token/finish itself, so no
+  client-side recomputation from chunk arrival times),
 - fairness: the measured per-tenant admission/completion share against
   the configured stride weights (gold:bronze = 3:1 -> 0.75 share), and
 - backpressure: submissions rejected by the bounded per-tenant queues.
@@ -111,15 +113,19 @@ def run(duration_s: float = 8.0, rate_per_tenant: float = 150.0,
 
     adm_total = sum(congested[n]["admitted"] for n in TENANTS)
     w_total = sum(TENANTS.values())
+    # SLO timings come from the proxy's own lifecycle records: TTFT is
+    # proxy-submit -> first GROWING stream delivery (admission queueing
+    # inside the service is excluded — it's reported separately via the
+    # rejected/admitted rows), gaps are per-token
+    lcs = {lc.request_id: lc
+           for lc in svc.proxy.drain_completed_lifecycles()}
     ttft, gaps = {}, {}
     for name, ts in tickets.items():
         done = [t for t in ts if t.state == JobState.DONE]
-        ttft[name] = [t.stream.first_token_t - t.t_submit for t in done
-                      if t.stream.first_token_t is not None]
-        gaps[name] = [b2.t - a.t
-                      for t in done
-                      for a, b2 in zip(t.stream.chunks(),
-                                       t.stream.chunks()[1:])]
+        recs = [lcs[f"{t.job_id}.r0"] for t in done
+                if f"{t.job_id}.r0" in lcs]
+        ttft[name] = [r.ttft for r in recs if r.ttft is not None]
+        gaps[name] = [g for r in recs for g in r.gaps()]
     for name in TENANTS:
         ts = tickets[name]
         done = [t for t in ts if t.state == JobState.DONE]

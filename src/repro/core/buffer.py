@@ -98,6 +98,18 @@ class SampleBuffer:
         with self._lock:
             return len(self._items)
 
+    def stats(self) -> Dict[str, int]:
+        """Immutable snapshot of the buffer counters (one lock
+        acquisition; the obs plane scrapes this concurrently with
+        put/get traffic). Returns a fresh dict every call."""
+        with self._lock:
+            return {"depth": len(self._items),
+                    "current_version": self.current_version,
+                    "total_put": self.total_put,
+                    "total_evicted": self.total_evicted,
+                    "total_consumed": self.total_consumed,
+                    "total_deduped": self.total_deduped}
+
     def try_get_batch(self, batch_size: int) -> Optional[List[Trajectory]]:
         """Non-blocking: a batch of the OLDEST valid trajectories, or None."""
         with self._cv:

@@ -18,14 +18,61 @@ an abort that races the migration is resolved at handoff time.
 """
 from __future__ import annotations
 
+import collections
 import threading
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+import time
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.hardware import PERF, REGISTRY, ROLE_CLASS_AFFINITY
 from repro.core.resource import Binding, ResourceManager
 from repro.rl.engine import (GenRequest, GenResult, InferenceEngine,
                              KVHandoff)
+
+
+@dataclass
+class RequestLifecycle:
+    """Per-request data-plane timestamps (``time.monotonic``), recorded
+    by the proxy as the single source of truth for latency SLOs —
+    submit (``submit()``), admit (first engine progress report),
+    first-token (first report with generated tokens), finish (result
+    delivery). ``token_times`` holds one ``(t, cum_tokens)`` entry per
+    progress arrival that grew the stream, so per-token inter-token gaps
+    are derivable without client-side chunk reconstruction."""
+    request_id: str
+    t_submit: float
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    tokens: int = 0
+    finish_reason: str = ""
+    token_times: List[Tuple[float, int]] = field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    @property
+    def total(self) -> Optional[float]:
+        if self.t_finish is None:
+            return None
+        return self.t_finish - self.t_submit
+
+    def gaps(self) -> List[float]:
+        """Per-token inter-token gaps: each progress arrival's elapsed
+        time divided by the tokens it delivered (a K-token macro-step
+        counts as K tokens over one arrival gap)."""
+        out = []
+        for (t0, n0), (t1, n1) in zip(self.token_times,
+                                      self.token_times[1:]):
+            if n1 > n0:
+                out.append((t1 - t0) / (n1 - n0))
+        return out
+
+    def snapshot(self) -> "RequestLifecycle":
+        return replace(self, token_times=list(self.token_times))
 
 
 @dataclass
@@ -112,8 +159,22 @@ class LLMProxy:
         # follows its trajectory across PD handoffs, role switches, and
         # FT re-injection without re-subscribing.
         self._streams: Dict[str, Callable] = {}          # guarded by: _lock
+        # per-request lifecycle timestamps (submit/admit/first-token/
+        # finish): live records keyed by request id, finished records
+        # moved to a bounded deque consumers drain
+        # (drain_completed_lifecycles). Both mutated from submitter and
+        # engine-hook threads, hence under the routing lock.
+        self._lifecycle: Dict[str, RequestLifecycle] = {}  # guarded by: _lock
+        self._completed_lifecycles = collections.deque(maxlen=8192)  # guarded by: _lock
         self._lock = threading.Lock()
         self.suspended = False      # bare flag, atomic under the GIL
+        # SLO observation hooks (bare, single-assignment at wiring time):
+        # called OUTSIDE every proxy/engine lock with one float —
+        # on_ttft(seconds) at first-token, on_gap(seconds-per-token) on
+        # each later progress arrival. Wired to the obs-plane histograms
+        # by repro.obs.instrument.
+        self.on_ttft: Optional[Callable[[float], None]] = None
+        self.on_gap: Optional[Callable[[float], None]] = None
         for h in handles:
             h.engine.on_finish = self._make_finish_hook(h)
             h.engine.on_progress = self._make_progress_hook(h)
@@ -154,11 +215,17 @@ class LLMProxy:
     # ------------------------------------------------------------------
     def _make_finish_hook(self, handle: EngineHandle):
         def hook(result: GenResult):
+            now = time.monotonic()
             with self._lock:
                 cb = self._callbacks.pop(result.request_id, None)
                 self._route.pop(result.request_id, None)
                 self._abort_requested.discard(result.request_id)
                 self._streams.pop(result.request_id, None)
+                lc = self._lifecycle.pop(result.request_id, None)
+                if lc is not None:
+                    lc.t_finish = now
+                    lc.finish_reason = result.finish_reason
+                    self._completed_lifecycles.append(lc)
             if cb:
                 cb(result)
         return hook
@@ -168,10 +235,37 @@ class LLMProxy:
         ``_step_lock``, so the subscriber lookup takes ``_lock`` briefly
         and the subscriber itself (a TokenStream push — leaf lock only)
         is invoked OUTSIDE it, preserving the cross-class lock order
-        documented in ``repro.rl.engine``."""
+        documented in ``repro.rl.engine``.
+
+        Also the lifecycle stamping point: the first progress report is
+        the admit stamp, the first report that GREW the stream is the
+        first-token stamp. Cumulative delivery makes replays (PD
+        handoff, KV recompute, FT re-injection) no-ops here too — a
+        report that doesn't grow the stream stamps nothing. The SLO
+        hooks fire outside the lock, like the stream subscriber."""
         def hook(rid: str, cum_tokens: List[int], cum_logprobs: List[float]):
+            now = time.monotonic()
+            ttft_obs = gap_obs = None
             with self._lock:
                 fn = self._streams.get(rid)
+                lc = self._lifecycle.get(rid)
+                if lc is not None:
+                    if lc.t_admit is None:
+                        lc.t_admit = now
+                    n = len(cum_tokens)
+                    if n > lc.tokens:
+                        if lc.t_first_token is None:
+                            lc.t_first_token = now
+                            ttft_obs = now - lc.t_submit
+                        else:
+                            t_prev, n_prev = lc.token_times[-1]
+                            gap_obs = (now - t_prev) / (n - n_prev)
+                        lc.token_times.append((now, n))
+                        lc.tokens = n
+            if ttft_obs is not None and self.on_ttft is not None:
+                self.on_ttft(ttft_obs)
+            if gap_obs is not None and self.on_gap is not None:
+                self.on_gap(gap_obs)
             if fn is not None:
                 fn(rid, cum_tokens, cum_logprobs)
         return hook
@@ -238,11 +332,14 @@ class LLMProxy:
         ``(request_id, cumulative_tokens, cumulative_logprobs)`` as the
         engines emit (see ``InferenceEngine.on_progress``)."""
         h = self._select(req.tag)
+        now = time.monotonic()
         with self._lock:
             self._callbacks[req.request_id] = callback
             if on_tokens is not None:
                 self._streams[req.request_id] = on_tokens
             self._route[req.request_id] = h
+            self._lifecycle[req.request_id] = RequestLifecycle(
+                request_id=req.request_id, t_submit=now)
             self.requests += 1
             self.routed_by_pool[h.pool] = \
                 self.routed_by_pool.get(h.pool, 0) + 1
@@ -297,6 +394,7 @@ class LLMProxy:
                 self._callbacks.pop(rid, None)
                 self._abort_requested.discard(rid)
                 self._streams.pop(rid, None)
+                self._lifecycle.pop(rid, None)
 
     def reinject(self, handoff: KVHandoff,
                  callback: Optional[Callable[[GenResult], None]] = None,
@@ -313,6 +411,7 @@ class LLMProxy:
         into a newer plane stays correct."""
         cands = self.decode_handles if self.pd_disagg else self.handles
         rid = handoff.request.request_id
+        now = time.monotonic()
         with self._lock:
             dst = min(cands, key=lambda h: h.load())
             if callback is not None:
@@ -320,9 +419,36 @@ class LLMProxy:
             if on_tokens is not None:
                 self._streams[rid] = on_tokens
             self._route[rid] = dst
+            # a live recovery keeps the original lifecycle (latency is
+            # measured from the user's submit); a cold restore into a
+            # fresh proxy starts a new record at re-injection time
+            if rid not in self._lifecycle:
+                self._lifecycle[rid] = RequestLifecycle(
+                    request_id=rid, t_submit=now,
+                    tokens=len(handoff.new_tokens))
             self.recoveries += 1
             dst.engine.inject(handoff)
         return dst
+
+    # ------------------------------------------------------------------
+    # per-request lifecycle records (latency source of truth)
+    # ------------------------------------------------------------------
+    def lifecycle(self, request_id: str) -> Optional[RequestLifecycle]:
+        """Snapshot copy of a LIVE request's lifecycle record (None once
+        finished — drain the completed deque instead)."""
+        with self._lock:
+            lc = self._lifecycle.get(request_id)
+            return None if lc is None else lc.snapshot()
+
+    def drain_completed_lifecycles(self) -> List[RequestLifecycle]:
+        """Pop every finished lifecycle record (each carries its final
+        stamps; records are owned by the caller after the drain). The
+        backing deque is bounded, so benchmarks that submit faster than
+        they drain lose the OLDEST records, never block the hot path."""
+        with self._lock:
+            out = list(self._completed_lifecycles)
+            self._completed_lifecycles.clear()
+        return out
 
     # ------------------------------------------------------------------
     # weight-sync protocol hooks (steps (2)-(4))
@@ -527,7 +653,13 @@ class LLMProxy:
         engines = []
         for h in self.handles:
             row = {"pool": h.pool, "name": h.name, "role": h.role,
-                   "steps_per_dispatch": h.engine.steps_per_dispatch}
+                   "steps_per_dispatch": h.engine.steps_per_dispatch,
+                   # occupancy/backlog gauges (advisory lock-free reads
+                   # plus the _lock-guarded queue length) — what the
+                   # obs plane exports per role for the autoscaler
+                   "queue_len": h.engine.queue_len,
+                   "active_slots": h.engine.num_active,
+                   "max_slots": h.engine.max_slots}
             row.update(h.engine.stats())
             engines.append(row)
         with self._lock:
@@ -538,9 +670,13 @@ class LLMProxy:
                 "handoffs": self.handoffs,
                 "recoveries": self.recoveries,
                 "routed_by_pool": dict(self.routed_by_pool),
+                "routed_requests": len(self._route),
                 "role_switches": self.role_switches,
                 "switch_migrations": self.switch_migrations,
-                "switch_log": list(self.switch_log),
+                # snapshot COPIES down to the entry dicts: a scraper
+                # mutating (or iterating) its snapshot must never touch
+                # the live rebalancer log
+                "switch_log": [dict(e) for e in self.switch_log],
                 "engines": engines,
             }
 

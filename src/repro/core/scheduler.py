@@ -173,6 +173,45 @@ class StepMetrics:
     deduped: int = 0                 # replayed trajectories dropped by the
     #                                  buffer's traj_id dedup (delta; > 0
     #                                  only after a rollout-plane restore)
+    fetch_s: float = 0.0             # step (1): blocking batch retrieval
+    barrier_s: float = 0.0           # steps (2)-(5): push-await + suspend/
+    #                                  update/resume critical section
+    train_s: float = 0.0             # step (6): the GRPO update itself
+    staleness: int = 0               # weight-version staleness of the
+    #                                  trained batch: trainer version at
+    #                                  fetch minus the OLDEST start_version
+    #                                  in the batch (worst case)
+
+    def to_dict(self) -> Dict[str, float]:
+        """Stable flat schema — key order and types are
+        ``STEP_METRICS_SCHEMA``, consumed verbatim by the runner's
+        per-step log line and the ``repro_step_*`` gauge exporter
+        (``repro.obs.instrument``); regression-tested in
+        tests/test_observability.py. Add fields THERE, not ad hoc."""
+        return {name: typ(getattr(self, name))
+                for name, typ in STEP_METRICS_SCHEMA}
+
+
+# (field, type) pairs defining the stable StepMetrics export schema; the
+# obs plane derives one `repro_step_<field>` gauge per entry.
+STEP_METRICS_SCHEMA = (
+    ("step", int),
+    ("wall_s", float),
+    ("fetch_s", float),
+    ("barrier_s", float),
+    ("train_s", float),
+    ("loss", float),
+    ("reward_mean", float),
+    ("evicted", int),
+    ("aborted", int),
+    ("trajs", int),
+    ("decode_during_train", int),
+    ("batch_fetched_step", int),
+    ("batch_max_version", int),
+    ("staleness", int),
+    ("role_switches", int),
+    ("deduped", int),
+)
 
 
 TRAINER_TENANT = "trainer"
@@ -519,7 +558,10 @@ class LiveRLRunner:
                 else:
                     batch_trajs = self._await_batch()
                     fetched_step = step
+                t_fetch = time.monotonic()
                 self.last_batch = batch_trajs
+                staleness = self.version - min(t.start_version
+                                               for t in batch_trajs)
                 # (2)-(5) the ONLY rollout/trainer barrier: suspend,
                 # pull + update + in-flight KV recompute, resume — atomic
                 # w.r.t. the service tick so a weight swap never races a
@@ -549,11 +591,13 @@ class LiveRLRunner:
                         # pending reward is quiescent and mutually
                         # consistent
                         self.barrier_hook(self, step)
+                t_barrier = time.monotonic()
                 # (6) train_step, overlapped with the resumed rollout
                 batch = self._pack(batch_trajs)
                 d0 = self._decode_tokens_total()
                 self.state, metrics = self.train_step_fn(self.state, batch)
                 loss = float(metrics["loss"])   # blocks until step done
+                t_train = time.monotonic()
                 d1 = self._decode_tokens_total()
                 self.version = int(self.state.version)
                 self.buffer.set_version(self.version)
@@ -585,7 +629,11 @@ class LiveRLRunner:
                     batch_max_version=max(t.start_version
                                           for t in batch_trajs),
                     role_switches=rs_total - self._last_role_switches,
-                    deduped=dd_total - self._last_deduped)
+                    deduped=dd_total - self._last_deduped,
+                    fetch_s=t_fetch - t0,
+                    barrier_s=t_barrier - t_fetch,
+                    train_s=t_train - t_barrier,
+                    staleness=staleness)
                 self._last_evicted, self._last_aborted = ev_total, ab_total
                 self._last_role_switches = rs_total
                 self._last_deduped = dd_total

@@ -12,7 +12,7 @@ import random
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, Optional
 
 
@@ -94,6 +94,23 @@ class ServerlessPlatform:
         # url -> invocations to fail
         self._poison: Dict[str, int] = {}          # guarded by: _lock
         self.stats = ServerlessStats()             # guarded by: _lock
+        # obs hook: called OUTSIDE all locks with (url, wall_seconds)
+        # after each live invocation completes (success or failure)
+        self.on_invoke: Optional[Callable[[str, float], None]] = None
+
+    def snapshot(self) -> ServerlessStats:
+        """Immutable copy of the counters plus the instantaneous
+        in-flight count — the scrape surface (``self.stats`` itself is
+        the live, lock-guarded object; never hand it out)."""
+        with self._lock:
+            snap = replace(self.stats)
+            snap.peak_instances = max(snap.peak_instances, self._active)
+            return snap
+
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return self._active
 
     def deploy(self, url: str, fn: Callable):
         """Register a function behind a serverless URL."""
@@ -174,6 +191,9 @@ class ServerlessPlatform:
                 self.stats.total_io_s += io
                 self.stats.max_io_s = max(self.stats.max_io_s, io)
                 self._cv.notify()
+            hook = self.on_invoke
+            if hook is not None:
+                hook(url, dt)
 
     def invoke_async(self, url: str, *args, **kwargs) -> Future:
         return self._pool.submit(self.invoke, url, *args, **kwargs)

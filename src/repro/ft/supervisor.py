@@ -228,6 +228,73 @@ class FTSupervisor:
                            if rid not in rehomed and proxy.routed(rid)])
         ev.recovered = not self.cfg.scratch_recovery
 
+    # ------------------------------------------------------------------
+    # watchdog entry points (repro.obs.watchdog) — called from the
+    # monitor thread, which holds NO locks
+    # ------------------------------------------------------------------
+    def recover_hung_engine(self, handle) -> FailureEvent:
+        """Recover an engine whose beat went silent (a *wedged*
+        ``step()``, not a loud crash — the gap injected faults never
+        exercised). The wedged step holds ``_step_lock`` forever, so
+        recovery must not touch engine locks: capture the routed
+        requests first (routes outlive the kill), then ``hard_kill()``
+        — the lock-free SIGKILL analogue, honored at the step's next
+        kill-check as it unwinds — and wait for the replacement process
+        (``crashes`` increments once ``crash()`` rebuilds the engine on
+        the formerly-wedged thread). Only then re-home the lost
+        requests under the service barrier, exactly like an injected
+        engine crash."""
+        runner = self.runner
+        eng = handle.engine
+        t0 = time.monotonic()
+        step = len(runner.history)
+        lost = runner.proxy.requests_on(handle)
+        destroyed = eng.inflight_decode_tokens
+        crashes0 = eng.crashes
+        eng.hard_kill()
+        deadline = t0 + 30.0
+        while eng.crashes == crashes0:
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"hard-killed engine {handle.name or handle.pool} "
+                    "never came back (no step() observed the kill)")
+            time.sleep(0.005)
+        ev = FailureEvent(step=step, kind="engine", target=handle.name
+                          or handle.pool, destroyed_tokens=destroyed,
+                          lost_rids=lost,
+                          detail="watchdog: beat silent past deadline")
+        with runner.service.barrier():
+            self._recover_engine(ev, handle)
+        ev.recovery_s = time.monotonic() - t0
+        self.events.append(ev)
+        self.log.append(
+            f"step {step}: watchdog killed hung engine {ev.target} — "
+            f"destroyed {ev.destroyed_tokens} tokens, recovered "
+            f"{ev.recovered_tokens}")
+        return ev
+
+    def recover_stalled_ems(self) -> int:
+        """Recover env managers that are GENERATING but whose active
+        request is routed nowhere (orphaned by a lost engine or a
+        dropped route): retry them over their retained token prefix.
+        Taken under the service barrier so the plane is quiescent."""
+        runner = self.runner
+        proxy = runner.proxy
+        n = 0
+        with runner.service.barrier():
+            for em in list(runner.active):
+                rid = em._active_req
+                if rid is None or em.state.name != "GENERATING" \
+                        or proxy.routed(rid):
+                    continue
+                em._active_req = None
+                em.retry()
+                n += 1
+        if n:
+            self.log.append(f"watchdog: re-homed {n} stalled env "
+                            "managers")
+        return n
+
     def _recover_rollout(self, ev: FailureEvent):
         """Full plane restore from the latest snapshot while training
         keeps its progress — the dedup-heavy path: trajectories consumed

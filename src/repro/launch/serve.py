@@ -94,6 +94,20 @@ def main(argv=None):
                          "in-flight requests from the periodic KV-slot "
                          "snapshot (snapshot-covered requests resume "
                          "mid-decode; the rest re-prefill)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve Prometheus text metrics at "
+                         "http://127.0.0.1:PORT/metrics (0 = ephemeral "
+                         "port; watch live with "
+                         "python -m repro.obs.dashboard --url ...)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="heartbeat watchdog (§8): hard-kill an engine "
+                         "whose beat goes silent while work is queued, "
+                         "then resume its requests from the periodic "
+                         "KV-slot snapshot (uncovered ones re-prefill); "
+                         "requires --async-pump")
+    ap.add_argument("--watchdog-deadline", type=float, default=2.0,
+                    metavar="S", help="stall deadline in seconds")
     args = ap.parse_args(argv)
     if args.failure_rate > 0 and args.async_pump:
         ap.error("--failure-rate drives the synchronous pump loop; drop "
@@ -101,6 +115,10 @@ def main(argv=None):
     if args.service and (args.async_pump or args.failure_rate > 0):
         ap.error("--service owns the pump loop; drop --async-pump / "
                  "--failure-rate")
+    if args.watchdog and not args.async_pump:
+        ap.error("--watchdog recovers the background pump path; add "
+                 "--async-pump (training uses repro.launch.train "
+                 "--watchdog)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -143,12 +161,23 @@ def main(argv=None):
         proxy = LLMProxy([EngineHandle(eng, "local")])
 
     prompts = args.prompt or ["the agent moves ", "reward comes from "]
+    reg = mserver = None
+    if args.metrics_port is not None:
+        from repro.obs import (MetricsRegistry, MetricsServer,
+                               instrument_proxy)
+        reg = MetricsRegistry()
+        instrument_proxy(reg, proxy)
+        mserver = MetricsServer(reg, port=args.metrics_port).start()
+        print(f"metrics: {mserver.url}")
     if args.service:
         # Rollout-as-a-Service: the service thread owns the pump loop;
         # this thread is an ordinary streaming client
         from repro.serve import RolloutJob, RolloutService
         with RolloutService(proxy) as svc:
             svc.register_tenant("cli")
+            if reg is not None:
+                from repro.obs import instrument_service
+                instrument_service(reg, svc)
             svc.start()
             tickets = [
                 (p, svc.submit("cli", RolloutJob(
@@ -163,6 +192,8 @@ def main(argv=None):
                     print(TOKENIZER.decode(chunk.tokens), end="",
                           flush=True)
                 print(f"  ({tk.wait(timeout=60)})")
+        if mserver is not None:
+            mserver.close()
         proxy.release_bindings()
         return
     results = []
@@ -216,12 +247,26 @@ def main(argv=None):
         # proxy route table absorb the concurrency
         stop = threading.Event()
         pump_error = []
+        snap_lock = threading.Lock()
+        snap_slots = {}                 # guarded by snap_lock
 
         def pump_loop():
             try:
+                pumps = 0
                 while not stop.is_set():
+                    if args.watchdog and pumps % 2 == 0:
+                        # periodic KV-slot snapshot, same idiom as the
+                        # --failure-rate demo: watchdog-recovered
+                        # requests resume mid-decode when covered
+                        snap = {hf.request.request_id: hf
+                                for h in proxy.handles
+                                for hf in h.engine.snapshot_slots()}
+                        with snap_lock:
+                            snap_slots.clear()
+                            snap_slots.update(snap)
                     if proxy.pump() == 0:
                         time.sleep(0.001)
+                    pumps += 1
             except BaseException as e:      # surfaced by the wait loop
                 pump_error.append(e)
 
@@ -229,18 +274,62 @@ def main(argv=None):
         pump_thread.start()
     if args.failure_rate <= 0:
         for i, p in enumerate(prompts):
-            proxy.submit(GenRequest(request_id=f"r{i}",
-                                    prompt=TOKENIZER.encode(p, bos=True),
-                                    max_new_tokens=args.max_new_tokens,
-                                    temperature=args.temperature),
-                         callback=results.append)
+            req = GenRequest(request_id=f"r{i}",
+                             prompt=TOKENIZER.encode(p, bos=True),
+                             max_new_tokens=args.max_new_tokens,
+                             temperature=args.temperature)
+            requests[req.request_id] = req
+            proxy.submit(req, callback=results.append)
+    wdog = None
     if args.async_pump:
+        if args.watchdog:
+            from repro.obs import Watchdog, watch_engines
+
+            def recover(handle):
+                """Serving-side hung-engine recovery: hard-kill (the
+                lock-free SIGKILL analogue, honored as the wedged step
+                unwinds), wait for the replacement process, then resume
+                snapshot-covered requests and re-prefill the rest."""
+                eng = handle.engine
+                lost = proxy.requests_on(handle)
+                c0 = eng.crashes
+                eng.hard_kill()
+                deadline = time.monotonic() + 30
+                while eng.crashes == c0:
+                    if time.monotonic() > deadline:
+                        raise RuntimeError("hard-killed engine never "
+                                           "came back")
+                    time.sleep(0.005)
+                with snap_lock:
+                    snap = dict(snap_slots)
+                resumed = resubmitted = 0
+                for rid in lost:
+                    hf = snap.get(rid)
+                    if hf is not None:
+                        proxy.reinject(hf)   # callback still registered
+                        resumed += 1
+                    else:
+                        proxy.drop_routes([rid])
+                        proxy.submit(requests[rid],
+                                     callback=results.append)
+                        resubmitted += 1
+                print(f"watchdog: killed hung engine "
+                      f"{handle.name or handle.pool} — {len(lost)} "
+                      f"in-flight, {resumed} resumed from snapshot, "
+                      f"{resubmitted} re-prefilled")
+
+            wdog = Watchdog(deadline_s=args.watchdog_deadline,
+                            registry=reg)
+            watch_engines(wdog, proxy, recover=recover)
+            wdog.start()
         while len(results) < len(prompts):
             if pump_error:
                 raise RuntimeError("pump thread died") from pump_error[0]
             time.sleep(0.005)
         stop.set()
         pump_thread.join()
+        if wdog is not None:
+            wdog.close()
     else:
         while proxy.busy:
             proxy.pump()
@@ -257,6 +346,8 @@ def main(argv=None):
         if args.affinity:
             print(f"role_switches={stats['role_switches']} "
                   f"switch_migrations={stats['switch_migrations']}")
+    if mserver is not None:
+        mserver.close()
     proxy.release_bindings()
 
 

@@ -110,6 +110,19 @@ def main(argv=None):
                     help="resume from the latest intact train+rollout "
                          "checkpoint pair under --ckpt (trainer-failure "
                          "restart; corrupt pairs fall back to step N-1)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve Prometheus text metrics for the whole "
+                         "training stack at http://127.0.0.1:PORT/metrics "
+                         "(0 = ephemeral port; watch live with "
+                         "python -m repro.obs.dashboard --url ...)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="heartbeat watchdog (§8): detect silently hung "
+                         "engines / pump loop (beat silent past the "
+                         "deadline while work is queued) and recover them "
+                         "through the FT supervisor")
+    ap.add_argument("--watchdog-deadline", type=float, default=5.0,
+                    metavar="S", help="stall deadline in seconds")
     args = ap.parse_args(argv)
     if (args.ckpt_rollouts or args.restore) and not args.ckpt:
         ap.error("--ckpt-rollouts/--restore need --ckpt DIR")
@@ -191,8 +204,12 @@ def main(argv=None):
             print(f"restored paired checkpoint at step {start}")
         else:
             runner = build_runner(state)
-        use_ft = args.ckpt_rollouts or args.failure_rate > 0
+        # --watchdog needs an FT supervisor to recover through, even
+        # without checkpointing/injection configured
+        use_ft = (args.ckpt_rollouts or args.failure_rate > 0
+                  or args.watchdog)
         sup = None
+        mserver = wdog = reg = None
         with runner:
             if args.affinity:
                 for row in runner.placement_report():
@@ -204,16 +221,49 @@ def main(argv=None):
                              failure_rate=args.failure_rate,
                              keep_last=args.keep_last),
                     ckpt_dir=args.ckpt if args.ckpt_rollouts else None)
-                hist = sup.run_steps(args.steps)
-            else:
-                hist = runner.run_steps(args.steps)
+            if args.metrics_port is not None:
+                from repro.obs import (MetricsRegistry, MetricsServer,
+                                       instrument_runner)
+                reg = MetricsRegistry()
+                instrument_runner(reg, runner)
+                mserver = MetricsServer(reg,
+                                        port=args.metrics_port).start()
+                print(f"metrics: {mserver.url}")
+            if args.watchdog:
+                from repro.obs import (Watchdog, watch_engines,
+                                       watch_env_managers, watch_service)
+                wdog = Watchdog(deadline_s=args.watchdog_deadline,
+                                registry=reg)
+                watch_engines(wdog, runner.proxy,
+                              recover=sup.recover_hung_engine)
+                watch_service(wdog, runner.service)
+                watch_env_managers(wdog, runner,
+                                   recover=sup.recover_stalled_ems)
+                wdog.start()
+            try:
+                if sup is not None:
+                    hist = sup.run_steps(args.steps)
+                else:
+                    hist = runner.run_steps(args.steps)
+            finally:
+                if wdog is not None:
+                    wdog.close()
+                if mserver is not None:
+                    mserver.close()
             for h in hist:
-                print(f"step {h.step} loss {h.loss:.4f} "
-                      f"reward {h.reward_mean:.3f} wall {h.wall_s:.1f}s "
-                      f"ovl_decode_toks {h.decode_during_train}"
-                      + (f" role_switches {h.role_switches}"
+                d = h.to_dict()   # the stable export schema, verbatim
+                print(f"step {d['step']} loss {d['loss']:.4f} "
+                      f"reward {d['reward_mean']:.3f} "
+                      f"wall {d['wall_s']:.1f}s "
+                      f"(fetch {d['fetch_s']:.1f} "
+                      f"barrier {d['barrier_s']:.2f} "
+                      f"train {d['train_s']:.1f}) "
+                      f"stale {d['staleness']} "
+                      f"ovl_decode_toks {d['decode_during_train']}"
+                      + (f" role_switches {d['role_switches']}"
                          if args.affinity else "")
-                      + (f" deduped {h.deduped}" if h.deduped else ""))
+                      + (f" deduped {d['deduped']}" if d['deduped']
+                         else ""))
             if args.affinity:
                 for ev in runner.proxy.switch_log:
                     print(format_switch_event(ev))

@@ -1,0 +1,23 @@
+"""Observability plane: in-process Prometheus-style metrics, the
+``/metrics`` HTTP endpoint + terminal dashboard, the heartbeat watchdog
+that feeds silent-hang detection into FT recovery, and the collector
+wiring that maps every data-plane ``stats()`` surface into the registry.
+
+See the README's "Observability" section for the operator view.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricFamily,
+                               MetricsRegistry, REGISTRY)
+from repro.obs.server import CONTENT_TYPE, MetricsServer
+from repro.obs.watchdog import (Watchdog, watch_engines,
+                                watch_env_managers, watch_service)
+from repro.obs.instrument import (instrument_buffer, instrument_proxy,
+                                  instrument_runner, instrument_service,
+                                  instrument_serverless)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricFamily", "MetricsRegistry",
+    "REGISTRY", "CONTENT_TYPE", "MetricsServer", "Watchdog",
+    "watch_engines", "watch_env_managers", "watch_service",
+    "instrument_buffer", "instrument_proxy", "instrument_runner",
+    "instrument_service", "instrument_serverless",
+]

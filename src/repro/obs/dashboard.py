@@ -1,0 +1,157 @@
+"""Curses-free terminal dashboard over the ``/metrics`` endpoint.
+
+``python -m repro.obs.dashboard --url http://127.0.0.1:9100/metrics``
+scrapes the Prometheus text exposition (stdlib ``urllib`` only), parses
+it with the minimal grammar below, and redraws the terminal with plain
+ANSI escapes (clear + home) every ``--interval`` seconds; ``--once``
+prints a single frame and exits (usable in a pipe — the ANSI clear is
+suppressed when stdout is not a tty).
+
+Histogram families are condensed to count / mean / ~p50 / ~p99
+(percentiles estimated from bucket upper bounds, the same estimator
+``repro.obs.metrics.Histogram.percentile`` uses).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import urllib.request
+from typing import Dict, List, Tuple
+
+
+def parse_exposition(text: str) -> List[Tuple[str, str, float]]:
+    """Parse Prometheus text format into ``(name, labels, value)``
+    samples (labels kept as the raw ``{...}`` string, ``""`` when
+    absent). Comment/HELP/TYPE and blank lines are skipped; a malformed
+    line raises — the dashboard should be loud about a bad exporter."""
+    out = []
+    for line in text.splitlines():
+        if not line.strip() or line.startswith("#"):
+            continue
+        if "}" in line:
+            head, _, tail = line.partition("}")
+            name, _, labels = head.partition("{")
+            labels = "{" + labels + "}"
+            value = tail.strip().split()[0]
+        else:
+            name, value = line.split()[:2]
+            labels = ""
+        out.append((name, labels, float(value)))
+    return out
+
+
+def _labels_of(raw: str) -> Dict[str, str]:
+    """Label-string -> dict for the simple label values this repo emits
+    (no embedded commas/quotes in values; the golden-format test covers
+    the escaping path, the dashboard only needs the common case)."""
+    if not raw or raw == "{}":
+        return {}
+    out = {}
+    for part in raw[1:-1].split(","):
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        out[k] = v.strip('"')
+    return out
+
+
+def _histogram_rows(samples) -> Tuple[List[str], set]:
+    """Condense ``*_bucket``/``*_sum``/``*_count`` triples into one row
+    per (family, label set). Returns the rows plus the sample names
+    consumed (so the plain renderer skips them)."""
+    fams: Dict[Tuple[str, str], Dict] = {}
+    consumed = set()
+    for name, labels, value in samples:
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix):
+                base = name[: -len(suffix)]
+                lab = _labels_of(labels)
+                le = lab.pop("le", None)
+                key = (base, ",".join(f"{k}={v}"
+                                      for k, v in sorted(lab.items())))
+                f = fams.setdefault(key, {"buckets": [], "sum": 0.0,
+                                          "count": 0.0})
+                if suffix == "_bucket":
+                    f["buckets"].append((float(le), value))
+                elif suffix == "_sum":
+                    f["sum"] = value
+                else:
+                    f["count"] = value
+                consumed.add(name)
+                break
+    rows = []
+    for (base, lab), f in sorted(fams.items()):
+        n = f["count"]
+        mean = f["sum"] / n if n else 0.0
+        rows.append(f"  {base}{'{' + lab + '}' if lab else '':<40} "
+                    f"n={int(n):<8} mean={mean:.4f}s "
+                    f"p50={_pct(f['buckets'], n, 0.5):.4f}s "
+                    f"p99={_pct(f['buckets'], n, 0.99):.4f}s")
+    return rows, consumed
+
+
+def _pct(buckets: List[Tuple[float, float]], count: float,
+         q: float) -> float:
+    if not count:
+        return 0.0
+    rank = q * count
+    prev_bound = 0.0
+    for bound, cum in sorted(buckets):
+        if cum >= rank:
+            return bound if bound != float("inf") else prev_bound
+        prev_bound = bound
+    return prev_bound
+
+
+def render(text: str) -> str:
+    samples = parse_exposition(text)
+    hist_rows, consumed = _histogram_rows(samples)
+    groups: Dict[str, List[str]] = {}
+    for name, labels, value in samples:
+        if name in consumed:
+            continue
+        # group by subsystem: repro_engine_*, repro_proxy_*, ...
+        parts = name.split("_", 2)
+        group = "_".join(parts[:2]) if len(parts) > 2 else name
+        v = f"{int(value)}" if value == int(value) else f"{value:.4f}"
+        groups.setdefault(group, []).append(
+            f"  {name}{labels:<44} {v}")
+    lines = [time.strftime("== repro obs dashboard — %H:%M:%S =="), ""]
+    for group in sorted(groups):
+        lines.append(group)
+        lines.extend(sorted(groups[group]))
+        lines.append("")
+    if hist_rows:
+        lines.append("latency histograms")
+        lines.extend(hist_rows)
+    return "\n".join(lines)
+
+
+def scrape(url: str, timeout: float = 5.0) -> str:
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return resp.read().decode("utf-8")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--url", default="http://127.0.0.1:9100/metrics")
+    ap.add_argument("--interval", type=float, default=2.0)
+    ap.add_argument("--once", action="store_true",
+                    help="print one frame and exit")
+    args = ap.parse_args(argv)
+    clear = "\x1b[2J\x1b[H" if sys.stdout.isatty() else ""
+    while True:
+        try:
+            frame = render(scrape(args.url))
+        except OSError as e:
+            frame = f"scrape failed: {e} ({args.url})"
+        sys.stdout.write(clear + frame + "\n")
+        sys.stdout.flush()
+        if args.once:
+            return 0
+        time.sleep(args.interval)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,301 @@
+"""In-process metrics plane (paper §8–§9 operational story): a
+thread-safe ``Counter`` / ``Gauge`` / ``Histogram`` registry with label
+sets, rendered in Prometheus text exposition format (v0.0.4).
+
+Two feed paths, chosen per metric by cost:
+
+- **scrape-time collectors** — callables registered on the registry and
+  invoked at render time; they map the data plane's audited ``stats()``
+  snapshots onto gauges/counters, so the hot path pays nothing between
+  scrapes (see :mod:`repro.obs.instrument`);
+- **event-time observation** — latency histograms (TTFT, inter-token
+  gap, serverless invoke) are fed by cheap hooks at the moment the
+  event happens, since percentiles cannot be reconstructed from totals.
+
+Locking: every metric child owns a private leaf ``Lock`` around its
+value; families guard their children map; the registry guards the
+family/collector tables. Collectors run OUTSIDE the registry lock —
+they call into engine/proxy/service ``stats()`` which take data-plane
+locks, and holding the registry lock across those would couple the
+scrape path into the data plane's lock order.
+"""
+from __future__ import annotations
+
+import math
+import re
+import threading
+from typing import Callable, Dict, List, Sequence, Tuple
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+# latency-shaped default buckets (seconds): sub-ms dispatch overheads up
+# through multi-second step times
+DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                   0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+def _escape_help(s: str) -> str:
+    return s.replace("\\", r"\\").replace("\n", r"\n")
+
+
+def _escape_label(s: str) -> str:
+    return (s.replace("\\", r"\\").replace("\n", r"\n")
+            .replace('"', r'\"'))
+
+
+def _fmt(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    f = float(v)
+    if f.is_integer() and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def format_labels(names: Sequence[str], values: Sequence[str]) -> str:
+    if not names:
+        return ""
+    inner = ",".join(f'{n}="{_escape_label(str(v))}"'
+                     for n, v in zip(names, values))
+    return "{" + inner + "}"
+
+
+class Counter:
+    """Monotone total. ``set_total`` exists for scrape-time collectors
+    that mirror an absolute counter maintained by the data plane
+    (``engine.decode_tokens`` etc.); it clamps to monotone."""
+
+    kind = "counter"
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0.0          # guarded by: _lock
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError("counters only go up")
+        with self._lock:
+            self._value += amount
+
+    def set_total(self, value: float) -> None:
+        with self._lock:
+            if value > self._value:
+                self._value = float(value)
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def _render(self, name: str, labels: str, out: List[str]) -> None:
+        out.append(f"{name}{labels} {_fmt(self.value)}")
+
+
+class Gauge:
+    kind = "gauge"
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0.0          # guarded by: _lock
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        with self._lock:
+            self._value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        with self._lock:
+            self._value -= amount
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def _render(self, name: str, labels: str, out: List[str]) -> None:
+        out.append(f"{name}{labels} {_fmt(self.value)}")
+
+
+class Histogram:
+    """Fixed-bucket histogram; per-bucket counts are stored
+    non-cumulative and cumulated at render (exposition requires
+    monotone ``le`` buckets ending at ``+Inf``)."""
+
+    kind = "histogram"
+
+    def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS):
+        bounds = sorted(float(b) for b in buckets)
+        if not bounds:
+            raise ValueError("histogram needs at least one bucket")
+        if bounds[-1] != math.inf:
+            bounds.append(math.inf)
+        self.bounds: Tuple[float, ...] = tuple(bounds)
+        self._lock = threading.Lock()
+        self._counts = [0] * len(self.bounds)   # guarded by: _lock
+        self._sum = 0.0                         # guarded by: _lock
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        with self._lock:
+            for i, b in enumerate(self.bounds):
+                if v <= b:
+                    self._counts[i] += 1
+                    break
+            self._sum += v
+
+    def snapshot(self) -> Tuple[List[int], float, int]:
+        """(cumulative bucket counts, sum, total count)."""
+        with self._lock:
+            counts = list(self._counts)
+            total_sum = self._sum
+        cum, acc = [], 0
+        for c in counts:
+            acc += c
+            cum.append(acc)
+        return cum, total_sum, acc
+
+    def percentile(self, q: float) -> float:
+        """Bucket-upper-bound estimate of the q-th percentile (what a
+        PromQL ``histogram_quantile`` would see)."""
+        cum, _, total = self.snapshot()
+        if total == 0:
+            return 0.0
+        rank = q * total
+        for i, c in enumerate(cum):
+            if c >= rank:
+                b = self.bounds[i]
+                return b if b != math.inf else self.bounds[max(0, i - 1)]
+        return self.bounds[-2] if len(self.bounds) > 1 else 0.0
+
+    def _render(self, name: str, labels: str, out: List[str]) -> None:
+        cum, total_sum, count = self.snapshot()
+        # re-open the label set to append `le`
+        base = labels[1:-1] + "," if labels else ""
+        for b, c in zip(self.bounds, cum):
+            out.append(f'{name}_bucket{{{base}le="{_fmt(b)}"}} {c}')
+        out.append(f"{name}_sum{labels} {_fmt(total_sum)}")
+        out.append(f"{name}_count{labels} {count}")
+
+
+class MetricFamily:
+    """One named metric + its labelled children."""
+
+    def __init__(self, name: str, help_text: str, kind: str,
+                 labelnames: Sequence[str], factory: Callable):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid metric name {name!r}")
+        for ln in labelnames:
+            if not _LABEL_RE.match(ln):
+                raise ValueError(f"invalid label name {ln!r}")
+        self.name = name
+        self.help_text = help_text
+        self.kind = kind
+        self.labelnames = tuple(labelnames)
+        self._factory = factory
+        self._lock = threading.Lock()
+        self._children = {}        # guarded by: _lock
+
+    def labels(self, **kv) -> object:
+        if set(kv) != set(self.labelnames):
+            raise ValueError(
+                f"{self.name}: labels {sorted(kv)} != declared "
+                f"{sorted(self.labelnames)}")
+        key = tuple(str(kv[ln]) for ln in self.labelnames)
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                child = self._factory()
+                self._children[key] = child
+            return child
+
+    def child(self) -> object:
+        """The unlabelled child (only for label-free families)."""
+        if self.labelnames:
+            raise ValueError(f"{self.name} declares labels; use .labels()")
+        return self.labels()
+
+    def render_into(self, out: List[str]) -> None:
+        out.append(f"# HELP {self.name} {_escape_help(self.help_text)}")
+        out.append(f"# TYPE {self.name} {self.kind}")
+        with self._lock:
+            children = sorted(self._children.items())
+        for key, child in children:
+            child._render(self.name, format_labels(self.labelnames, key),
+                          out)
+
+
+class MetricsRegistry:
+    """Family table + scrape-time collectors. ``render()`` runs the
+    collectors first (outside the registry lock), then renders every
+    family in registration order."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._families = {}        # guarded by: _lock
+        self._collectors = []      # guarded by: _lock
+
+    def _get_or_create(self, name, help_text, kind, labelnames, factory):
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is not None:
+                if fam.kind != kind or fam.labelnames != tuple(labelnames):
+                    raise ValueError(
+                        f"metric {name!r} re-registered as {kind} "
+                        f"{tuple(labelnames)} (was {fam.kind} "
+                        f"{fam.labelnames})")
+                return fam
+            fam = MetricFamily(name, help_text, kind, labelnames, factory)
+            self._families[name] = fam
+            return fam
+
+    def counter(self, name: str, help_text: str,
+                labelnames: Sequence[str] = ()) -> MetricFamily:
+        return self._get_or_create(name, help_text, "counter",
+                                   labelnames, Counter)
+
+    def gauge(self, name: str, help_text: str,
+              labelnames: Sequence[str] = ()) -> MetricFamily:
+        return self._get_or_create(name, help_text, "gauge",
+                                   labelnames, Gauge)
+
+    def histogram(self, name: str, help_text: str,
+                  labelnames: Sequence[str] = (),
+                  buckets: Sequence[float] = DEFAULT_BUCKETS
+                  ) -> MetricFamily:
+        return self._get_or_create(name, help_text, "histogram",
+                                   labelnames,
+                                   lambda: Histogram(buckets))
+
+    def register_collector(self, fn: Callable[[], None]) -> None:
+        with self._lock:
+            self._collectors.append(fn)
+
+    def families(self) -> List[MetricFamily]:
+        with self._lock:
+            return list(self._families.values())
+
+    def collect(self) -> None:
+        """Run every registered collector (outside the registry lock:
+        collectors call data-plane ``stats()`` which take their own
+        locks)."""
+        with self._lock:
+            collectors = list(self._collectors)
+        for fn in collectors:
+            fn()
+
+    def render(self) -> str:
+        self.collect()
+        out: List[str] = []
+        for fam in self.families():
+            fam.render_into(out)
+        return "\n".join(out) + "\n"
+
+
+# the process-default registry the launchers and benchmarks share
+REGISTRY = MetricsRegistry()

@@ -1,0 +1,74 @@
+"""Dependency-free ``/metrics`` HTTP endpoint over a
+:class:`~repro.obs.metrics.MetricsRegistry` — stdlib
+``ThreadingHTTPServer`` only, Prometheus text exposition content type.
+
+Scrapes run collectors, which call data-plane ``stats()`` under the
+plane's own locks; a scrape therefore waits (bounded by one decode
+macro-step) for any in-flight dispatch, exactly like an external
+Prometheus scrape would.
+"""
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+class _Handler(BaseHTTPRequestHandler):
+    def do_GET(self):  # noqa: N802 (stdlib handler API)
+        if self.path.split("?")[0] not in ("/", "/metrics"):
+            self.send_error(404, "only /metrics is served")
+            return
+        try:
+            body = self.server.registry.render().encode("utf-8")
+        except Exception as e:               # surface scrape failures
+            self.send_error(500, f"scrape failed: {type(e).__name__}")
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", CONTENT_TYPE)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, fmt, *args):       # keep the launcher output clean
+        pass
+
+
+class MetricsServer:
+    """``MetricsServer(registry, port=0).start()`` — port 0 binds an
+    ephemeral port, readable from ``.port`` after ``start()``."""
+
+    def __init__(self, registry, port: int = 0, host: str = "127.0.0.1"):
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self._httpd.registry = registry
+        self._thread = None
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        host = self._httpd.server_address[0]
+        return f"http://{host}:{self.port}/metrics"
+
+    def start(self) -> "MetricsServer":
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="metrics-http",
+            daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self, timeout: float = 2.0) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,198 @@
+"""Heartbeat watchdog: live detection of *silently hung* components
+(paper §8 — the FT plane's PR 5 gap: only injected faults were
+recoverable, a wedged ``step()`` went unnoticed forever).
+
+Data-plane components publish **beats** — bare monotonically-advancing
+counters bumped OUTSIDE their locks (``engine.beats`` at the end of
+every ``step()``, ``service.beats`` after every tick). A beat that keeps
+advancing proves the component's thread is cycling; the watchdog never
+acquires a data-plane lock to read one (a wedged ``step()`` holds
+``_step_lock`` forever — any probe that touched it would hang the
+monitor too).
+
+A target stalls when its beat has not advanced within ``deadline_s``
+*while work is queued* (idle components re-arm). ``on_stall`` fires
+once per stall episode from the monitor thread, which holds no locks —
+so a handler may take service barriers, hard-kill engines, and drive
+``FTSupervisor`` recovery.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class WatchTarget:
+    def __init__(self, name: str, progress_fn: Callable[[], object],
+                 queued_fn: Callable[[], bool],
+                 on_stall: Optional[Callable[[], None]],
+                 deadline_s: float):
+        self.name = name
+        self.progress_fn = progress_fn
+        self.queued_fn = queued_fn
+        self.on_stall = on_stall
+        self.deadline_s = deadline_s
+        # poll-thread-only state (single poller by contract)
+        self.last_value: Optional[object] = None
+        self.last_beat_t: Optional[float] = None
+        self.stalled = False
+        self.stall_count = 0
+
+
+class Watchdog:
+    """``register()`` targets, ``start()`` the monitor thread (or drive
+    ``check_once()`` manually for deterministic tests)."""
+
+    def __init__(self, deadline_s: float = 2.0, poll_s: float = 0.05,
+                 registry=None, clock: Callable[[], float] = time.monotonic):
+        self.deadline_s = deadline_s
+        self.poll_s = poll_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._targets: Dict[str, WatchTarget] = {}  # guarded by: _lock
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._stalls_fam = None
+        self._age_fam = None
+        if registry is not None:
+            self._stalls_fam = registry.counter(
+                "repro_watchdog_stalls_total",
+                "stall episodes detected (beat silent past deadline "
+                "with work queued)", ("component",))
+            self._age_fam = registry.gauge(
+                "repro_watchdog_beat_age_seconds",
+                "seconds since the component's beat last advanced",
+                ("component",))
+
+    def register(self, name: str, progress_fn: Callable[[], object],
+                 queued_fn: Callable[[], bool],
+                 on_stall: Optional[Callable[[], None]] = None,
+                 deadline_s: Optional[float] = None) -> None:
+        t = WatchTarget(name, progress_fn, queued_fn, on_stall,
+                        self.deadline_s if deadline_s is None
+                        else deadline_s)
+        with self._lock:
+            self._targets[name] = t
+
+    def targets(self) -> List[str]:
+        with self._lock:
+            return sorted(self._targets)
+
+    def check_once(self, now: Optional[float] = None) -> List[str]:
+        """One poll pass; returns the names whose stall fired this
+        pass. Probes and handlers run with NO watchdog lock held."""
+        with self._lock:
+            targets = list(self._targets.values())
+        if now is None:
+            now = self._clock()
+        fired: List[WatchTarget] = []
+        for t in targets:
+            try:
+                v = t.progress_fn()
+            except Exception:
+                continue                     # plane mid-mutation: skip poll
+            if t.last_value is None or v != t.last_value:
+                t.last_value = v
+                t.last_beat_t = now
+                t.stalled = False
+                self._export_age(t, 0.0)
+                continue
+            self._export_age(t, now - (t.last_beat_t or now))
+            try:
+                queued = bool(t.queued_fn())
+            except Exception:
+                continue
+            if not queued:
+                t.last_beat_t = now          # idle: deadline re-arms
+                continue
+            if not t.stalled and now - t.last_beat_t >= t.deadline_s:
+                t.stalled = True
+                t.stall_count += 1
+                if self._stalls_fam is not None:
+                    self._stalls_fam.labels(component=t.name).inc()
+                fired.append(t)
+        for t in fired:
+            if t.on_stall is not None:
+                t.on_stall()
+        return [t.name for t in fired]
+
+    def _export_age(self, t: WatchTarget, age: float) -> None:
+        if self._age_fam is not None:
+            self._age_fam.labels(component=t.name).set(age)
+
+    def start(self) -> "Watchdog":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="obs-watchdog", daemon=True)
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            self.check_once()
+
+    def close(self, timeout: float = 2.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# wiring helpers — callbacks are passed in so this module stays
+# import-independent of the FT plane
+# ---------------------------------------------------------------------------
+def watch_engines(wd: Watchdog, proxy,
+                  recover: Optional[Callable] = None,
+                  deadline_s: Optional[float] = None) -> None:
+    """One target per engine handle: beat = ``engine.beats`` (bumped
+    outside all engine locks), queued = ``has_pending``. ``recover``
+    is called with the HANDLE on stall (e.g.
+    ``supervisor.recover_hung_engine``)."""
+    for i, h in enumerate(proxy.handles):
+        name = f"engine:{h.name or h.pool or i}"
+        on_stall = (None if recover is None
+                    else (lambda h=h: recover(h)))
+        wd.register(name,
+                    progress_fn=lambda e=h.engine: e.beats,
+                    queued_fn=lambda e=h.engine: e.has_pending,
+                    on_stall=on_stall, deadline_s=deadline_s)
+
+
+def watch_service(wd: Watchdog, svc,
+                  on_stall: Optional[Callable[[], None]] = None,
+                  deadline_s: Optional[float] = None) -> None:
+    """Pump-loop liveness: the service beat advances every tick (idle
+    ticks included), so silence while the loop should be running means
+    the pump thread is wedged or dead."""
+    wd.register("service:pump",
+                progress_fn=lambda: svc.beats,
+                queued_fn=svc.loop_expected_alive,
+                on_stall=on_stall, deadline_s=deadline_s)
+
+
+def watch_env_managers(wd: Watchdog, runner,
+                       recover: Optional[Callable[[], None]] = None,
+                       deadline_s: Optional[float] = None) -> None:
+    """Aggregate EnvManager progress: total generated tokens across the
+    runner's active managers. Stalls (GENERATING but no token growth)
+    indicate lost routes; ``recover`` should re-home them (e.g.
+    ``supervisor.recover_stalled_ems``). Probes read the live
+    collections racily and skip the poll on mutation races."""
+    def progress():
+        return sum(len(em.tokens) for em in list(runner.active))
+
+    def queued():
+        return any(em.state.name == "GENERATING"
+                   for em in list(runner.active))
+
+    wd.register("env-managers", progress_fn=progress, queued_fn=queued,
+                on_stall=recover, deadline_s=deadline_s)

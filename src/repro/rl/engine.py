@@ -137,6 +137,13 @@ class _Slot:
 ROLES = ("colocated", "prefill", "decode")
 
 
+class EngineKilledError(RuntimeError):
+    """Raised inside a step when :meth:`InferenceEngine.hard_kill` fired:
+    the step unwinds (releasing ``_step_lock``) and ``step()`` converts
+    the kill into a :meth:`crash` — the SIGKILL-plus-replacement-process
+    model the watchdog uses to un-wedge a silently hung engine."""
+
+
 def _slice_chunks(parts, dim: int, idx, shape) -> np.ndarray:
     """Assemble ``full[idx]`` from equal-size chunks of ``full`` along
     ``dim`` WITHOUT concatenating the full array: only the chunks
@@ -354,6 +361,18 @@ class InferenceEngine:
         self.handoffs_out = 0                      # guarded by: _step_lock
         self.handoffs_in = 0                       # guarded by: _step_lock
         self.crashes = 0                           # guarded by: _step_lock
+        # liveness beat for the observability watchdog: bumped at the END
+        # of every step() AFTER _step_lock is released — a bare lock-free
+        # counter (atomic under the GIL) so the watchdog can read it
+        # while a wedged step holds _step_lock forever. A beat that stops
+        # advancing while has_pending is True is the hang signal.
+        self.beats = 0
+        # hard-kill latch + test-only wedge hook (see hard_kill). Both
+        # bare: hard_kill must work from the watchdog thread while the
+        # step path is hung inside _step_lock.
+        self._kill_evt = threading.Event()
+        self._prestep_hook: Optional[Callable[["InferenceEngine"],
+                                              None]] = None
         # requests rejected at submit because prompt+budget can NEVER fit
         # max_len (bugfix: formerly conflated with "no free slot" and
         # queued forever). Guarded by _lock, not _step_lock: the
@@ -612,6 +631,18 @@ class InferenceEngine:
             else:
                 self._cache = store
             self.crashes += 1
+
+    def hard_kill(self):
+        """Kill switch for a silently hung engine (watchdog recovery
+        path). Sets a bare latch WITHOUT taking any lock — a wedged
+        ``step()`` holds ``_step_lock`` forever, so a lock-taking kill
+        would hang the killer too. The step path checks the latch at its
+        pre-step boundary and raises :class:`EngineKilledError`; if the
+        step is blocked inside a (test-hook) wedge, setting the event
+        also unblocks hooks that wait on it. ``step()`` converts the
+        unwind into :meth:`crash` — the same lost-process state the FT
+        plane already knows how to recover."""
+        self._kill_evt.set()
 
     def suspend(self):
         """Stop admitting new requests; in-flight slots are preserved.
@@ -1169,9 +1200,26 @@ class InferenceEngine:
         idle) — token-denominated so callers' activity/backlog signals are
         invariant to the dispatch batching. Serialized against
         ``update_params`` so a weight sync never races a decode step over
-        the same slots/cache."""
-        with self._step_lock:
-            return self._step_locked()
+        the same slots/cache.
+
+        A :meth:`hard_kill` mid-step unwinds here: ``EngineKilledError``
+        propagates out of the locked region (releasing ``_step_lock``),
+        and the handler models SIGKILL + replacement process — the latch
+        and any wedge hook die with the old process, :meth:`crash` wipes
+        slots/cache, and the pump loop continues on the reborn engine.
+        ``beats`` is the watchdog's liveness signal: bumped outside all
+        locks on every return path, so it only goes silent while a step
+        is genuinely stuck."""
+        try:
+            with self._step_lock:
+                out = self._step_locked()
+        except EngineKilledError:
+            self._kill_evt.clear()
+            self._prestep_hook = None
+            self.crash()
+            out = 0
+        self.beats += 1
+        return out
 
     def _gather_slot_arrays(self):   # requires: _step_lock
         """Per-slot device inputs for a decode dispatch. Inactive slots
@@ -1197,6 +1245,17 @@ class InferenceEngine:
     def _step_locked(self) -> int:   # requires: _step_lock
         # 1) command processing between engine steps (non-blocking)
         self._drain_commands()
+        # test-only wedge point (observability plane): placed AFTER the
+        # command drain so _lock is free while a hook blocks — queue_len
+        # and has_pending stay readable from other threads during a
+        # simulated hang. A real hang would wedge inside the decode
+        # dispatch below; the hook models it at a deterministic boundary.
+        hook = self._prestep_hook
+        if hook is not None:
+            hook(self)
+        if self._kill_evt.is_set():
+            raise EngineKilledError(f"engine hard-killed at step "
+                                    f"{self.steps}")
         # 2) one decode macro-step over active slots
         active = [i for i, s in enumerate(self._slots) if s.active]
         self.steps += 1

@@ -210,6 +210,10 @@ class RolloutService:
         self._run = threading.Event()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # liveness beat for the observability watchdog: bumped after
+        # every tick OUTSIDE the service lock (bare counter, atomic
+        # under the GIL) — readable while a wedged tick holds _lock
+        self.beats = 0
         # set by the service thread on crash; surfaced by clients
         # (Runner._await_batch) — written without _lock by design, like
         # the runner's old _rollout_error
@@ -401,7 +405,9 @@ class RolloutService:
         drain, post-tick policy (surplus cancellation). Returns an
         activity count (0 == idle)."""
         with self._lock:
-            return self._tick_locked()
+            n = self._tick_locked()
+        self.beats += 1
+        return n
 
     def _tick_locked(self) -> int:   # requires: _lock
         for t in self._tenants.values():
@@ -564,6 +570,7 @@ class RolloutService:
                     if not self._run.is_set():
                         continue
                     n = self._tick_locked()
+                self.beats += 1
                 if n == 0:
                     time.sleep(self.idle_sleep)   # idle: yield the GIL
         except BaseException as e:   # surfaced by clients via self.error
@@ -581,6 +588,15 @@ class RolloutService:
                 target=self._loop, name="rollout-service", daemon=True)
             self._thread.start()
         self._run.set()
+
+    def loop_expected_alive(self) -> bool:
+        """Watchdog probe (lock-free bare reads): True while the service
+        thread is supposed to be ticking — started, running, not closed,
+        and not already crashed loudly (``self.error`` is the loud
+        failure path; the watchdog exists for the SILENT one, where the
+        thread is wedged inside a tick and beats stop advancing)."""
+        return (self._thread is not None and self._run.is_set()
+                and not self._stop.is_set() and self.error is None)
 
     def pause(self):
         """Park the service thread; returns only once no tick is in
